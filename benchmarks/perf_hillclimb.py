@@ -1,0 +1,239 @@
+"""§Perf hillclimb driver: hypothesis -> change -> measure -> validate, for
+the three chosen cells (see EXPERIMENTS.md §Perf for the narrative log).
+
+Cells (chosen from the 40-cell baseline per the assignment):
+  A. granite-moe-1b-a400m / train_4k / single — WORST roofline fraction
+     (0.135), collective-bound (EP all-to-all of a tiny-d model).
+  B. qwen3-moe-235b-a22b / train_4k / single — most collective-bound
+     at-scale cell (EP all-to-all dominates a 235B MoE).
+  C. granite-34b / decode_32k / single — most representative of the paper's
+     technique (read-mostly serving through the coherent tier; memory-bound
+     weight sweep = the paper's "move fewer bytes" economics).
+
+Each iteration states the napkin-math hypothesis, applies the change to the
+analytic model (and, where the change is code, the REAL config/params), and
+reports before/after of the dominant term + the new roofline fraction.
+Verification of the int8 MoE wire and int8 serving weights against the
+actually-lowered HLO is in benchmarks/verify_perf.py (needs the 512-device
+dry-run env).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from typing import Dict, List
+
+sys.path.insert(0, "src")
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+class FsdpRemapMesh:
+    """The same 256 chips with the 'model' axis retired into FSDP
+    (launch.sharding mode='fsdp'): tp=1, fsdp=256."""
+    shape = {"data": 256, "model": 1}
+
+
+def _roof(cfg, cell, mesh=None, **variant):
+    from repro.roofline.analysis import analytic_roofline
+    return analytic_roofline(cfg, cell, mesh or FakeMesh(), **variant)
+
+
+def _fmt(r):
+    return (f"bneck={r['bottleneck']} frac={r['roofline_fraction']:.3f} "
+            f"tC={r['t_compute']:.3e} tM={r['t_memory']:.3e} "
+            f"tX={r['t_collective']:.3e}")
+
+
+def run_cell_a() -> List[Dict]:
+    """granite-moe train_4k: collective-bound, worst fraction."""
+    from repro.configs import SHAPE_BY_NAME, get_config
+    cell = SHAPE_BY_NAME["train_4k"]
+    cfg = get_config("granite-moe-1b-a400m")
+    log = []
+    base = _roof(cfg, cell)
+    log.append({"iter": 0, "cell": "A", "change": "baseline",
+                "hypothesis": "-", "result": _fmt(base), **base})
+
+    # iter 1: int8 dispatch/combine. Hypothesis: MoE wire bytes are
+    # (2fwd*2B + 2bwd*2B)=8B/elem; int8 fwd -> 6B/elem => tX x0.75; with
+    # tX dominant (0.40s of 0.40s bound), frac x ~1.33.
+    cfg1 = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, dispatch_int8=True))
+    r1 = _roof(cfg1, cell)
+    log.append({"iter": 1, "cell": "A",
+                "change": "moe.dispatch_int8=True (code: models/moe.py "
+                          "custom-vjp int8 wire)",
+                "hypothesis": "tX x0.75 (fwd crossings 2B->1B)",
+                "result": _fmt(r1), **r1})
+
+    # iter 2: capacity factor 1.25 -> 1.0 (dropless-style budget).
+    # Hypothesis: buffer elems x0.8 => tX x0.8 further.
+    cfg2 = dataclasses.replace(cfg1, moe=dataclasses.replace(
+        cfg1.moe, capacity_factor=1.0))
+    r2 = _roof(cfg2, cell)
+    log.append({"iter": 2, "cell": "A",
+                "change": "capacity_factor 1.25->1.0",
+                "hypothesis": "tX x0.8",
+                "result": _fmt(r2), **r2})
+
+    # iter 3: disable remat (1B-active model easily fits). Hypothesis:
+    # flops x3/4 => tC x0.75; tX unchanged; helps only if compute-bound.
+    cfg3 = dataclasses.replace(cfg2, remat=False)
+    r3 = _roof(cfg3, cell)
+    log.append({"iter": 3, "cell": "A",
+                "change": "remat off (fits: 1B params)",
+                "hypothesis": "tC x0.75, bound still collective -> "
+                              "frac gain only via useful-flops",
+                "result": _fmt(r3), **r3})
+
+    # iter 4 — the find AND the refutation of this cell.  Decomposing tX
+    # showed TP activation psums (2/layer over the 16-way model axis)
+    # dominate the MoE all-to-all at d_model=1024: TP is the wrong tool
+    # for a small model.  Hypothesis: retire TP — remap 'model' into
+    # FSDP/DP (launch/sharding mode='fsdp', same 256 chips): TP psums and
+    # EP a2a vanish, pay 3 FSDP weight passes ~ 3*2.7GB/50GBps ~ 0.16 s.
+    # ANALYTIC: confirmed (below).  HLO VERIFICATION (verify_perf.py):
+    # REFUTED for the jit capacity-dispatch — the global-cumsum scatter
+    # of the (E,C,d) buffer globalizes into ~119GB all-gathers + ~112GB
+    # all-reduces per instance (temp 137GiB/dev).  Realizing the win needs
+    # per-shard routing under shard_map (documented future work); the
+    # KEPT state for this cell is iter 3 (frac 0.135 -> 0.160).
+    r4 = _roof(cfg3, cell, mesh=FsdpRemapMesh())
+    log.append({"iter": 4, "cell": "A",
+                "change": "sharding remap TP->FSDP (mode='fsdp'): analytic "
+                          "win, REFUTED by compiled HLO for jit MoE "
+                          "dispatch — debug forward, don't revert",
+                "hypothesis": "tX 0.34->~0.16; verification caught the "
+                              "dispatch-locality flaw napkin math missed",
+                "result": "analytic: " + _fmt(r4) + "; HLO: refuted",
+                **r4})
+
+    # iter 5 — debug forward: the flaw is the jit dispatch's GLOBAL
+    # capacity cumsum.  Fix: shard-LOCAL dispatch (models/moe.py
+    # moe_block_local, shard_map over the DP axes; per-shard capacity).
+    # HLO verification (experiments/verify_moe_local.json): one MoE layer
+    # at train_4k scale drops from 88.2 GiB temp + 53 GB collectives (jit
+    # global dispatch, params replicated) to 0.52 GiB and ZERO collectives.
+    # With dispatch local, the iter-4 remap's analytic end-state stands:
+    log.append({"iter": 5, "cell": "A",
+                "change": "shard-local MoE dispatch (moe_block_local) + "
+                          "TP->FSDP remap",
+                "hypothesis": "kill the global scatter -> remap viable; "
+                              "frac -> analytic 0.33",
+                "result": ("HLO: 88.2GiB/53GB-coll -> 0.52GiB/0-coll per "
+                           "layer; end-state analytic: " + _fmt(r4)),
+                **r4})
+    return log
+
+
+def run_cell_b() -> List[Dict]:
+    """qwen3-moe train_4k: most collective-bound at scale."""
+    from repro.configs import SHAPE_BY_NAME, get_config
+    cell = SHAPE_BY_NAME["train_4k"]
+    cfg = get_config("qwen3-moe-235b-a22b")
+    log = []
+    base = _roof(cfg, cell)
+    log.append({"iter": 0, "cell": "B", "change": "baseline",
+                "hypothesis": "-", "result": _fmt(base), **base})
+
+    cfg1 = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, dispatch_int8=True))
+    r1 = _roof(cfg1, cell)
+    log.append({"iter": 1, "cell": "B", "change": "moe.dispatch_int8",
+                "hypothesis": "tX x0.75", "result": _fmt(r1), **r1})
+
+    cfg2 = dataclasses.replace(cfg1, moe=dataclasses.replace(
+        cfg1.moe, capacity_factor=1.0))
+    r2 = _roof(cfg2, cell)
+    log.append({"iter": 2, "cell": "B", "change": "capacity 1.25->1.0",
+                "hypothesis": "tX x0.8", "result": _fmt(r2), **r2})
+
+    # iter 3 (refutation experiment): move EP to the data axis instead of
+    # model. Hypothesis to test: per-device all-to-all bytes depend only on
+    # buf/chips * (n-1)/n — switching the axis does NOT reduce bytes.
+    r3 = dict(r2)
+    log.append({"iter": 3, "cell": "B",
+                "change": "EP over data axis instead of model (analysis)",
+                "hypothesis": "no change in tX (bytes = buf/chips*(n-1)/n "
+                              "either way) — REFUTED as a win; kept EP on "
+                              "model",
+                "result": _fmt(r2), **r3})
+
+    # iter 4 (napkin refutation): the cell-A remap does NOT transfer.
+    # FSDP-only for 235B params => 3 weight passes x 470GB over the wire
+    # per device-step ~ 28 s >> tX 5.4 s.  Big models need TP precisely so
+    # weights DON'T travel; analytic model confirms.
+    cfg4 = dataclasses.replace(cfg2, remat=True)
+    r4 = _roof(cfg4, cell, mesh=FsdpRemapMesh())
+    log.append({"iter": 4, "cell": "B",
+                "change": "sharding remap TP->FSDP (napkin only)",
+                "hypothesis": "REFUTED: FSDP gathers of 470GB weights "
+                              "-> tX ~28s; keep TP+EP for 235B",
+                "result": _fmt(r4), **r4})
+    return log
+
+
+def run_cell_c() -> List[Dict]:
+    """granite-34b decode_32k: the paper-representative serving cell."""
+    from repro.configs import SHAPE_BY_NAME, get_config
+    cell = SHAPE_BY_NAME["decode_32k"]
+    cfg = get_config("granite-34b")
+    log = []
+    base = _roof(cfg, cell)
+    log.append({"iter": 0, "cell": "C", "change": "baseline",
+                "hypothesis": "-", "result": _fmt(base), **base})
+
+    # iter 1: weight-only int8 (serve.quantize). Hypothesis: tM is
+    # dominated by the per-step weight sweep N*2B/tp (=4.25GB, 5.2ms of
+    # 8.2ms tM) => int8 halves it: tM ~ 5.6ms, frac x ~1.5.
+    r1 = _roof(cfg, cell, weight_bytes=1.0)
+    log.append({"iter": 1, "cell": "C",
+                "change": "weight-only int8 (code: serve/quantize.py, "
+                          "layers.mm dequant epilogue)",
+                "hypothesis": "weight sweep x0.5 -> tM x~0.65",
+                "result": _fmt(r1), **r1})
+
+    # iter 2: int8 KV cache too. Hypothesis: MQA KV is only
+    # 2*128*1*32k*128*2B/256chips = 8MB/dev — <1% of tM. Expect <5% gain
+    # (a deliberate small/refuted prediction).
+    r2 = _roof(cfg, cell, weight_bytes=1.0, kv_bytes_elem=1.0)
+    log.append({"iter": 2, "cell": "C", "change": "+int8 KV cache",
+                "hypothesis": "<5% (MQA KV tiny vs weights) — expect "
+                              "REFUTED as meaningful",
+                "result": _fmt(r2), **r2})
+
+    # iter 3 (napkin refutation): pure-TP over all 256 chips.
+    # weights/dev x1/16 BUT per-layer psum over 256 devices:
+    # 88 layers * 2 psums * 2*(255/256)*128*6144*2B = 0.55GB -> tX 11ms
+    # > baseline tM 8.2ms. REFUTED before implementing.
+    r3 = dict(r1)
+    log.append({"iter": 3, "cell": "C",
+                "change": "pure TP-256 resharding (napkin only)",
+                "hypothesis": "tM x1/16 but tX -> 11ms > old bound: "
+                              "REFUTED, not implemented",
+                "result": "rejected by napkin math", **r3})
+    return log
+
+
+def main() -> None:
+    out = []
+    for fn in (run_cell_a, run_cell_b, run_cell_c):
+        out.extend(fn())
+    with open("experiments/perf_hillclimb.json", "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    cur = None
+    for rec in out:
+        if rec["cell"] != cur:
+            cur = rec["cell"]
+            print(f"\n=== cell {cur} ===")
+        print(f"[{rec['iter']}] {rec['change']}")
+        print(f"    hypothesis: {rec['hypothesis']}")
+        print(f"    {rec['result']}")
+
+
+if __name__ == "__main__":
+    main()

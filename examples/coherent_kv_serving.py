@@ -1,0 +1,60 @@
+"""Serving with the ECI coherent prefix tier (paper Fig. 8 at the serving
+layer): repeated prompts skip prefill entirely — decode states are served
+from the consumer-side coherent cache, with write-invalidate when the
+published state changes.
+
+    PYTHONPATH=src python examples/coherent_kv_serving.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import CoherentPrefixTier, ServeEngine
+from repro.serve.quantize import quantize_params
+
+cfg = get_config("smollm-360m", smoke=True)
+params = init_params(jax.random.key(0), cfg)
+engine = ServeEngine(cfg, params, max_seq=64)
+tier = CoherentPrefixTier()
+
+prompts = jax.random.randint(jax.random.key(7), (2, 12), 0, cfg.vocab)
+prefix = tuple(int(t) for t in prompts.reshape(-1))
+
+print("request 1 (cold): prefill 12 tokens + decode 8")
+t0 = time.monotonic()
+state, idx, lg = engine.prefill(prompts)
+tier.publish(prefix, (state, idx, lg))
+out1, _ = engine.decode(state, lg.argmax(-1).astype(jnp.int32), idx, 8)
+t_cold = time.monotonic() - t0
+
+print("request 2 (hot): prefill state from the coherent tier")
+t0 = time.monotonic()
+state2, idx2, lg2 = tier.lookup(prefix)
+state2 = jax.tree_util.tree_map(jnp.copy, state2)
+out2, _ = engine.decode(state2, lg2.argmax(-1).astype(jnp.int32), idx2, 8)
+t_hot = time.monotonic() - t0
+
+assert (out1 == out2).all(), "coherent-tier decode must be identical"
+print(f"  identical outputs: True; cold {t_cold*1e3:.0f} ms -> hot "
+      f"{t_hot*1e3:.0f} ms ({t_cold/max(t_hot,1e-9):.1f}x)")
+print(f"  tier protocol traffic: {tier.store.interconnect_messages}")
+
+print("publisher updates the prefix -> consumer cache invalidated:")
+tier.publish(prefix, (state, idx, lg))
+_ = tier.lookup(prefix)
+print(f"  after republish: {tier.store.interconnect_messages}")
+
+print("\nbeyond-paper: int8 weight-only serving (same outputs check)")
+qparams = quantize_params(params, min_size=64)
+qengine = ServeEngine(cfg, qparams, max_seq=64)
+qs, qi, qlg = qengine.prefill(prompts)
+outq, _ = qengine.decode(qs, qlg.argmax(-1).astype(jnp.int32), qi, 8)
+agree = float((outq == out1).mean())
+print(f"  int8 vs bf16 token agreement: {agree:.2f} "
+      f"(weight sweep halved for the memory-bound decode)")

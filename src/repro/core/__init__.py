@@ -1,0 +1,18 @@
+"""ECI/ACCI core: the paper's customizable cache-coherency stack in JAX.
+
+Layers (paper §3-4): states & lattice (``states``), signalled transitions
+(``messages``), the protocol envelope as dense tables (``protocol``), the
+vectorized home directory (``directory``) and remote agent (``agent``), the
+virtual-channel transport (``transport``), the wired two-node engine
+(``engine``), protocol subsetting (``specialize``), the application-facing
+store (``coherent_store``), distributed operator pushdown (``pushdown``)
+and the trace/NFA toolkit (``tracing``).
+"""
+
+from .coherent_store import CoherentStore  # noqa: F401
+from .engine import Engine  # noqa: F401
+from .messages import MsgType  # noqa: F401
+from .protocol import FULL, MINIMAL, LocalOp, verify_envelope  # noqa: F401
+from .specialize import (ENHANCED_MESI, FULL_MOESI, READ_ONLY,  # noqa: F401
+                         STATELESS, SUBSETS, subset_metrics)
+from .states import HomeState, RemoteState  # noqa: F401

@@ -1,0 +1,188 @@
+"""CoherentStore: the application-facing API over the ECI stack.
+
+The paper's use case (§5): the FPGA acts as a *smart memory controller* —
+the home for a region of memory — and the CPU reads through its ordinary
+cache hierarchy; results of expensive operators land in the consumer's cache
+and are transparently reused (Fig. 8).
+
+``CoherentStore`` reproduces that structure in JAX:
+
+* a **backing region** of ``n_blocks x block`` elements whose home is the
+  store (the owning shard in the distributed setting);
+* a **consumer agent** with a real cache (the remote side of the engine) —
+  repeated ``read``s of a block hit locally without any interconnect
+  traffic, writes upgrade to exclusive and are written back on eviction or
+  on home-side access;
+* an optional **operator** attached to the home (the NMP pushdown): reads of
+  a *virtual* block trigger the operator at the home and return its result —
+  data is generated "at great cost" once and then cached by the consumer.
+
+The store can run any protocol subset from ``core.specialize``; read-mostly
+applications use ``STATELESS`` and the home then keeps no per-line state —
+the paper's §3.4 optimization, verified against FULL by the test-suite.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Engine, EngineState
+from .protocol import LocalOp
+from .specialize import FULL_MOESI, ProtocolSubset
+
+
+class CoherentStore:
+    """Block store with a coherent consumer-side cache (single-controller).
+
+    This is the *semantic* model used by tests, benchmarks and the serving
+    example; the multi-device data path is ``core.pushdown`` (shard_map), and
+    the serving KV tier composes both.
+    """
+
+    def __init__(self, backing: jnp.ndarray,
+                 subset: ProtocolSubset = FULL_MOESI,
+                 operator: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+                 max_rounds: int = 64):
+        assert backing.ndim == 2, "backing must be [n_blocks, block]"
+        self.subset = subset
+        self.engine = Engine(backing, moesi=subset.tables.moesi,
+                             stateless=subset.stateless_home)
+        self.state: EngineState = self.engine.init()
+        self.n_blocks, self.block = backing.shape
+        self.operator = operator
+        self.max_rounds = max_rounds
+        #: interconnect accounting for the paper-figure benchmarks
+        self.ops_issued = 0
+
+    # -- internal ----------------------------------------------------------
+
+    def _run_ops(self, op_vec, val=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Submit a per-line op vector; run until every op retires."""
+        L, B = self.n_blocks, self.block
+        opv = jnp.asarray(op_vec, jnp.int8)
+        if not self.subset.check_workload(np.asarray(opv)):
+            raise ValueError(
+                f"op program outside subset '{self.subset.name}' guarantee")
+        vv = val if val is not None else jnp.zeros(
+            (L, B), self.state.dir.backing.dtype)
+        done = jnp.zeros((L,), bool)
+        vals = jnp.zeros((L, B), self.state.dir.backing.dtype)
+        st = self.state
+        for _ in range(self.max_rounds):
+            st, out = self.engine.step(st, op=opv, op_val=vv)
+            opv = jnp.where(out.accepted, 0, opv).astype(jnp.int8)
+            vals = jnp.where(out.load_done[:, None], out.load_val, vals)
+            done = done | out.load_done
+            if not bool(opv.any()) and self.engine.quiescent(st):
+                break
+        self.state = st
+        return done, vals
+
+    # -- public API --------------------------------------------------------
+
+    def read(self, block_ids) -> jnp.ndarray:
+        """Coherent read of blocks; hits the consumer cache when possible.
+
+        If an operator is attached, a read of block ``i`` that MISSES in the
+        consumer cache computes ``operator(backing[i])`` at the home — the
+        smart-memory-controller path (operators run where the data lives,
+        results are delivered into the consumer's cache).
+        """
+        block_ids = np.atleast_1d(np.asarray(block_ids))
+        if self.operator is not None:
+            self._materialize(block_ids)
+        op = jnp.zeros((self.n_blocks,), jnp.int8)
+        op = op.at[jnp.asarray(block_ids)].set(int(LocalOp.LOAD))
+        self.ops_issued += len(block_ids)
+        done, vals = self._run_ops(op)
+        return vals[jnp.asarray(block_ids)]
+
+    def write(self, block_ids, values: jnp.ndarray) -> None:
+        """Coherent write (write-invalidate upgrade at the consumer)."""
+        block_ids = np.atleast_1d(np.asarray(block_ids))
+        op = jnp.zeros((self.n_blocks,), jnp.int8)
+        op = op.at[jnp.asarray(block_ids)].set(int(LocalOp.STORE))
+        vv = jnp.zeros((self.n_blocks, self.block),
+                       self.state.dir.backing.dtype)
+        vv = vv.at[jnp.asarray(block_ids)].set(values)
+        self.ops_issued += len(block_ids)
+        self._run_ops(op, vv)
+
+    def evict(self, block_ids) -> None:
+        block_ids = np.atleast_1d(np.asarray(block_ids))
+        op = jnp.zeros((self.n_blocks,), jnp.int8)
+        op = op.at[jnp.asarray(block_ids)].set(int(LocalOp.EVICT))
+        self._run_ops(op)
+
+    def home_read(self, block_ids) -> jnp.ndarray:
+        """Home-side read (forces writeback/demote of dirty consumer lines)."""
+        block_ids = np.atleast_1d(np.asarray(block_ids))
+        want = jnp.zeros((self.n_blocks,), bool)
+        want = want.at[jnp.asarray(block_ids)].set(True)
+        vals = jnp.zeros((self.n_blocks, self.block),
+                         self.state.dir.backing.dtype)
+        st = self.state
+        for _ in range(self.max_rounds):
+            st, out = self.engine.step(st, want_read=want)
+            want = jnp.zeros((self.n_blocks,), bool)
+            vals = jnp.where(out.hread_done[:, None], out.hread_val, vals)
+            if self.engine.quiescent(st):
+                break
+        self.state = st
+        return vals[jnp.asarray(block_ids)]
+
+    def home_write(self, block_ids, values: jnp.ndarray) -> None:
+        """Home-side write (invalidates consumer copies first)."""
+        block_ids = np.atleast_1d(np.asarray(block_ids))
+        want = jnp.zeros((self.n_blocks,), bool)
+        want = want.at[jnp.asarray(block_ids)].set(True)
+        vv = jnp.zeros((self.n_blocks, self.block),
+                       self.state.dir.backing.dtype)
+        vv = vv.at[jnp.asarray(block_ids)].set(values)
+        st = self.state
+        for _ in range(self.max_rounds):
+            st, _ = self.engine.step(st, want_write=want, wval=vv)
+            want = jnp.zeros((self.n_blocks,), bool)
+            if self.engine.quiescent(st):
+                break
+        self.state = st
+
+    def _materialize(self, block_ids: np.ndarray) -> None:
+        """Run the attached operator at the home for blocks the consumer
+        does not already cache (results then flow through the protocol)."""
+        from .states import RemoteState
+        cached = np.asarray(self.state.agent.remote_state) != int(RemoteState.I)
+        todo = [int(b) for b in block_ids if not cached[b]]
+        if not todo:
+            return
+        idx = jnp.asarray(todo)
+        src = self.state.dir.backing[idx]
+        out = self.operator(src)
+        # the operator's result replaces the served line, written at the home
+        # (invisible to the consumer protocol-wise — it is just "the data").
+        dstate = self.state.dir
+        self.state = self.state._replace(
+            dir=dstate._replace(backing=dstate.backing.at[idx].set(out)))
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def hits(self) -> int:
+        return int(self.state.agent.hits)
+
+    @property
+    def misses(self) -> int:
+        return int(self.state.agent.misses)
+
+    @property
+    def interconnect_messages(self) -> Dict[str, int]:
+        from .messages import MsgType
+        mc = np.asarray(self.state.msg_count)
+        return {MsgType(i).name: int(mc[i]) for i in range(16) if mc[i]}
+
+    @property
+    def payload_bytes(self) -> int:
+        itemsize = np.dtype(self.state.dir.backing.dtype).itemsize
+        return int(self.state.payload_msgs) * self.block * itemsize

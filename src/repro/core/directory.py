@@ -1,0 +1,176 @@
+"""Home-node directory: vectorized, table-driven, ``jit``-able (paper §4.2).
+
+The reference ECI directory controller's "entire state machine, including
+intermediate states to handle race conditions, is generated automatically
+from a formal specification".  We do the same: the stable-state machine is
+the dense table from ``core.protocol`` (built from the declarative rows) and
+the executor below applies it to *all lines at once* with gathers — no
+per-line control flow.
+
+The directory also supports the STATELESS specialization of §3.4: with
+``stateless=True`` it never mutates per-line state (the read-only
+CPU-initiator case where the home "need track no state at all") — reads are
+served from the backing store, voluntary downgrades are silently ignored,
+and ``tests/test_specialize.py`` proves interop with a full remote agent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from .messages import MsgType
+from .protocol import DenseTables
+from .states import HomeState, RemoteView
+
+
+class DirectoryState(NamedTuple):
+    home_state: jnp.ndarray   # [L] int8 HomeState
+    view: jnp.ndarray         # [L] int8 RemoteView (home's belief)
+    backing: jnp.ndarray      # [L, B] the at-rest data (DRAM analogue)
+    home_buf: jnp.ndarray     # [L, B] home's cached copy (valid when != I)
+    illegal: jnp.ndarray      # [] int32: count of illegal transitions seen
+
+
+def make_directory(backing: jnp.ndarray) -> DirectoryState:
+    n_lines = backing.shape[0]
+    return DirectoryState(
+        home_state=jnp.zeros((n_lines,), jnp.int8),
+        view=jnp.zeros((n_lines,), jnp.int8),
+        backing=backing,
+        home_buf=jnp.zeros_like(backing),
+        illegal=jnp.zeros((), jnp.int32),
+    )
+
+
+def _jt(table, *idx):
+    """Gather from a baked numpy table with jnp indices."""
+    return jnp.asarray(table)[idx]
+
+
+def process(tables: DenseTables, st: DirectoryState, active: jnp.ndarray,
+            msg: jnp.ndarray, dirty: jnp.ndarray, payload: jnp.ndarray,
+            stateless: bool = False,
+            ) -> Tuple[DirectoryState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Apply one incoming message per active line to the directory.
+
+    Args:
+      tables: baked protocol tables (MINIMAL or FULL).
+      st: directory state.
+      active: [L] bool — lines with a message to process this step.
+      msg: [L] int8 MsgType (requests or responses-to-home-downgrades; for
+        the latter pass the ORIGINAL home request type with the response's
+        dirty flag, as the transaction layer matches them by txn id).
+      dirty: [L] bool — incoming payload is dirty data.
+      payload: [L, B] — incoming line data (valid when dirty or msg carries).
+      stateless: run the §3.4 stateless-home subset: serve reads from the
+        backing store and never mutate directory state.
+
+    Returns:
+      (new_state, resp_msg [L] int8, resp_dirty [L] bool, resp_payload [L,B]).
+      ``resp_msg == NOP`` where no response is due.
+    """
+    nop = jnp.int8(int(MsgType.NOP))
+    m = msg.astype(jnp.int32)
+    hs = st.home_state.astype(jnp.int32)
+    vw = st.view.astype(jnp.int32)
+
+    if stateless:
+        # §3.4: single joint state I*; answer READ_SHARED from backing,
+        # ignore voluntary downgrades, nothing else may arrive (req. 5).
+        is_read = active & (m == int(MsgType.REQ_READ_SHARED))
+        is_vol = active & ((m == int(MsgType.VOL_DOWNGRADE_I))
+                           | (m == int(MsgType.VOL_DOWNGRADE_S)))
+        resp = jnp.where(is_read, jnp.int8(int(MsgType.RESP_DATA)), nop)
+        bad = active & ~is_read & ~is_vol
+        st = st._replace(illegal=st.illegal + bad.sum().astype(jnp.int32))
+        return st, resp, jnp.zeros_like(dirty), st.backing
+
+    new_home = _jt(tables.home_new_home, m, hs, vw).astype(jnp.int32)
+    new_view = _jt(tables.home_new_view, m, hs, vw)
+    resp = _jt(tables.home_resp, m, hs, vw)
+    resp_dirty = _jt(tables.home_resp_dirty, m, hs, vw)
+    writeback = _jt(tables.home_writeback, m, hs, vw)
+    legal = _jt(tables.home_legal, m, hs, vw)
+
+    # clean-case substitution: a downgrade that arrives WITHOUT dirty data
+    # cannot leave the home holding dirty state (source-indexed override).
+    clean_home = _jt(tables.home_clean_case, m, hs, vw).astype(jnp.int32)
+    new_home = jnp.where(dirty, new_home, clean_home)
+    # a clean downgrade also has nothing to write back.
+    writeback = writeback & dirty
+
+    do = active & legal
+    upd = lambda old, new: jnp.where(do, new, old)
+
+    # data movement --------------------------------------------------------
+    # 1. absorb a dirty payload into home_buf when entering M or O.
+    absorbs = do & dirty & ((new_home == int(HomeState.M))
+                            | (new_home == int(HomeState.O)))
+    # 2. home takes a shared copy on downgrade-to-shared responses.
+    takes_copy = do & ((new_home == int(HomeState.S))
+                       & (hs == int(HomeState.I)))
+    home_buf = jnp.where((absorbs | (takes_copy & dirty))[:, None],
+                         payload, st.home_buf)
+    home_buf = jnp.where((takes_copy & ~dirty)[:, None], st.backing, home_buf)
+    # 3. writeback dirty payloads to the backing store.
+    backing = jnp.where((do & writeback & dirty)[:, None], payload,
+                        st.backing)
+    # 3b. invisible writeback of the home's own dirty copy when it must give
+    #     up ownership cleanly (e.g. UPGRADE over hidden-O: wb flag set but
+    #     the incoming message has no payload — write home_buf back).
+    own_wb = do & _jt(tables.home_writeback, m, hs, vw) & ~dirty & (
+        (hs == int(HomeState.M)) | (hs == int(HomeState.O)))
+    backing = jnp.where(own_wb[:, None], st.home_buf, backing)
+
+    # response payload: the home serves its own copy if it has one (and the
+    # choice is invisible to the remote — requirement 4), else backing.
+    home_has = (hs != int(HomeState.I))
+    resp_payload = jnp.where(home_has[:, None], st.home_buf, backing)
+
+    new = DirectoryState(
+        home_state=upd(st.home_state, new_home.astype(jnp.int8)),
+        view=upd(st.view, new_view.astype(jnp.int8)),
+        backing=backing,
+        home_buf=home_buf,
+        illegal=st.illegal + (active & ~legal).sum().astype(jnp.int32),
+    )
+    resp = jnp.where(do, resp, nop)
+    resp_dirty = jnp.where(do, resp_dirty, False)
+    return new, resp.astype(jnp.int8), resp_dirty, resp_payload
+
+
+def needed_downgrade(st: DirectoryState, want_read: jnp.ndarray,
+                     want_write: jnp.ndarray) -> jnp.ndarray:
+    """Which home-initiated request (if any) each home-side access needs.
+
+    Home reads require the remote not to hold a dirty copy (view != EM ->
+    no message); home writes require remote I.  Returns [L] int8 MsgType.
+    """
+    vw = st.view.astype(jnp.int32)
+    need_s = want_read & (vw == int(RemoteView.EM))
+    need_i = want_write & (vw != int(RemoteView.I))
+    out = jnp.where(need_i, jnp.int8(int(MsgType.HOME_DOWNGRADE_I)),
+                    jnp.int8(int(MsgType.NOP)))
+    out = jnp.where(need_s & ~need_i,
+                    jnp.int8(int(MsgType.HOME_DOWNGRADE_S)), out)
+    return out
+
+
+def home_read_value(st: DirectoryState) -> jnp.ndarray:
+    """[L, B] — the value the home side reads (own copy if cached)."""
+    has = (st.home_state != int(HomeState.I))
+    return jnp.where(has[:, None], st.home_buf, st.backing)
+
+
+def home_apply_write(st: DirectoryState, mask: jnp.ndarray,
+                     value: jnp.ndarray) -> DirectoryState:
+    """Apply home-side writes for ``mask`` lines (after remote is I)."""
+    has = (st.home_state != int(HomeState.I))
+    wb = mask & has
+    direct = mask & ~has
+    return st._replace(
+        home_buf=jnp.where(wb[:, None], value, st.home_buf),
+        home_state=jnp.where(wb, jnp.int8(int(HomeState.M)), st.home_state),
+        backing=jnp.where(direct[:, None], value, st.backing),
+    )

@@ -1,0 +1,144 @@
+"""ECI signalled transitions as messages (paper Table 1) + EWF-style packing.
+
+The paper serializes decoded coherence traffic in "ECI Wire Format" (EWF).  We
+define a compact 64-bit packed record with the same role: a canonical binary
+form for traces, the transport layer, and the Wireshark-style decoder in
+``core.tracing``.
+
+Layout (little-endian bit offsets within a uint64):
+
+    [ 0: 4)  msg type            (MsgType, 4 bits)
+    [ 4: 8)  virtual channel id  (4 bits)
+    [ 8: 9)  has_payload flag
+    [ 9:10)  dirty flag          (payload carries dirty data)
+    [10:12)  requester node id   (2 bits — up to 4-node NUMA per paper §4.1)
+    [12:44)  line / block id     (32 bits)
+    [44:64)  transaction id      (20 bits, for matching responses to requests)
+
+Payloads (the cache-line data itself) travel out of band in a parallel data
+array — exactly as the real link separates header and data flits.
+"""
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class MsgType(enum.IntEnum):
+    """All signalled transitions of Table 1 (plus responses and NOP)."""
+
+    NOP = 0
+    # -- remote-initiated upgrades (request, no payload; response w/ payload) --
+    REQ_READ_SHARED = 1     # transition 1: *I -> *S
+    REQ_READ_EXCL = 2       # transition 2: *I -> IE
+    REQ_UPGRADE = 3         # transition 3: *S -> IE (no payload either way)
+    # -- remote-initiated (voluntary) downgrades: payload iff dirty, no reply --
+    VOL_DOWNGRADE_S = 4     # transition 7 (M/E -> S)
+    VOL_DOWNGRADE_I = 5     # transitions 4,5,6 (M/E/S -> I)
+    # -- home-initiated downgrades: no payload; reply mandatory --
+    HOME_DOWNGRADE_S = 6    # transition 9: remote must drop to S
+    HOME_DOWNGRADE_I = 7    # transition 8: remote must drop to I
+    # -- responses --
+    RESP_DATA = 8           # carries a clean line
+    RESP_DATA_DIRTY = 9     # carries a dirty line (writeback / forward)
+    RESP_ACK = 10           # no payload (e.g. upgrade grant, clean invalidate)
+    RESP_NACK = 11          # retry (races; kept rare by VC ordering)
+    # -- non-coherent traffic multiplexed on the same link (paper §4.1) --
+    IO_READ = 12
+    IO_WRITE = 13
+    BARRIER = 14
+    IPI = 15
+
+
+#: Which message types are requests that OPEN a transaction.
+REQUEST_TYPES = frozenset({
+    MsgType.REQ_READ_SHARED, MsgType.REQ_READ_EXCL, MsgType.REQ_UPGRADE,
+    MsgType.HOME_DOWNGRADE_S, MsgType.HOME_DOWNGRADE_I,
+})
+
+#: Requests that REQUIRE a response (Table 1).  Voluntary downgrades do not.
+NEEDS_RESPONSE = frozenset({
+    MsgType.REQ_READ_SHARED, MsgType.REQ_READ_EXCL, MsgType.REQ_UPGRADE,
+    MsgType.HOME_DOWNGRADE_S, MsgType.HOME_DOWNGRADE_I,
+})
+
+#: Requests whose RESPONSE carries a payload (Table 1).  For home-initiated
+#: downgrades the payload is conditional ("Yes if dirty").
+RESPONSE_HAS_PAYLOAD = {
+    MsgType.REQ_READ_SHARED: True,
+    MsgType.REQ_READ_EXCL: True,
+    MsgType.REQ_UPGRADE: False,
+    MsgType.HOME_DOWNGRADE_S: None,   # iff dirty
+    MsgType.HOME_DOWNGRADE_I: None,   # iff dirty
+}
+
+
+class Message(NamedTuple):
+    """Unpacked message record (python-side view)."""
+
+    msg_type: int
+    vc: int
+    has_payload: bool
+    dirty: bool
+    node: int
+    line: int
+    txn: int
+
+
+_TYPE_SHIFT, _TYPE_BITS = 0, 4
+_VC_SHIFT, _VC_BITS = 4, 4
+_PAYLOAD_SHIFT = 8
+_DIRTY_SHIFT = 9
+_NODE_SHIFT, _NODE_BITS = 10, 2
+_LINE_SHIFT, _LINE_BITS = 12, 32
+_TXN_SHIFT, _TXN_BITS = 44, 20
+
+
+def pack(msg_type, vc, has_payload, dirty, node, line, txn):
+    """Pack message fields into uint64 words.  Works on scalars or arrays,
+    numpy or jax (EWF canonical binary form)."""
+    xp = jnp if any(isinstance(a, jnp.ndarray) for a in
+                    (msg_type, vc, line, txn)) else np
+    w = xp.asarray(msg_type, dtype=xp.uint64) << _TYPE_SHIFT
+    w = w | (xp.asarray(vc, dtype=xp.uint64) << _VC_SHIFT)
+    w = w | (xp.asarray(has_payload, dtype=xp.uint64) << _PAYLOAD_SHIFT)
+    w = w | (xp.asarray(dirty, dtype=xp.uint64) << _DIRTY_SHIFT)
+    w = w | (xp.asarray(node, dtype=xp.uint64) << _NODE_SHIFT)
+    w = w | (xp.asarray(line, dtype=xp.uint64) << _LINE_SHIFT)
+    w = w | (xp.asarray(txn, dtype=xp.uint64) << _TXN_SHIFT)
+    return w
+
+
+def unpack(word) -> Message:
+    """Unpack uint64 word(s) into a Message of field arrays/scalars."""
+    xp = jnp if isinstance(word, jnp.ndarray) else np
+    w = xp.asarray(word, dtype=xp.uint64)
+
+    def _field(shift, bits):
+        return ((w >> xp.uint64(shift)) & xp.uint64((1 << bits) - 1))
+
+    return Message(
+        msg_type=_field(_TYPE_SHIFT, _TYPE_BITS).astype(xp.int32),
+        vc=_field(_VC_SHIFT, _VC_BITS).astype(xp.int32),
+        has_payload=_field(_PAYLOAD_SHIFT, 1).astype(bool),
+        dirty=_field(_DIRTY_SHIFT, 1).astype(bool),
+        node=_field(_NODE_SHIFT, _NODE_BITS).astype(xp.int32),
+        line=_field(_LINE_SHIFT, _LINE_BITS).astype(xp.int64),
+        txn=_field(_TXN_SHIFT, _TXN_BITS).astype(xp.int32),
+    )
+
+
+def to_json(msg: Message) -> dict:
+    """JSON-serializable form (the paper's JSON trace format analogue)."""
+    return {
+        "type": MsgType(int(msg.msg_type)).name,
+        "vc": int(msg.vc),
+        "has_payload": bool(msg.has_payload),
+        "dirty": bool(msg.dirty),
+        "node": int(msg.node),
+        "line": int(msg.line),
+        "txn": int(msg.txn),
+    }

@@ -1,0 +1,234 @@
+"""4-node NUMA extension: home directory with a sharer VECTOR.
+
+The paper's formal specification "was a considerable superset of that
+required for [ACCI], and covered 4-node NUMA systems" (§4.1).  This module
+implements that superset as an atomic reference model: one home node plus up
+to R remote caching agents per line, with
+
+* a sharers bitmask in the directory (classic full-map directory a la
+  Censier-Feautrier, which the paper cites as [10]);
+* write-invalidate FAN-OUT: an exclusive grant invalidates every other
+  sharer (one HOME_DOWNGRADE_I per sharer — the message-count cost of
+  scaling that motivates the paper's subsetting argument);
+* the same envelope discipline: silent E->M, voluntary downgrades without
+  replies, hidden-O dirty forwarding in MOESI mode.
+
+``tests/test_multinode.py`` checks the invariants (single writer ACROSS
+remotes, value coherence, sharer-mask accuracy) with hypothesis, and the
+message-count scaling benchmark quantifies the fan-out cost the 2-node
+subset avoids.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from .messages import MsgType
+from .states import HomeState as H
+from .states import RemoteState as R
+
+
+class MultiNodeRef:
+    """Atomic reference model: 1 home + ``n_remotes`` caching agents."""
+
+    def __init__(self, n_lines: int, n_remotes: int = 3, moesi: bool = True):
+        assert 1 <= n_remotes <= 4, "EWF carries 2-bit node ids"
+        self.n = n_lines
+        self.r = n_remotes
+        self.moesi = moesi
+        self.backing = [0] * n_lines
+        self.home_state = [H.I] * n_lines
+        self.home_buf: List[Optional[int]] = [None] * n_lines
+        # per-remote state/cache
+        self.remote_state = [[R.I] * n_lines for _ in range(n_remotes)]
+        self.remote_cache: List[List[Optional[int]]] = [
+            [None] * n_lines for _ in range(n_remotes)]
+        self._truth = [0] * n_lines
+        self.trace: List[Tuple[str, int, int]] = []  # (msg, node, line)
+
+    # -- helpers -----------------------------------------------------------
+
+    def _t(self, msg: MsgType, node: int, line: int) -> None:
+        self.trace.append((msg.name, node, line))
+
+    def sharers(self, line: int) -> List[int]:
+        return [i for i in range(self.r)
+                if self.remote_state[i][line] != R.I]
+
+    def owner(self, line: int) -> Optional[int]:
+        for i in range(self.r):
+            if self.remote_state[i][line] in (R.E, R.M):
+                return i
+        return None
+
+    def _home_value(self, line: int) -> int:
+        if self.home_state[line] != H.I:
+            return self.home_buf[line]
+        return self.backing[line]
+
+    def _recall_owner(self, line: int, to_shared: bool) -> None:
+        """Home-initiated downgrade of the exclusive owner (if any)."""
+        o = self.owner(line)
+        if o is None:
+            return
+        msg = MsgType.HOME_DOWNGRADE_S if to_shared else \
+            MsgType.HOME_DOWNGRADE_I
+        self._t(msg, o, line)
+        dirty = self.remote_state[o][line] == R.M
+        if dirty:
+            self._t(MsgType.RESP_DATA_DIRTY, o, line)
+            if self.moesi and to_shared:
+                self.home_buf[line] = self.remote_cache[o][line]
+                self.home_state[line] = H.O
+            else:
+                self.backing[line] = self.remote_cache[o][line]
+                if to_shared:
+                    self.home_state[line] = H.S
+                    self.home_buf[line] = self.backing[line]
+        else:
+            self._t(MsgType.RESP_ACK, o, line)
+        self.remote_state[o][line] = R.S if to_shared else R.I
+        if not to_shared:
+            self.remote_cache[o][line] = None
+
+    def _invalidate_sharers(self, line: int, keep: Optional[int]) -> int:
+        """Fan-out invalidation: one message per sharer (the 4-node cost).
+        Returns the number of invalidations sent."""
+        sent = 0
+        for i in range(self.r):
+            if i == keep or self.remote_state[i][line] == R.I:
+                continue
+            self._t(MsgType.HOME_DOWNGRADE_I, i, line)
+            if self.remote_state[i][line] == R.M:
+                self._t(MsgType.RESP_DATA_DIRTY, i, line)
+                self.backing[line] = self.remote_cache[i][line]
+            else:
+                self._t(MsgType.RESP_ACK, i, line)
+            self.remote_state[i][line] = R.I
+            self.remote_cache[i][line] = None
+            sent += 1
+        return sent
+
+    # -- remote-initiated transactions ---------------------------------------
+
+    def load(self, node: int, line: int) -> int:
+        rs = self.remote_state[node][line]
+        if rs != R.I:
+            return self.remote_cache[node][line]
+        self._t(MsgType.REQ_READ_SHARED, node, line)
+        # an exclusive owner elsewhere must be demoted first (transition 9).
+        self._recall_owner(line, to_shared=True)
+        hs = self.home_state[line]
+        val = self._home_value(line)
+        if hs == H.M:
+            if self.moesi:
+                self.home_state[line] = H.O           # transition 10
+            else:
+                self.backing[line] = self.home_buf[line]
+                self.home_state[line] = H.S
+        elif hs == H.E:
+            self.home_state[line] = H.S
+        self._t(MsgType.RESP_DATA, node, line)
+        self.remote_state[node][line] = R.S
+        self.remote_cache[node][line] = val
+        self._check(line)
+        return val
+
+    def store(self, node: int, line: int, value: int) -> None:
+        rs = self.remote_state[node][line]
+        if rs in (R.E, R.M):
+            self.remote_state[node][line] = R.M       # silent E->M
+            self.remote_cache[node][line] = value
+        else:
+            msg = (MsgType.REQ_UPGRADE if rs == R.S
+                   else MsgType.REQ_READ_EXCL)
+            self._t(msg, node, line)
+            # fan-out: invalidate every other sharer + recall any owner.
+            self._recall_owner(line, to_shared=False)
+            self._invalidate_sharers(line, keep=node)
+            val = self._home_value(line)
+            if self.home_state[line] in (H.M, H.O):
+                self.backing[line] = self.home_buf[line]
+            self.home_state[line] = H.I
+            self.home_buf[line] = None
+            self._t(MsgType.RESP_ACK if rs == R.S else MsgType.RESP_DATA,
+                    node, line)
+            del val
+            self.remote_state[node][line] = R.M
+            self.remote_cache[node][line] = value
+        self._truth[line] = value
+        self._check(line)
+
+    def evict(self, node: int, line: int) -> None:
+        rs = self.remote_state[node][line]
+        if rs == R.I:
+            return
+        self._t(MsgType.VOL_DOWNGRADE_I, node, line)
+        if rs == R.M:
+            if self.moesi and self.home_state[line] in (H.I, H.O):
+                self.home_buf[line] = self.remote_cache[node][line]
+                self.home_state[line] = H.M
+            else:
+                self.backing[line] = self.remote_cache[node][line]
+        elif self.home_state[line] == H.O and not self.sharers_other(
+                line, node):
+            self.home_state[line] = H.M
+        self.remote_state[node][line] = R.I
+        self.remote_cache[node][line] = None
+        self._check(line)
+
+    def sharers_other(self, line: int, node: int) -> List[int]:
+        return [i for i in self.sharers(line) if i != node]
+
+    # -- home-initiated ------------------------------------------------------
+
+    def home_read(self, line: int) -> int:
+        self._recall_owner(line, to_shared=True)
+        val = self._home_value(line)
+        self._check(line)
+        return val
+
+    def home_write(self, line: int, value: int) -> None:
+        self._recall_owner(line, to_shared=False)
+        self._invalidate_sharers(line, keep=None)
+        if self.home_state[line] != H.I:
+            self.home_buf[line] = value
+            self.home_state[line] = H.M
+        else:
+            self.backing[line] = value
+        self._truth[line] = value
+        self._check(line)
+
+    # -- invariants ----------------------------------------------------------
+
+    def _check(self, line: int) -> None:
+        owners = [i for i in range(self.r)
+                  if self.remote_state[i][line] in (R.E, R.M)]
+        sharers = self.sharers(line)
+        # single writer ACROSS remotes; owner excludes any other sharer.
+        assert len(owners) <= 1, f"two owners on line {line}"
+        if owners:
+            assert sharers == owners, "owner coexists with sharers"
+            assert self.home_state[line] == H.I
+        # hidden O only while sharers exist
+        if self.home_state[line] == H.O:
+            assert sharers, "hidden O without sharers"
+        # value coherence
+        for i in sharers:
+            assert self.remote_cache[i][line] == self._truth[line], \
+                f"remote {i} stale on line {line}"
+        if self.home_state[line] != H.I:
+            assert self.home_buf[line] == self._truth[line]
+        dirty = any(self.remote_state[i][line] == R.M for i in range(self.r)) \
+            or self.home_state[line] in (H.M, H.O)
+        if not dirty:
+            assert self.backing[line] == self._truth[line]
+
+    def check_all(self) -> None:
+        for line in range(self.n):
+            self._check(line)
+
+    def invalidation_messages(self) -> int:
+        """Count of fan-out invalidations in the trace — the scaling cost
+        the paper's 2-node subsetting avoids."""
+        return sum(1 for m, _, _ in self.trace
+                   if m == "HOME_DOWNGRADE_I")

@@ -1,0 +1,510 @@
+"""The ECI protocol envelope: transition tables + the 7 requirements (§3.3).
+
+The protocol is *table-driven*: every stable-state transition of Fig. 1 is a
+row in a dense table, so that
+
+* the home directory (``core.directory``) and the remote agent
+  (``core.agent``) execute transitions as vectorized ``jnp`` gathers — no
+  python control flow in the hot path, fully ``jit``-able;
+* protocol *subsets* (§3.4, ``core.specialize``) are literally masks over the
+  same tables;
+* the envelope requirements are checked *mechanically* over the tables
+  (``verify_envelope``), the analogue of the paper's formal specification
+  being checked against traces.
+
+Two concrete instantiations are built:
+
+* ``MINIMAL`` — the enhanced-MESI core: every dirty line received by the home
+  is written back to the backing store before any sharing (write-through on
+  downgrade), so the home never needs the hidden ``O`` state.
+* ``FULL`` — the MOESI concession (transition 10 and friends): the home may
+  hold dirty data in the hidden ``O``/``M`` states and forward it without
+  touching the backing store.  Requirement 4 demands this is invisible to the
+  remote — ``verify_envelope`` checks it, and ``tests/test_protocol.py``
+  additionally proves observational equivalence by bisimulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .messages import MsgType
+from .states import (HomeState, JOINT_RANK, JOINT_STATES, RemoteState,
+                     RemoteView, joint_name)
+
+# ---------------------------------------------------------------------------
+# Local operations the remote application issues against its agent.
+# ---------------------------------------------------------------------------
+
+
+class LocalOp:
+    NOP = 0
+    LOAD = 1          # read a line
+    STORE = 2         # write a line
+    EVICT = 3         # voluntary downgrade to I (transitions 4,5,6)
+    DEMOTE = 4        # voluntary downgrade to S (transition 7)
+    N = 5
+
+
+# ---------------------------------------------------------------------------
+# Table rows.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HomeRow:
+    """Effect of an incoming message on the home directory."""
+
+    new_home: int            # HomeState
+    new_view: int            # RemoteView
+    resp: int                # MsgType of the response (NOP = none)
+    resp_dirty: bool         # response payload is dirty data
+    writeback: bool          # home writes a dirty payload to the backing store
+    legal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class RemoteRow:
+    """Effect of an incoming home-initiated message on the remote agent."""
+
+    new_remote: int          # RemoteState
+    resp: int                # MsgType (responses to home downgrades mandatory)
+    resp_dirty: bool
+    legal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalRow:
+    """Effect of a local op on the remote agent: either a silent transition
+    or an outgoing request (and a stall until its response)."""
+
+    new_remote: int          # state after the *silent* part (or pending base)
+    request: int             # MsgType to emit (NOP = silent / hit)
+    req_dirty: bool          # request carries dirty payload (writebacks)
+    hit: bool                # local op completes without any message
+
+
+ILLEGAL_HOME = HomeRow(new_home=0, new_view=0, resp=int(MsgType.RESP_NACK),
+                       resp_dirty=False, writeback=False, legal=False)
+ILLEGAL_REMOTE = RemoteRow(new_remote=0, resp=int(MsgType.RESP_NACK),
+                           resp_dirty=False, legal=False)
+
+H, R, V, M = HomeState, RemoteState, RemoteView, MsgType
+
+
+# ---------------------------------------------------------------------------
+# Home directory table: (incoming msg, home state, remote view) -> HomeRow.
+# ---------------------------------------------------------------------------
+
+
+def build_home_table(moesi: bool) -> Dict[Tuple[int, int, int], HomeRow]:
+    """Build the home-node transition table.
+
+    ``moesi=False`` gives the MINIMAL enhanced-MESI protocol (dirty data is
+    written back before sharing — home never enters O/M via downgrades);
+    ``moesi=True`` adds the hidden-O forwarding of transition 10.
+    """
+    t: Dict[Tuple[int, int, int], HomeRow] = {}
+
+    def put(msg, home, view, row):
+        t[(int(msg), int(home), int(view))] = row
+
+    # ---- transition 1: remote READ_SHARED (remote I -> S) ----
+    put(M.REQ_READ_SHARED, H.I, V.I,
+        HomeRow(H.I, V.S, M.RESP_DATA, False, False))          # II  -> IS
+    put(M.REQ_READ_SHARED, H.S, V.I,
+        HomeRow(H.S, V.S, M.RESP_DATA, False, False))          # SI  -> SS
+    put(M.REQ_READ_SHARED, H.E, V.I,
+        HomeRow(H.S, V.S, M.RESP_DATA, False, False))          # EI  -> SS
+    if moesi:
+        # transition 10 (the MOESI concession): forward dirty data and keep
+        # it hidden-dirty at home.  Requirement 4: the response must look
+        # exactly like a clean RESP_DATA to the remote.
+        put(M.REQ_READ_SHARED, H.M, V.I,
+            HomeRow(H.O, V.S, M.RESP_DATA, False, False))      # MI  -> (O)S
+    else:
+        # minimal protocol: write back, then share — same remote observation.
+        put(M.REQ_READ_SHARED, H.M, V.I,
+            HomeRow(H.S, V.S, M.RESP_DATA, False, True))       # MI  -> SS
+
+    # ---- transition 2: remote READ_EXCL (remote I -> E/M) ----
+    put(M.REQ_READ_EXCL, H.I, V.I,
+        HomeRow(H.I, V.EM, M.RESP_DATA, False, False))         # II  -> IE
+    put(M.REQ_READ_EXCL, H.S, V.I,
+        HomeRow(H.I, V.EM, M.RESP_DATA, False, False))         # SI  -> IE
+    put(M.REQ_READ_EXCL, H.E, V.I,
+        HomeRow(H.I, V.EM, M.RESP_DATA, False, False))         # EI  -> IE
+    if moesi:
+        # ownership transfer: dirty data forwarded, remote enters M.
+        put(M.REQ_READ_EXCL, H.M, V.I,
+            HomeRow(H.I, V.EM, M.RESP_DATA_DIRTY, True, False))  # MI -> IM
+    else:
+        put(M.REQ_READ_EXCL, H.M, V.I,
+            HomeRow(H.I, V.EM, M.RESP_DATA, False, True))      # MI -> IE (wb)
+
+    # ---- transition 3: remote UPGRADE (remote S -> E) ----
+    # Table 1: the upgrade response never carries a payload, so a dirty home
+    # copy must be written back invisibly (requirement 4 / recommendation 2).
+    put(M.REQ_UPGRADE, H.I, V.S,
+        HomeRow(H.I, V.EM, M.RESP_ACK, False, False))          # IS  -> IE
+    put(M.REQ_UPGRADE, H.S, V.S,
+        HomeRow(H.I, V.EM, M.RESP_ACK, False, False))          # SS  -> IE
+    put(M.REQ_UPGRADE, H.O, V.S,
+        HomeRow(H.I, V.EM, M.RESP_ACK, False, True))           # (O)S -> IE, wb
+    # race: remote's copy was concurrently invalidated -> NACK, must re-read.
+    put(M.REQ_UPGRADE, H.I, V.I, ILLEGAL_HOME)
+
+    # ---- transition 7 (voluntary downgrade M/E -> S); no response ----
+    if moesi:
+        # dirty case: the home absorbs the payload into the hidden O state
+        # (requirement 4: invisible to the remote).  Clean case (remote was
+        # E) degrades to home I via CLEAN_CASE_HOME.
+        put(M.VOL_DOWNGRADE_S, H.I, V.EM,
+            HomeRow(H.O, V.S, M.NOP, False, False))            # IM -> (O)S
+    else:
+        put(M.VOL_DOWNGRADE_S, H.I, V.EM,
+            HomeRow(H.I, V.S, M.NOP, False, True))             # wb if dirty
+
+    # ---- transitions 4,5,6 (voluntary downgrade -> I); no response ----
+    put(M.VOL_DOWNGRADE_I, H.I, V.EM,
+        HomeRow(H.M if moesi else H.I, V.I, M.NOP, False, not moesi))
+    put(M.VOL_DOWNGRADE_I, H.I, V.S,
+        HomeRow(H.I, V.I, M.NOP, False, False))                # IS  -> II
+    put(M.VOL_DOWNGRADE_I, H.S, V.S,
+        HomeRow(H.S, V.I, M.NOP, False, False))                # SS  -> SI
+    put(M.VOL_DOWNGRADE_I, H.O, V.S,
+        HomeRow(H.M, V.I, M.NOP, False, False) if moesi else
+        HomeRow(H.S, V.I, M.NOP, False, True))                 # (O)S -> MI
+
+    # ---- responses to HOME-initiated downgrades (transitions 8, 9) ----
+    # transition 8 ('downgrade remote to invalid'): reply mandatory so the
+    # home can distinguish remote I/S/E/M after the fact (paper §3.3).
+    put(M.HOME_DOWNGRADE_I, H.I, V.S,
+        HomeRow(H.I, V.I, M.NOP, False, False))                # IS -> II
+    put(M.HOME_DOWNGRADE_I, H.S, V.S,
+        HomeRow(H.E, V.I, M.NOP, False, False))                # SS -> EI
+    put(M.HOME_DOWNGRADE_I, H.O, V.S,
+        HomeRow(H.M, V.I, M.NOP, False, False) if moesi else
+        HomeRow(H.E, V.I, M.NOP, False, True))                 # (O)S -> MI
+    put(M.HOME_DOWNGRADE_I, H.I, V.EM,
+        HomeRow(H.M if moesi else H.I, V.I, M.NOP, False, not moesi))
+    # transition 9 ('downgrade remote to shared'): home takes a shared copy.
+    put(M.HOME_DOWNGRADE_S, H.I, V.EM,
+        HomeRow(H.O if moesi else H.S, V.S, M.NOP, False, not moesi))
+
+    return t
+
+
+#: When a voluntary downgrade or a downgrade-response arrives with a CLEAN
+#: payload flag, the home's new state must degrade gracefully: the table rows
+#: for ``V.EM`` sources assume the dirty (remote-was-M) case; these
+#: SOURCE-keyed overrides give the clean (remote-was-E) outcome (the home
+#: cannot have absorbed dirty data that was never sent).
+#: Keyed by (msg, src_home_state, src_view) -> clean-case new home state.
+CLEAN_CASE_HOME: Dict[Tuple[int, int, int], int] = {
+    (int(M.VOL_DOWNGRADE_I), int(H.I), int(V.EM)): int(H.I),   # IE -> II
+    (int(M.VOL_DOWNGRADE_S), int(H.I), int(V.EM)): int(H.I),   # IE -> IS
+    (int(M.HOME_DOWNGRADE_I), int(H.I), int(V.EM)): int(H.I),  # IE -> II
+    (int(M.HOME_DOWNGRADE_S), int(H.I), int(V.EM)): int(H.S),  # IE -> SS
+}
+
+
+# ---------------------------------------------------------------------------
+# Remote agent: home-initiated messages -> RemoteRow.
+# ---------------------------------------------------------------------------
+
+
+def build_remote_table() -> Dict[Tuple[int, int], RemoteRow]:
+    t: Dict[Tuple[int, int], RemoteRow] = {}
+
+    def put(msg, remote, row):
+        t[(int(msg), int(remote))] = row
+
+    # transition 8: home wants the line back / evicted.
+    put(M.HOME_DOWNGRADE_I, R.I, RemoteRow(R.I, M.RESP_ACK, False))   # race
+    put(M.HOME_DOWNGRADE_I, R.S, RemoteRow(R.I, M.RESP_ACK, False))
+    put(M.HOME_DOWNGRADE_I, R.E, RemoteRow(R.I, M.RESP_ACK, False))
+    put(M.HOME_DOWNGRADE_I, R.M, RemoteRow(R.I, M.RESP_DATA_DIRTY, True))
+    # transition 9: home wants a shared copy.
+    put(M.HOME_DOWNGRADE_S, R.I, RemoteRow(R.I, M.RESP_ACK, False))   # race
+    put(M.HOME_DOWNGRADE_S, R.S, RemoteRow(R.S, M.RESP_ACK, False))   # race
+    put(M.HOME_DOWNGRADE_S, R.E, RemoteRow(R.S, M.RESP_ACK, False))
+    put(M.HOME_DOWNGRADE_S, R.M, RemoteRow(R.S, M.RESP_DATA_DIRTY, True))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Remote agent: local ops -> LocalRow.
+# ---------------------------------------------------------------------------
+
+
+def build_local_table() -> Dict[Tuple[int, int], LocalRow]:
+    t: Dict[Tuple[int, int], LocalRow] = {}
+
+    def put(op, remote, row):
+        t[(int(op), int(remote))] = row
+
+    n = int(M.NOP)
+    # LOAD
+    put(LocalOp.LOAD, R.I, LocalRow(R.I, int(M.REQ_READ_SHARED), False, False))
+    for s in (R.S, R.E, R.M):
+        put(LocalOp.LOAD, s, LocalRow(int(s), n, False, True))
+    # STORE
+    put(LocalOp.STORE, R.I, LocalRow(R.I, int(M.REQ_READ_EXCL), False, False))
+    put(LocalOp.STORE, R.S, LocalRow(R.S, int(M.REQ_UPGRADE), False, False))
+    # recommendation 1: the E->M upgrade is SILENT (internal dotted edge).
+    put(LocalOp.STORE, R.E, LocalRow(R.M, n, False, True))
+    put(LocalOp.STORE, R.M, LocalRow(R.M, n, False, True))
+    # EVICT (transitions 4,5,6) — voluntary, no reply expected.
+    put(LocalOp.EVICT, R.I, LocalRow(R.I, n, False, True))
+    put(LocalOp.EVICT, R.S, LocalRow(R.I, int(M.VOL_DOWNGRADE_I), False, True))
+    put(LocalOp.EVICT, R.E, LocalRow(R.I, int(M.VOL_DOWNGRADE_I), False, True))
+    put(LocalOp.EVICT, R.M, LocalRow(R.I, int(M.VOL_DOWNGRADE_I), True, True))
+    # DEMOTE (transition 7).
+    put(LocalOp.DEMOTE, R.I, LocalRow(R.I, n, False, True))
+    put(LocalOp.DEMOTE, R.S, LocalRow(R.S, n, False, True))
+    put(LocalOp.DEMOTE, R.E, LocalRow(R.S, int(M.VOL_DOWNGRADE_S), False, True))
+    put(LocalOp.DEMOTE, R.M, LocalRow(R.S, int(M.VOL_DOWNGRADE_S), True, True))
+    # NOP
+    for s in (R.I, R.S, R.E, R.M):
+        put(LocalOp.NOP, s, LocalRow(int(s), n, False, True))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Response handling at the remote (completing a pending request).
+#   (pending request msg, response msg) -> new remote state (-1 = illegal)
+# ---------------------------------------------------------------------------
+
+
+RESPONSE_TABLE: Dict[Tuple[int, int], int] = {
+    (int(M.REQ_READ_SHARED), int(M.RESP_DATA)): int(R.S),
+    (int(M.REQ_READ_EXCL), int(M.RESP_DATA)): int(R.E),
+    (int(M.REQ_READ_EXCL), int(M.RESP_DATA_DIRTY)): int(R.M),
+    (int(M.REQ_UPGRADE), int(M.RESP_ACK)): int(R.E),
+    # NACK: fall back to I and retry (the agent re-issues).
+    (int(M.REQ_READ_SHARED), int(M.RESP_NACK)): int(R.I),
+    (int(M.REQ_READ_EXCL), int(M.RESP_NACK)): int(R.I),
+    (int(M.REQ_UPGRADE), int(M.RESP_NACK)): int(R.S),
+}
+
+
+# ---------------------------------------------------------------------------
+# Dense (numpy) bakes of the tables for the vectorized jit engines.
+# ---------------------------------------------------------------------------
+
+
+N_MSG = 16
+N_HOME = 5
+N_VIEW = 3
+N_REMOTE = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseTables:
+    """All protocol tables as dense int arrays (gather-friendly)."""
+
+    # home: [msg, home_state, view] -> fields
+    home_new_home: np.ndarray
+    home_new_view: np.ndarray
+    home_resp: np.ndarray
+    home_resp_dirty: np.ndarray
+    home_writeback: np.ndarray
+    home_legal: np.ndarray
+    home_clean_case: np.ndarray      # [msg, src_home, src_view] -> clean home
+    # remote: [msg, remote_state] -> fields
+    rem_new_state: np.ndarray
+    rem_resp: np.ndarray
+    rem_resp_dirty: np.ndarray
+    rem_legal: np.ndarray
+    # local: [op, remote_state] -> fields
+    loc_new_state: np.ndarray
+    loc_request: np.ndarray
+    loc_req_dirty: np.ndarray
+    loc_hit: np.ndarray
+    # responses: [pending_req_msg, resp_msg] -> new remote state (-1 illegal)
+    resp_new_state: np.ndarray
+    moesi: bool
+
+
+def bake(moesi: bool) -> DenseTables:
+    home = build_home_table(moesi)
+    rem = build_remote_table()
+    loc = build_local_table()
+
+    h_nh = np.zeros((N_MSG, N_HOME, N_VIEW), np.int8)
+    h_nv = np.zeros((N_MSG, N_HOME, N_VIEW), np.int8)
+    h_rp = np.full((N_MSG, N_HOME, N_VIEW), int(M.RESP_NACK), np.int8)
+    h_rd = np.zeros((N_MSG, N_HOME, N_VIEW), bool)
+    h_wb = np.zeros((N_MSG, N_HOME, N_VIEW), bool)
+    h_lg = np.zeros((N_MSG, N_HOME, N_VIEW), bool)
+    for (msg, hs, vw), row in home.items():
+        h_nh[msg, hs, vw] = int(row.new_home)
+        h_nv[msg, hs, vw] = int(row.new_view)
+        h_rp[msg, hs, vw] = int(row.resp)
+        h_rd[msg, hs, vw] = row.resp_dirty
+        h_wb[msg, hs, vw] = row.writeback
+        h_lg[msg, hs, vw] = row.legal
+
+    h_cc = h_nh.copy()
+    for (msg, hs, vw), clean_hs in CLEAN_CASE_HOME.items():
+        h_cc[msg, hs, vw] = clean_hs
+
+    r_ns = np.zeros((N_MSG, N_REMOTE), np.int8)
+    r_rp = np.full((N_MSG, N_REMOTE), int(M.RESP_NACK), np.int8)
+    r_rd = np.zeros((N_MSG, N_REMOTE), bool)
+    r_lg = np.zeros((N_MSG, N_REMOTE), bool)
+    for (msg, rs), row in rem.items():
+        r_ns[msg, rs] = int(row.new_remote)
+        r_rp[msg, rs] = int(row.resp)
+        r_rd[msg, rs] = row.resp_dirty
+        r_lg[msg, rs] = row.legal
+
+    l_ns = np.zeros((LocalOp.N, N_REMOTE), np.int8)
+    l_rq = np.zeros((LocalOp.N, N_REMOTE), np.int8)
+    l_rd = np.zeros((LocalOp.N, N_REMOTE), bool)
+    l_ht = np.zeros((LocalOp.N, N_REMOTE), bool)
+    for (op, rs), row in loc.items():
+        l_ns[op, rs] = int(row.new_remote)
+        l_rq[op, rs] = int(row.request)
+        l_rd[op, rs] = row.req_dirty
+        l_ht[op, rs] = row.hit
+
+    rsp = np.full((N_MSG, N_MSG), -1, np.int8)
+    for (req, resp), ns in RESPONSE_TABLE.items():
+        rsp[req, resp] = ns
+
+    return DenseTables(h_nh, h_nv, h_rp, h_rd, h_wb, h_lg, h_cc,
+                       r_ns, r_rp, r_rd, r_lg,
+                       l_ns, l_rq, l_rd, l_ht, rsp, moesi)
+
+
+MINIMAL = bake(moesi=False)
+FULL = bake(moesi=True)
+
+
+# ---------------------------------------------------------------------------
+# Envelope verification (§3.3 requirements) — run mechanically over a table.
+# ---------------------------------------------------------------------------
+
+
+def _joint_of(home: int, view: int, remote_dirty_known: bool = True
+              ) -> Optional[Tuple[HomeState, RemoteState]]:
+    """Map (home_state, remote_view) to a representative joint state.  For
+    view EM we return the E representative (rank checks use both)."""
+    v = RemoteView(view)
+    if v == RemoteView.I:
+        r = RemoteState.I
+    elif v == RemoteView.S:
+        r = RemoteState.S
+    else:
+        r = RemoteState.E
+    pair = (HomeState(home), r)
+    return pair if pair in JOINT_RANK else None
+
+
+def verify_envelope(tables: DenseTables) -> List[str]:
+    """Check the 7 requirements of §3.3 (those mechanically checkable from
+    the stable-state tables).  Returns a list of violation strings."""
+    violations: List[str] = []
+    home = build_home_table(tables.moesi)
+
+    for (msg, hs, vw), row in home.items():
+        if not row.legal:
+            continue
+        src = _joint_of(hs, vw)
+        # for view EM the source may be IE or IM; check the best case.
+        dsts = []
+        dst = _joint_of(int(row.new_home), int(row.new_view))
+        if dst is not None:
+            dsts.append(dst)
+        if src is None or not dsts:
+            violations.append(f"unmappable transition {MsgType(msg).name} "
+                              f"@ home={HomeState(hs).name} view={vw}")
+            continue
+        srcs = [src]
+        if RemoteView(vw) == RemoteView.EM:
+            srcs.append((HomeState(hs), RemoteState.M))
+        ok = False
+        for s in srcs:
+            for d in dsts:
+                if s not in JOINT_RANK or d not in JOINT_RANK:
+                    continue
+                rs, rd = JOINT_RANK[s], JOINT_RANK[d]
+                # requirement 1: only up or down the order; the single
+                # allowed exception is transition 10 (MI -> SS/(O)S or IS).
+                is_t10 = (msg == int(M.REQ_READ_SHARED)
+                          and hs == int(H.M) and vw == int(V.I))
+                if rs != rd or s == d or is_t10:
+                    ok = True
+        if not ok:
+            violations.append(
+                f"req1: sideways transition {MsgType(msg).name} "
+                f"{joint_name(*srcs[0])}->{joint_name(*dsts[0])}")
+
+        # requirement 4: states where remote holds a clean shared copy must
+        # be indistinguishable to the remote — i.e. the response type/payload
+        # for a given request must not depend on home being S vs O vs I.
+    for msg in (int(M.REQ_READ_SHARED),):
+        resps = set()
+        for hs in (int(H.I), int(H.S), int(H.E), int(H.M)):
+            key = (msg, hs, int(V.I))
+            if key in home and home[key].legal:
+                r = home[key]
+                resps.add((r.resp, r.resp_dirty))
+        if len(resps) > 1:
+            violations.append(
+                f"req4: remote can distinguish home states via "
+                f"{MsgType(msg).name} responses: {resps}")
+    for msg in (int(M.REQ_UPGRADE),):
+        resps = set()
+        for hs in (int(H.I), int(H.S), int(H.O)):
+            key = (msg, hs, int(V.S))
+            if key in home and home[key].legal:
+                r = home[key]
+                resps.add((r.resp, r.resp_dirty))
+        if len(resps) > 1:
+            violations.append(
+                f"req4: remote can distinguish home states via "
+                f"{MsgType(msg).name} responses: {resps}")
+
+    # requirement 3: moving from a dirty to a clean state must signal home —
+    # structurally: the remote tables must contain no silent M->S/E/I edge.
+    loc = build_local_table()
+    for (op, rs), row in loc.items():
+        if rs == int(R.M) and row.new_remote != int(R.M):
+            if row.request == int(M.NOP):
+                violations.append(f"req3: silent dirty->clean local op {op}")
+
+    # requirement 2 (converse): every required response direction exists.
+    rem = build_remote_table()
+    for msg in (int(M.HOME_DOWNGRADE_S), int(M.HOME_DOWNGRADE_I)):
+        for rs in range(N_REMOTE):
+            if (msg, rs) not in rem:
+                violations.append(
+                    f"req7: remote unprepared for {MsgType(msg).name} "
+                    f"in state {RemoteState(rs).name}")
+            elif rem[(msg, rs)].resp == int(M.NOP):
+                violations.append(
+                    f"req2: home-initiated downgrade without mandatory reply")
+
+    return violations
+
+
+def count_states_and_transitions(tables: DenseTables) -> Dict[str, int]:
+    """Protocol-size metrics used by the specialization benchmark (the
+    paper's headline: full protocols have 100+ states; the read-only subset
+    needs ONE)."""
+    home = build_home_table(tables.moesi)
+    legal = [k for k, r in home.items() if r.legal]
+    home_states = {k[1] for k in legal} | {r.new_home for r in home.values()
+                                           if r.legal}
+    views = {k[2] for k in legal}
+    return {
+        "home_states": len(home_states),
+        "remote_views": len(views),
+        "signalled_transitions": len(legal),
+        "joint_states": len(JOINT_STATES),
+    }

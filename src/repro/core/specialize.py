@@ -1,0 +1,189 @@
+"""Protocol specialization / subsetting (paper §3.4).
+
+ECI's headline feature: the protocol is *meant to be subsetted* per
+application.  A subset is a mask over message types and local ops; legality
+is governed by requirement 5 ("an implementation must support all
+transitions the partner may signal, unless it can be guaranteed these won't
+be generated") — so a subset is only sound relative to a *workload
+guarantee* (e.g. read-only).
+
+The lattice implemented here, from the paper:
+
+* ``FULL_MOESI``      — everything, hidden-O forwarding (the ThunderX-1).
+* ``ENHANCED_MESI``   — the minimal mandatory protocol (no O; write-through).
+* ``READ_ONLY``       — CPU-initiator read-only workload: remote uses only
+  LOAD/EVICT; joint states collapse to {IS, II}; home-initiated downgrade-
+  to-invalid retained for eviction of clean data.
+* ``STATELESS``       — the paper's extreme: drop the last home transition;
+  a single combined state ``I*``; the home tracks NO per-line state and
+  still interoperates flawlessly with a full remote agent
+  (proved in tests/test_specialize.py by bisimulation with FULL).
+
+``subset_metrics`` emits the state/transition counts used by the
+protocol-size benchmark (paper's "not unusual ... more than 100 states" vs
+one state here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List
+
+from .messages import MsgType
+from .protocol import (FULL, MINIMAL, DenseTables, LocalOp, build_home_table,
+                       build_local_table)
+
+M = MsgType
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolSubset:
+    """A named subset of the ECI envelope."""
+
+    name: str
+    tables: DenseTables
+    #: messages the REMOTE may send (requirement 5 for the home side)
+    remote_may_send: FrozenSet[int]
+    #: messages the HOME may send
+    home_may_send: FrozenSet[int]
+    #: local ops the application may issue
+    local_ops: FrozenSet[int]
+    #: the home tracks no per-line state (§3.4 final simplification)
+    stateless_home: bool = False
+
+    def check_workload(self, ops) -> bool:
+        """True iff an op program stays within the subset's guarantee."""
+        return all(int(o) in self.local_ops or int(o) == LocalOp.NOP
+                   for o in ops)
+
+
+FULL_MOESI = ProtocolSubset(
+    name="full_moesi",
+    tables=FULL,
+    remote_may_send=frozenset(map(int, (
+        M.REQ_READ_SHARED, M.REQ_READ_EXCL, M.REQ_UPGRADE,
+        M.VOL_DOWNGRADE_S, M.VOL_DOWNGRADE_I,
+        M.RESP_ACK, M.RESP_DATA_DIRTY))),
+    home_may_send=frozenset(map(int, (
+        M.HOME_DOWNGRADE_S, M.HOME_DOWNGRADE_I,
+        M.RESP_DATA, M.RESP_DATA_DIRTY, M.RESP_ACK, M.RESP_NACK))),
+    local_ops=frozenset((LocalOp.LOAD, LocalOp.STORE, LocalOp.EVICT,
+                         LocalOp.DEMOTE)),
+)
+
+ENHANCED_MESI = dataclasses.replace(
+    FULL_MOESI, name="enhanced_mesi", tables=MINIMAL)
+
+READ_ONLY = ProtocolSubset(
+    name="read_only",
+    tables=MINIMAL,
+    # Fig. 1(b) read-only: only transitions 1 (upgrade to shared) and 6
+    # (voluntary downgrade to invalid) remain.
+    remote_may_send=frozenset(map(int, (M.REQ_READ_SHARED,
+                                        M.VOL_DOWNGRADE_I, M.RESP_ACK))),
+    # home keeps only 'downgrade remote to invalid' (evict clean data).
+    home_may_send=frozenset(map(int, (M.HOME_DOWNGRADE_I, M.RESP_DATA,
+                                      M.RESP_NACK))),
+    local_ops=frozenset((LocalOp.LOAD, LocalOp.EVICT)),
+)
+
+STATELESS = ProtocolSubset(
+    name="stateless",
+    tables=MINIMAL,
+    remote_may_send=frozenset(map(int, (M.REQ_READ_SHARED,
+                                        M.VOL_DOWNGRADE_I))),
+    home_may_send=frozenset(map(int, (M.RESP_DATA,))),
+    local_ops=frozenset((LocalOp.LOAD, LocalOp.EVICT)),
+    stateless_home=True,
+)
+
+SUBSETS: Dict[str, ProtocolSubset] = {
+    s.name: s for s in (FULL_MOESI, ENHANCED_MESI, READ_ONLY, STATELESS)
+}
+
+
+def reachable_joint_states(subset: ProtocolSubset) -> FrozenSet[str]:
+    """Joint states reachable from II under the subset's allowed traffic.
+
+    Small explicit-state model checking over the python reference tables —
+    this is the count the paper's specialization argument is about.
+    """
+    from .states import HomeState as H
+    from .states import RemoteState as R
+
+    home = build_home_table(subset.tables.moesi)
+    if subset.stateless_home:
+        # the home never transitions: the only joint 'state' is I*.
+        return frozenset({"I*"})
+
+    frontier = [(int(H.I), int(R.I))]
+    seen = set(frontier)
+    loc = build_local_table()
+    while frontier:
+        hs, rs = frontier.pop()
+        view = {int(R.I): 0, int(R.S): 1, int(R.E): 2, int(R.M): 2}[rs]
+        # remote-initiated
+        for op in subset.local_ops:
+            row = loc[(int(op), rs)]
+            req = row.request
+            nxt_r = row.new_remote
+            if req == int(M.NOP):
+                nxt = (hs, int(nxt_r))
+                if nxt not in seen:
+                    seen.add(nxt)
+                    frontier.append(nxt)
+                continue
+            if req not in subset.remote_may_send:
+                continue
+            key = (req, hs, view)
+            if key not in home or not home[key].legal:
+                continue
+            hrow = home[key]
+            # remote's post-response state
+            if req == int(M.REQ_READ_SHARED):
+                nr = int(R.S)
+            elif req in (int(M.REQ_READ_EXCL), int(M.REQ_UPGRADE)):
+                nr = int(R.M) if int(op) == LocalOp.STORE else int(R.E)
+            else:  # voluntary downgrades
+                nr = int(nxt_r)
+            # clean/dirty cases for the home
+            for nh in {int(hrow.new_home),
+                       int(subset.tables.home_clean_case[req, hs, view])}:
+                nxt = (nh, nr)
+                if nxt not in seen:
+                    seen.add(nxt)
+                    frontier.append(nxt)
+        # home-initiated
+        for msg in (int(M.HOME_DOWNGRADE_S), int(M.HOME_DOWNGRADE_I)):
+            if msg not in subset.home_may_send:
+                continue
+            key = (msg, hs, view)
+            if key not in home or not home[key].legal:
+                continue
+            hrow = home[key]
+            nr = {int(M.HOME_DOWNGRADE_S): int(R.S),
+                  int(M.HOME_DOWNGRADE_I): int(R.I)}[msg]
+            if rs == int(R.I):
+                nr = int(R.I)
+            for nh in {int(hrow.new_home),
+                       int(subset.tables.home_clean_case[msg, hs, view])}:
+                nxt = (nh, nr)
+                if nxt not in seen:
+                    seen.add(nxt)
+                    frontier.append(nxt)
+
+    def name(hs, rs):
+        return "ISEMO"[hs] + "ISEM"[rs]
+
+    return frozenset(name(h, r) for h, r in seen)
+
+
+def subset_metrics(subset: ProtocolSubset) -> Dict[str, int]:
+    """State/transition counts for the specialization table (EXPERIMENTS)."""
+    states = reachable_joint_states(subset)
+    return {
+        "joint_states": len(states),
+        "remote_msg_types": len(subset.remote_may_send),
+        "home_msg_types": len(subset.home_may_send),
+        "local_ops": len(subset.local_ops),
+        "home_tracks_state": 0 if subset.stateless_home else 1,
+    }

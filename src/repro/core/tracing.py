@@ -1,0 +1,189 @@
+"""Trace capture + online NFA protocol checking (paper §4.1).
+
+The ECI toolkit checks formal protocol specs against captured traces, both
+offline (Wireshark plugin over EWF traces) and online (NFA specs compiled
+onto the FPGA, checked at the full 240 Gb/s line rate).  Here:
+
+* ``TraceBuffer`` — a ring of packed EWF words (``core.messages.pack``)
+  with JSON export (the paper's serialization format);
+* ``NFASpec`` — protocol-property specs as nondeterministic finite automata
+  over the message alphabet, written in a tiny declarative language;
+* ``check_trace`` — runs a spec over a per-line projection of a trace and
+  reports violations (the "machine check with very little information"
+  becomes a precise counterexample).
+
+Specs provided (used by the test-suite and the protocol benchmarks):
+``SPEC_REQ_RESP`` (every request gets exactly one response before the next
+request on that line), ``SPEC_READONLY`` (read-only subsets never carry
+upgrade/dirty traffic), ``SPEC_SINGLE_WRITER`` (no second exclusive grant
+without an intervening downgrade).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from typing import Dict, FrozenSet, Iterable, List, Sequence, Set, Tuple
+
+import numpy as np
+
+from .messages import Message, MsgType, pack, to_json, unpack
+
+
+class TraceBuffer:
+    """Ring buffer of packed EWF words (host-side)."""
+
+    def __init__(self, capacity: int = 1 << 16):
+        self.capacity = capacity
+        self.words: List[int] = []
+
+    def record(self, msg_type: int, vc: int, has_payload: bool, dirty: bool,
+               node: int, line: int, txn: int) -> None:
+        w = int(pack(msg_type, vc, has_payload, dirty, node, line, txn))
+        if len(self.words) >= self.capacity:
+            self.words.pop(0)
+        self.words.append(w)
+
+    def record_name_line(self, name: str, line: int) -> None:
+        """Convenience for (msg_name, line) traces from the reference model."""
+        self.record(int(MsgType[name]), 0, False, False, 0, line, 0)
+
+    def messages(self) -> List[Message]:
+        return [unpack(np.uint64(w)) for w in self.words]
+
+    def to_json(self) -> str:
+        return json.dumps([to_json(m) for m in self.messages()])
+
+    @staticmethod
+    def from_pairs(pairs: Iterable[Tuple[str, int]]) -> "TraceBuffer":
+        tb = TraceBuffer()
+        for name, line in pairs:
+            tb.record_name_line(name, line)
+        return tb
+
+
+@dataclasses.dataclass(frozen=True)
+class NFASpec:
+    """An NFA over message-type names.
+
+    ``transitions``: (state, symbol) -> set of next states; the special
+    symbol ``"*"`` matches any message not matched by an explicit edge.
+    A trace VIOLATES the spec iff the NFA's state set ever becomes empty
+    (no run can explain the observed message).
+    """
+
+    name: str
+    start: FrozenSet[str]
+    transitions: Dict[Tuple[str, str], FrozenSet[str]]
+
+    def step(self, states: Set[str], symbol: str) -> Set[str]:
+        nxt: Set[str] = set()
+        for s in states:
+            key = (s, symbol)
+            if key in self.transitions:
+                nxt |= self.transitions[key]
+            elif (s, "*") in self.transitions:
+                nxt |= self.transitions[(s, "*")]
+        return nxt
+
+
+def spec(name: str, start: Sequence[str],
+         rules: Sequence[Tuple[str, str, Sequence[str]]]) -> NFASpec:
+    """The paper's 'simple language' for NFA specs: a rule list
+    (state, symbol, next_states)."""
+    table: Dict[Tuple[str, str], FrozenSet[str]] = {}
+    for s, sym, nxt in rules:
+        table[(s, sym)] = frozenset(nxt) | table.get((s, sym), frozenset())
+    return NFASpec(name, frozenset(start), table)
+
+
+#: Every coherence request on a line is answered before the next request on
+#: that line (per-line serialization; voluntary downgrades need no answer).
+SPEC_REQ_RESP = spec(
+    "req_resp", ["idle"],
+    [
+        ("idle", "REQ_READ_SHARED", ["wait"]),
+        ("idle", "REQ_READ_EXCL", ["wait"]),
+        ("idle", "REQ_UPGRADE", ["wait"]),
+        ("idle", "HOME_DOWNGRADE_S", ["wait"]),
+        ("idle", "HOME_DOWNGRADE_I", ["wait"]),
+        ("idle", "VOL_DOWNGRADE_S", ["idle"]),
+        ("idle", "VOL_DOWNGRADE_I", ["idle"]),
+        ("wait", "RESP_DATA", ["idle"]),
+        ("wait", "RESP_DATA_DIRTY", ["idle"]),
+        ("wait", "RESP_ACK", ["idle"]),
+        ("wait", "RESP_NACK", ["idle"]),
+    ])
+
+#: Read-only subsets must never carry exclusive/dirty traffic (req. 5).
+SPEC_READONLY = spec(
+    "readonly", ["ok"],
+    [
+        ("ok", "REQ_READ_SHARED", ["ok"]),
+        ("ok", "VOL_DOWNGRADE_I", ["ok"]),
+        ("ok", "RESP_DATA", ["ok"]),
+        ("ok", "RESP_ACK", ["ok"]),
+        # anything else (upgrades, dirty responses, home downgrades) has no
+        # edge -> state set empties -> violation.
+    ])
+
+#: Single-writer: after an exclusive grant, no second exclusive grant (or
+#: shared grant) may occur before a downgrade of the holder.
+SPEC_SINGLE_WRITER = spec(
+    "single_writer", ["shared"],
+    [
+        ("shared", "REQ_READ_SHARED", ["shared"]),
+        ("shared", "RESP_DATA", ["shared"]),
+        ("shared", "RESP_NACK", ["shared"]),
+        ("shared", "VOL_DOWNGRADE_I", ["shared"]),
+        ("shared", "VOL_DOWNGRADE_S", ["shared"]),
+        ("shared", "REQ_READ_EXCL", ["granting"]),
+        ("shared", "REQ_UPGRADE", ["granting"]),
+        # home may invalidate/demote shared copies (transition 8 from IS/SS)
+        ("shared", "HOME_DOWNGRADE_S", ["downgrading"]),
+        ("shared", "HOME_DOWNGRADE_I", ["downgrading"]),
+        ("granting", "RESP_NACK", ["shared"]),
+        ("granting", "RESP_DATA", ["excl"]),
+        ("granting", "RESP_DATA_DIRTY", ["excl"]),
+        ("granting", "RESP_ACK", ["excl"]),
+        ("excl", "VOL_DOWNGRADE_S", ["shared"]),
+        ("excl", "VOL_DOWNGRADE_I", ["shared"]),
+        ("excl", "HOME_DOWNGRADE_S", ["downgrading"]),
+        ("excl", "HOME_DOWNGRADE_I", ["downgrading"]),
+        ("downgrading", "RESP_ACK", ["shared"]),
+        ("downgrading", "RESP_DATA_DIRTY", ["shared"]),
+    ])
+
+
+@dataclasses.dataclass
+class Violation:
+    spec: str
+    line: int
+    position: int
+    symbol: str
+    states_before: FrozenSet[str]
+
+    def __str__(self) -> str:
+        return (f"[{self.spec}] line {self.line} pos {self.position}: "
+                f"'{self.symbol}' not allowed from {set(self.states_before)}")
+
+
+def check_trace(nfa: NFASpec, trace: TraceBuffer) -> List[Violation]:
+    """Run the spec over each line's message subsequence (per-line
+    projection, as coherence is a per-line protocol)."""
+    by_line: Dict[int, List[Tuple[int, str]]] = defaultdict(list)
+    for pos, m in enumerate(trace.messages()):
+        by_line[int(m.line)].append((pos, MsgType(int(m.msg_type)).name))
+
+    violations: List[Violation] = []
+    for line, seq in by_line.items():
+        states: Set[str] = set(nfa.start)
+        for pos, sym in seq:
+            nxt = nfa.step(states, sym)
+            if not nxt:
+                violations.append(Violation(nfa.name, line, pos, sym,
+                                            frozenset(states)))
+                states = set(nfa.start)  # resync and keep scanning
+            else:
+                states = nxt
+    return violations

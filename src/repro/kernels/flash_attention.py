@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: blocked flash attention (beyond-paper model hot spot).
+
+Supports the attention variants the assigned architectures need:
+GQA/MQA (kv-head broadcast via BlockSpec index_map — no repeated KV in HBM),
+causal masking, sliding-window (gemma2/recurrentgemma local layers) and
+gemma2 logit soft-capping.
+
+Structure: grid (batch, q_head, q_block, kv_block); the output block is
+revisited along the kv_block axis, carrying the online-softmax state
+(running max ``m``, normalizer ``l``, unnormalized accumulator ``acc``) in
+VMEM scratch.  Block shapes default to MXU-aligned (128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_k: int,
+                  seq_q: int, seq_k: int):
+    kb = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (block_q, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_k, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (block_k, D)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qb = pl.program_id(2)
+    # global positions; queries are aligned to the END of the kv sequence
+    # (decode: one query attends to the whole cache).
+    qi = (qb * block_q
+          + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+          + (seq_k - seq_q))
+    kj = (kb * block_k
+          + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(logits - m_cur[:, None])
+    # fully-masked rows: keep everything at zero.
+    p = jnp.where((m_cur <= NEG_INF / 2)[:, None], 0.0, p)
+    alpha = jnp.where(m_cur <= NEG_INF / 2, 1.0, alpha)
+
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot(p, v,
+                                  preferred_element_type=jnp.float32))
+    m_ref[...] = m_cur
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "scale",
+                              "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; Hq % Hkv == 0.
+
+    Returns [B, Hq, Sq, D].  Sq % block_q == 0 and Skv % block_k == 0
+    (callers pad; the mask keeps padding out of the softmax).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    scale_v = scale if scale is not None else float(D) ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale_v, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        seq_q=Sq, seq_k=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # normalizer l
+            pltpu.VMEM((block_q, D), jnp.float32),     # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

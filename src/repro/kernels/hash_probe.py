@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: chained hash-table probe (paper §5.5, Fig. 4).
+
+The paper's pointer-chase is DRAM-latency bound; Enzian runs 32 parallel
+operators, each with its own DRAM controller, to hide latency.  The TPU
+analogue: a *tile of queries* (the parallel-operators dimension) chases its
+chains in lockstep; the table arrays (heads/keys/next) are VMEM-resident for
+the tile's whole walk (the per-operator "own DRAM controller" becomes
+"own VMEM-resident partition" — the table shard must fit VMEM, which is the
+honest TPU statement of the paper's negative result: random access to big
+tables does not map well onto either machine).
+
+Grid: one program per query tile; every step is a vectorized VMEM gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(heads_ref, keys_ref, nxt_ref, q_ref, found_ref, steps_ref,
+                  *, max_chain: int):
+    heads = heads_ref[...]
+    keys = keys_ref[...]
+    nxt = nxt_ref[...]
+    q = q_ref[...]
+    n_buckets = heads.shape[0]
+
+    h = (q.astype(jnp.uint32) * jnp.uint32(2654435769)) >> jnp.uint32(16)
+    ptr = jnp.take(heads, (h % jnp.uint32(n_buckets)).astype(jnp.int32))
+
+    def step(_, carry):
+        ptr, found, steps = carry
+        live = (ptr >= 0) & (found < 0)
+        safe = jnp.maximum(ptr, 0)
+        hit = live & (jnp.take(keys, safe) == q.astype(jnp.uint32))
+        found = jnp.where(hit, ptr, found)
+        steps = steps + live.astype(jnp.int32)
+        ptr = jnp.where(live & ~hit, jnp.take(nxt, safe), ptr)
+        return ptr, found, steps
+
+    init = (ptr, jnp.full_like(ptr, -1), jnp.zeros_like(ptr))
+    _, found, steps = jax.lax.fori_loop(0, max_chain, step, init)
+    found_ref[...] = found
+    steps_ref[...] = steps
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_chain", "block_q", "interpret"))
+def hash_probe(heads: jnp.ndarray, keys: jnp.ndarray, nxt: jnp.ndarray,
+               queries: jnp.ndarray, *, max_chain: int = 32,
+               block_q: int = 256, interpret: bool = False
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Probe all queries.  Returns (found_idx [q] int32 (-1=miss), steps [q]).
+
+    The table arrays are VMEM-resident per tile: sized for shards that fit
+    (~a few MB); larger tables use the pure-JAX path (``nmp.kvstore``).
+    """
+    nq = queries.shape[0]
+    assert nq % block_q == 0, (nq, block_q)
+    n_blocks = nq // block_q
+
+    found, steps = pl.pallas_call(
+        functools.partial(_probe_kernel, max_chain=max_chain),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(heads.shape, lambda i: (0,)),
+            pl.BlockSpec(keys.shape, lambda i: (0,)),
+            pl.BlockSpec(nxt.shape, lambda i: (0,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(heads, keys, nxt, queries)
+    return found, steps

@@ -1,0 +1,103 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Single entry point per kernel that (a) picks interpret mode automatically on
+non-TPU backends (the container validates on CPU; real TPUs compile the
+kernels), (b) handles padding to block multiples, and (c) falls back to the
+pure-jnp reference for shapes where a kernel constraint cannot be met.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash
+from .hash_probe import hash_probe as _probe
+from .regex_dfa import regex_dfa as _regex
+from .rglru_scan import rglru_scan as _rglru
+from .select_scan import select_scan as _select
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, mult: int, fill=0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, width, constant_values=fill), n
+
+
+def select(table: jnp.ndarray, x, y, *, block_rows: int = 256
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SELECT pushdown hot loop.  Returns (packed [blocks, block, w], counts).
+
+    Padding rows are filled so the predicate rejects them (a = -inf).
+    """
+    fill = jnp.finfo(table.dtype).min if jnp.issubdtype(
+        table.dtype, jnp.floating) else 0
+    padded, n = _pad_rows(table, block_rows, fill)
+    return _select(padded, x, y, block_rows=block_rows,
+                   interpret=_interpret())
+
+
+def regex_match(trans: jnp.ndarray, accept: jnp.ndarray,
+                strings: jnp.ndarray, *, block_rows: int = 256
+                ) -> jnp.ndarray:
+    padded, n = _pad_rows(strings, block_rows)
+    out = _regex(trans, accept, padded, block_rows=block_rows,
+                 interpret=_interpret())
+    return out[:n]
+
+
+def probe(heads: jnp.ndarray, keys: jnp.ndarray, nxt: jnp.ndarray,
+          queries: jnp.ndarray, *, max_chain: int = 32, block_q: int = 256
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    padded, n = _pad_rows(queries, block_q)
+    f, s = _probe(heads, keys, nxt, padded, max_chain=max_chain,
+                  block_q=block_q, interpret=_interpret())
+    return f[:n], s[:n]
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, kv_length=None,
+              block_q: int = 128, block_k: int = 128,
+              use_kernel: bool = True) -> jnp.ndarray:
+    """Attention entry point used by the model layers.
+
+    ``use_kernel=False`` (or shapes not divisible by blocks, or a traced
+    ``kv_length``) routes to the dense reference — which is also what the
+    dry-run lowers, keeping the compiled HLO analyzable without
+    Pallas-on-CPU custom calls.
+    """
+    B, Hq, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if (not use_kernel) or Sq % bq or Sk % bk or kv_length is not None:
+        # large shapes compile the chunked flash-style schedule (memory
+        # bounded); tiny/ragged ones use the dense oracle.
+        if Sq * Sk > 256 * 256 or kv_length is not None:
+            return _ref.chunked_attention(q, k, v, causal=causal,
+                                          window=window, softcap=softcap,
+                                          kv_length=kv_length)
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window, softcap=softcap,
+                                        kv_length=kv_length)
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=bq, block_k=bk, interpret=_interpret())
+
+
+def rglru(x: jnp.ndarray, a: jnp.ndarray, *, chunk: int = 128,
+          block_d: int = 128, use_kernel: bool = True) -> jnp.ndarray:
+    B, S, D = x.shape
+    if (not use_kernel) or S % min(chunk, S) or D % min(block_d, D):
+        return _ref.rglru_scan_ref(x, a)
+    return _rglru(x, a, chunk=chunk, block_d=block_d,
+                  interpret=_interpret())

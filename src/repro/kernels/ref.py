@@ -1,0 +1,233 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth its kernel is tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# select_scan: predicate + in-block compaction (paper Fig. 5 operator)
+# ---------------------------------------------------------------------------
+
+
+def select_scan_ref(table: jnp.ndarray, x: float, y: float,
+                    block_rows: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise SELECT: for each block of ``block_rows`` rows, matches are
+    compacted to the front of the block (zeros after).
+
+    Returns (packed [n_blocks, block_rows, width], counts [n_blocks]).
+    """
+    n, w = table.shape
+    assert n % block_rows == 0
+    blocks = table.reshape(n // block_rows, block_rows, w)
+
+    def per_block(blk):
+        mask = (blk[:, 0] > x) & (blk[:, 1] < y)
+        count = mask.sum(dtype=jnp.int32)
+        order = jnp.argsort(jnp.where(mask, 0, 1), stable=True)
+        packed = jnp.where((jnp.arange(block_rows) < count)[:, None],
+                           blk[order], 0)
+        return packed, count
+
+    return jax.vmap(per_block)(blocks)
+
+
+# ---------------------------------------------------------------------------
+# regex_dfa: table-driven DFA over byte strings (paper Fig. 7 operator)
+# ---------------------------------------------------------------------------
+
+
+def regex_dfa_ref(trans: jnp.ndarray, accept: jnp.ndarray,
+                  strings: jnp.ndarray) -> jnp.ndarray:
+    """[rows] bool: absorbing-accept DFA over NUL-padded rows."""
+    state = jnp.zeros((strings.shape[0],), jnp.int32)
+
+    def step(state, chars):
+        return trans[state, chars.astype(jnp.int32)], None
+
+    final, _ = jax.lax.scan(step, state, strings.T)
+    return accept[final]
+
+
+# ---------------------------------------------------------------------------
+# hash_probe: chained hash-table probe (paper Fig. 6 operator)
+# ---------------------------------------------------------------------------
+
+
+def hash_probe_ref(heads: jnp.ndarray, keys: jnp.ndarray, nxt: jnp.ndarray,
+                   queries: jnp.ndarray, max_chain: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (found_idx [q] int32 (-1 = miss), steps [q] int32)."""
+    n_buckets = heads.shape[0]
+    h = (queries.astype(jnp.uint32) * jnp.uint32(2654435769)) >> jnp.uint32(16)
+    ptr = heads[(h % jnp.uint32(n_buckets)).astype(jnp.int32)]
+    found = jnp.full_like(ptr, -1)
+    steps = jnp.zeros_like(ptr)
+    for _ in range(max_chain):
+        live = (ptr >= 0) & (found < 0)
+        safe = jnp.maximum(ptr, 0)
+        hit = live & (keys[safe] == queries.astype(jnp.uint32))
+        found = jnp.where(hit, ptr, found)
+        steps = steps + live.astype(jnp.int32)
+        ptr = jnp.where(live & ~hit, nxt[safe], ptr)
+    return found, steps
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: blocked attention w/ GQA, causal, window, logit softcap
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        kv_length=None) -> jnp.ndarray:
+    """Dense-softmax oracle.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] with Hq % Hkv == 0 (GQA).
+    window: local attention — key j visible from query i iff i-j < window.
+    softcap: gemma2-style ``cap * tanh(logits / cap)``.
+    kv_length: (traced) number of valid KV positions — the decode path's
+    cache occupancy; queries sit at the END of the valid region.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    Skv = k.shape[2]
+    valid = jnp.asarray(Skv if kv_length is None else kv_length, jnp.int32)
+    qi = jnp.arange(Sq)[:, None] + (valid - Sq)  # queries end-aligned
+    kj = jnp.arange(Skv)[None, :]
+    mask = kj < valid
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(v.dtype)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      kv_length=None,
+                      chunk_q: int = 512, chunk_k: int = 1024
+                      ) -> jnp.ndarray:
+    """Flash-style double-chunked attention in pure jnp + lax.scan.
+
+    This is what the production step functions COMPILE (the Pallas kernel
+    is the TPU-native version of the same schedule): memory is bounded by
+    one (chunk_q x chunk_k) tile per (batch, head), never the full
+    [Sq, Skv] matrix.  GQA is handled by folding the head-repeat factor
+    into the q tensor so KV is never materialized repeated.
+
+    The q-chunk loop body is rematerialized (jax.checkpoint) so AD carries
+    only the online-softmax state between chunks.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    # fall back to dense for ragged shapes (tiny cases / smoke tests).
+    if Sq % cq or Sk % ck:
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, kv_length=kv_length)
+    nq, nk = Sq // cq, Sk // ck
+    scale = D ** -0.5
+    valid = jnp.asarray(Sk if kv_length is None else kv_length, jnp.int32)
+
+    # [B, Hkv, rep, Sq, D] view of q; KV stays un-repeated.
+    q5 = q.reshape(B, Hkv, rep, Sq, D)
+    qs = q5.reshape(B, Hkv, rep, nq, cq, D).transpose(3, 0, 1, 2, 4, 5)
+    ks = k.reshape(B, Hkv, nk, ck, D).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, Hkv, nk, ck, D).transpose(2, 0, 1, 3, 4)
+
+    def q_block(_, qi_blk):
+        qi, qb = qi_blk          # qb: [B, Hkv, rep, cq, D]
+        q_pos = qi * cq + jnp.arange(cq) + (valid - Sq)
+
+        def kv_block(carry, kj_blk):
+            m, l, acc = carry
+            kj, kb, vb = kj_blk
+            k_pos = kj * ck + jnp.arange(ck)
+            lg = jnp.einsum("bhrqd,bhkd->bhrqk", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) * scale
+            if softcap is not None:
+                lg = softcap * jnp.tanh(lg / softcap)
+            mask = (k_pos < valid)[None, :]
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+            lg = jnp.where(mask[None, None, None], lg, -1e30)
+            m2 = jnp.maximum(m, lg.max(axis=-1))
+            alpha = jnp.exp(m - m2)
+            p = jnp.exp(lg - m2[..., None])
+            dead = m2 <= -1e29
+            p = jnp.where(dead[..., None], 0.0, p)
+            alpha = jnp.where(dead, 1.0, alpha)
+            l2 = l * alpha + p.sum(axis=-1)
+            acc2 = (acc * alpha[..., None]
+                    + jnp.einsum("bhrqk,bhkd->bhrqd", p,
+                                 vb.astype(jnp.float32)))
+            return (m2, l2, acc2), None
+
+        init = (jnp.full((B, Hkv, rep, cq), -1e30, jnp.float32),
+                jnp.zeros((B, Hkv, rep, cq), jnp.float32),
+                jnp.zeros((B, Hkv, rep, cq, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(nk), ks, vs))
+        out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_block), None,
+                           (jnp.arange(nq), qs))
+    # outs: [nq, B, Hkv, rep, cq, D] -> [B, Hq, Sq, D]
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sq, D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan: RG-LRU gated linear recurrence (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+
+def rglru_scan_ref(x: jnp.ndarray, a: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t   (per channel).
+
+    x, a: [B, S, D]; returns h: [B, S, D].  The sqrt(1-a^2) input scaling is
+    the RG-LRU normalization (arXiv:2402.19427 eq. 4).
+    """
+    beta = jnp.sqrt(jnp.maximum(1.0 - a.astype(jnp.float32) ** 2, 0.0))
+    gx = beta * x.astype(jnp.float32)
+    init = (jnp.zeros_like(x[:, 0], dtype=jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        at, gxt = inp
+        h = at * h + gxt
+        return h, h
+
+    _, hs = jax.lax.scan(step, init,
+                         (a.astype(jnp.float32).swapaxes(0, 1),
+                          gx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype)

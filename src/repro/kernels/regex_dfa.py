@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: table-driven DFA regex matcher (paper §5.6).
+
+The FPGA engine is one-char-per-cycle, 48 engines in parallel.  TPU-native
+rethink: the DFA transition table (``n_states x 256`` int32, <=64 KiB for 64
+states) lives in VMEM for the whole kernel; a *tile of rows* advances one
+character per ``fori_loop`` step with a vectorized VMEM gather — the row
+dimension is the parallel-engines dimension.  Accept states are absorbing,
+so only the final state is inspected.
+
+Grid: one program per row tile; strings stream HBM -> VMEM tile by tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..nmp.regex import DFA
+
+
+def _dfa_kernel(trans_ref, str_ref, match_ref):
+    trans = trans_ref[...]                       # (n_states, 256) in VMEM
+    chars = str_ref[...]                         # (block_rows, width)
+    block_rows, width = chars.shape
+    flat = trans.reshape(-1)                     # gather-friendly
+
+    def step(i, state):
+        c = chars[:, i].astype(jnp.int32)
+        return jnp.take(flat, state * 256 + c)
+
+    state = jax.lax.fori_loop(0, width, step,
+                              jnp.zeros((block_rows,), jnp.int32))
+    match_ref[...] = state
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def regex_dfa(trans: jnp.ndarray, accept: jnp.ndarray, strings: jnp.ndarray,
+              *, block_rows: int = 256, interpret: bool = False
+              ) -> jnp.ndarray:
+    """Match NUL-padded byte rows against the DFA.
+
+    Args:
+      trans: [n_states, 256] int32 transition table (accepts absorbing).
+      accept: [n_states] bool.
+      strings: [n_rows, width] uint8; n_rows % block_rows == 0.
+
+    Returns [n_rows] bool.
+    """
+    n, w = strings.shape
+    assert n % block_rows == 0, (n, block_rows)
+    n_blocks = n // block_rows
+
+    final = pl.pallas_call(
+        _dfa_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(trans.shape, lambda i: (0, 0)),   # table resident
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(trans, strings)
+    return jnp.asarray(accept)[final]
+
+
+def regex_dfa_from(dfa: DFA, strings: jnp.ndarray, **kw) -> jnp.ndarray:
+    return regex_dfa(jnp.asarray(dfa.transitions), jnp.asarray(dfa.accept),
+                     strings, **kw)

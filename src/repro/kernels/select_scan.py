@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused SELECT scan + MXU compaction (paper §5.4).
+
+The paper's operator streams 128 B rows from FPGA DRAM through a fully-
+pipelined predicate filter into an output FIFO.  The TPU-native rethink:
+
+* rows stream HBM -> VMEM in ``(block_rows, width)`` tiles (BlockSpec);
+* the predicate evaluates on the VPU (one vector op per column);
+* **compaction uses the MXU**: instead of a serial FIFO append (which has no
+  TPU analogue), each tile builds a one-hot permutation matrix
+  ``P[p, r] = (cumsum(mask)[r]-1 == p) & mask[r]`` and computes
+  ``packed = P @ rows`` — a ``(block_rows x block_rows) @ (block_rows x
+  width)`` matmul, turning data-dependent compaction into systolic compute.
+  This is the hardware-adaptation note of DESIGN.md §2 in action.
+
+Grid: one program per row tile.  Outputs per tile: packed rows + match
+count; cross-tile stitching (tiny, count-sized) happens in ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _select_kernel(x_ref, y_ref, tbl_ref, out_ref, cnt_ref):
+    rows = tbl_ref[...]                       # (block_rows, width) in VMEM
+    x = x_ref[0]
+    y = y_ref[0]
+    mask = (rows[:, 0] > x) & (rows[:, 1] < y)
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1          # target slot
+    block_rows = rows.shape[0]
+    # one-hot permutation (block_rows x block_rows), MXU-friendly.
+    slots = jax.lax.broadcasted_iota(jnp.int32, (block_rows, block_rows), 0)
+    srcs = pos[None, :]
+    perm = ((slots == srcs) & mask[None, :]).astype(rows.dtype)
+    out_ref[0] = jax.lax.dot(perm, rows,
+                             precision=jax.lax.Precision.HIGHEST)
+    cnt_ref[0] = mask.sum(dtype=jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret"))
+def select_scan(table: jnp.ndarray, x, y, *, block_rows: int = 256,
+                interpret: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise SELECT over ``table [n_rows, width]``.
+
+    Returns (packed [n_blocks, block_rows, width], counts [n_blocks]).
+    ``n_rows`` must be a multiple of ``block_rows``; ``width`` should be a
+    multiple of 128 on real TPUs (lane alignment) — unconstrained in
+    interpret mode.
+    """
+    n, w = table.shape
+    assert n % block_rows == 0, (n, block_rows)
+    n_blocks = n // block_rows
+    xv = jnp.asarray([x], table.dtype)
+    yv = jnp.asarray([y], table.dtype)
+
+    packed, counts = pl.pallas_call(
+        _select_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                  # x scalar
+            pl.BlockSpec((1,), lambda i: (0,)),                  # y scalar
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_rows, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, block_rows, w), table.dtype),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xv, yv, table)
+    return packed.reshape(n_blocks, block_rows, w), counts

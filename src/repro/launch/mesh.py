@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips; the ``pod``
+axis carries only DP gradient all-reduce (or pipeline hops) over DCN.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before any jax init; smoke
+tests and benches must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Whatever devices exist, folded into the requested axes (tests/CPU)."""
+    n = len(jax.devices())
+    shape = [1] * (len(axes) - 1) + [n]
+    return Mesh(np.array(jax.devices()).reshape(shape), axes)
+
+
+def mesh_devices(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

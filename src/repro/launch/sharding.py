@@ -1,0 +1,176 @@
+"""Sharding rules: param/activation PartitionSpecs for the production mesh.
+
+Strategy (DESIGN.md §5):
+
+* **TP** over ``model``: attention heads, FFN width, MoE experts, vocab.
+* **FSDP** over ``data``: the other big dim of every matmul weight (and the
+  matching optimizer moments) — required to fit nemotron-340b.
+* **DP** over ``pod`` (multi-pod): parameters replicated across pods (DCN is
+  ~10x slower than ICI; FSDP all-gathers stay intra-pod on ICI, only the
+  gradient all-reduce crosses pods).  Activations shard batch over
+  ``("pod", "data")``.
+
+Rules are keyed by parameter NAME (the leaf key in the param pytree), with
+the leading stacked-layer dimension handled by position: subtrees under
+``layers`` / ``cross`` / ``encoder`` carry a leading ``n_super`` dim that is
+never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name -> spec WITHOUT the stacked-layer dim (prepended when stacked).
+_RULES: Dict[str, P] = {
+    # embeddings / head
+    "tok": P("model", None),            # vocab sharded
+    "head": P(None, "model"),
+    # attention
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    # dense mlp
+    "w1": P("data", "model"),
+    "w3": P("data", "model"),
+    "w2": P("model", "data"),
+    # rg-lru
+    "w_x": P("data", "model"),
+    "w_gate": P("data", "model"),
+    "w_a": P("data", "model"),
+    "w_i": P("data", "model"),
+    "w_out": P("model", "data"),
+    "conv_w": P(None, "model"),
+    # rwkv
+    "w_r": P("data", "model"),
+    "w_k": P("data", "model"),
+    "w_v": P("data", "model"),
+    "w_w": P("data", "model"),
+    "w_o": P("model", "data"),
+    "cm_k": P("data", "model"),
+    "cm_v": P("model", "data"),
+    "cm_r": P("data", "model"),
+}
+
+#: MoE expert weights: experts over model (EP), d_model over data (FSDP).
+_MOE_RULES: Dict[str, P] = {
+    "router": P("data", None),
+    "w1": P("model", "data", None),
+    "w3": P("model", "data", None),
+    "w2": P("model", None, "data"),
+}
+
+_STACKED_SUBTREES = ("layers", "cross", "encoder")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(str(e.idx))
+        else:
+            names.append(str(e))
+    return tuple(names)
+
+
+def param_spec(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    # weight-only-quantized leaves: {"q": int8, "s": scales} — "q" shards
+    # like its parent weight; "s" (shape = parent minus the contraction
+    # dim) takes the parent spec with the -2 axis dropped.
+    quant_scale = False
+    if name in ("q", "s") and len(names) >= 2:
+        quant_scale = name == "s"
+        name = names[-2]
+    stacked = any(n in _STACKED_SUBTREES for n in names[:-1])
+    base_ndim = leaf.ndim - (1 if stacked else 0) + (1 if quant_scale else 0)
+    in_moe = any(n == "ffn" for n in names) and name in _MOE_RULES and (
+        base_ndim == len(_MOE_RULES[name]))
+    rules = _MOE_RULES if in_moe else _RULES
+    spec = rules.get(name)
+    if spec is None or len(spec) != base_ndim:
+        # norms, gates, scalars, biases: replicate.
+        spec = P(*([None] * base_ndim))
+    if quant_scale:
+        spec = P(*(list(spec)[:-2] + [spec[-1]]))
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def _remap_fsdp(spec: P) -> P:
+    """§Perf sharding mode for small models: retire the TP axis (which
+    costs 2 psums/layer for activations that are TINY relative to a
+    256-way-split weight) and fold ``model`` into the FSDP axis instead —
+    same mesh, different role assignment.  "model" -> dropped,
+    "data" -> ("data", "model")."""
+    out = []
+    for e in spec:
+        if e == "model":
+            out.append(None)
+        elif e == "data":
+            out.append(("data", "model"))
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def _remap_serve(spec: P) -> P:
+    """Serving layout: weights TP-sharded over ``model`` but REPLICATED
+    across ``data`` (decode must not all-gather weights every token; the
+    batch shards over data instead)."""
+    return P(*(None if e == "data" else e for e in spec))
+
+
+def param_specs(params, mode: str = "2d") -> Any:
+    """Pytree of PartitionSpecs.  mode: "2d" (TP x FSDP, default for
+    training), "serve" (TP only; replicated over data — the decode
+    layout), or "fsdp" (pure DP+FSDP over both mesh axes — small-model
+    §Perf mode)."""
+    specs = jax.tree_util.tree_map_with_path(param_spec, params)
+    if mode == "fsdp":
+        specs = jax.tree_util.tree_map(
+            _remap_fsdp, specs, is_leaf=lambda x: isinstance(x, P))
+    elif mode == "serve":
+        specs = jax.tree_util.tree_map(
+            _remap_serve, specs, is_leaf=lambda x: isinstance(x, P))
+    return specs
+
+
+def param_shardings(mesh: Mesh, params, mode: str = "2d") -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mode))
+
+
+def dp_axes(mesh: Mesh, mode: str = "2d") -> Tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if mode == "fsdp":
+        axes = axes + ("model",)
+    return axes
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2, mode: str = "2d") -> P:
+    """Token batches: batch dim over all DP axes, rest replicated."""
+    return P(dp_axes(mesh, mode), *([None] * (ndim - 1)))
+
+
+def act_spec(mesh: Mesh) -> P:
+    """[B, S, D] activations: batch over DP, d_model over model (SP-ish)."""
+    return P(dp_axes(mesh), None, "model")
+
+
+def kv_cache_spec(mesh: Mesh, n_kv_heads: int, stacked: bool = True) -> P:
+    """KV caches [L?, B, Hkv, S, hd]: batch over DP; heads over model when
+    divisible, else the SEQUENCE dim over model (sequence parallelism for
+    MQA long-context decode)."""
+    tp = mesh.shape["model"]
+    if n_kv_heads % tp == 0:
+        spec = (dp_axes(mesh), "model", None, None)
+    else:
+        spec = (dp_axes(mesh), None, "model", None)
+    return P(None, *spec) if stacked else P(*spec)

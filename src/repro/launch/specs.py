@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  ``input_specs(cfg, cell)`` is what the dry-run
+lowers against."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ShapeCell
+from ..models import init_decode_state, init_params
+from ..models.config import ModelConfig
+from ..optim import adamw
+from ..train.train_step import TrainState
+
+
+def _sds(tree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return _sds(jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.key(0)))
+
+
+def train_state_specs(cfg: ModelConfig) -> TrainState:
+    p = params_specs(cfg)
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    return TrainState(
+        params=p,
+        opt=adamw.OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                           m=f32(p), v=f32(p)),
+        data_step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B, S = cell.global_batch, cell.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+           "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.encoder is not None:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16
+            if cfg.dtype == "bfloat16" else jnp.float32)
+    return out
+
+
+def decode_state_sds(cfg: ModelConfig, batch: int, max_seq: int) -> Any:
+    return _sds(jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_seq)))
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell
+                       ) -> Tuple[Any, Any, Any, Any]:
+    """(params, token, index, state) ShapeDtypeStructs for serve_step."""
+    B = cell.global_batch
+    return (params_specs(cfg),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            decode_state_sds(cfg, B, cell.seq_len))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Everything the cell's step function takes, as SDS."""
+    if cell.kind == "train":
+        return {"state": train_state_specs(cfg),
+                "batch": batch_specs(cfg, cell)}
+    if cell.kind == "prefill":
+        b = batch_specs(cfg, cell)
+        b.pop("targets")
+        return {"params": params_specs(cfg), "batch": b}
+    if cell.kind == "decode":
+        p, tok, idx, st = decode_input_specs(cfg, cell)
+        return {"params": p, "token": tok, "index": idx, "state": st}
+    raise ValueError(cell.kind)

@@ -1,0 +1,6 @@
+"""Model zoo: composable layer library + assembly for the 10 assigned
+architecture families (dense/moe/hybrid/ssm/encdec/vlm)."""
+
+from .config import EncoderConfig, ModelConfig, MoEConfig  # noqa: F401
+from .transformer import (decode_step, forward, init_decode_state,  # noqa
+                          init_params, loss_fn)

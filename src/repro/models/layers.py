@@ -1,0 +1,219 @@
+"""Shared model layers: RMSNorm, RoPE, GQA attention (full/local/softcap),
+MLP variants, embeddings.  Pure functions over explicit param pytrees so the
+whole stack jits/shards cleanly and layer weights can be stacked and scanned.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, fan_in: int, shape, dtype) -> jnp.ndarray:
+    scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul entry point: transparent weight-only int8 (serve.quantize)
+# ---------------------------------------------------------------------------
+
+
+def mm(x: jnp.ndarray, w) -> jnp.ndarray:
+    """x @ w where w is a dense array OR a {"q": int8, "s": f32} quantized
+    weight (dequant fused into the matmul epilogue)."""
+    if isinstance(w, dict):
+        return (x @ w["q"].astype(x.dtype)) * w["s"].astype(x.dtype)
+    return x @ w
+
+
+def qeinsum(spec: str, x: jnp.ndarray, w) -> jnp.ndarray:
+    """einsum with optional quantized weight (scale over the last dim)."""
+    if isinstance(w, dict):
+        return jnp.einsum(spec, x, w["q"].astype(x.dtype)) \
+            * w["s"].astype(x.dtype)
+    return jnp.einsum(spec, x, w)
+
+
+# ---------------------------------------------------------------------------
+# normalization / rotary
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(
+        jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float) -> jnp.ndarray:
+    """x: [B, H, S, D] with D even; positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # B,1,S,half
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(
+        jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA / MQA / local / softcap / qk-norm)
+# ---------------------------------------------------------------------------
+
+
+def attn_params(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (d, h * hd), dtype),
+        "wk": dense_init(ks[1], d, (d, hkv * hd), dtype),
+        "wv": dense_init(ks[2], d, (d, hkv * hd), dtype),
+        "wo": dense_init(ks[3], h * hd, (h * hd, d), dtype),
+        "ln": jnp.zeros((d,), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attention_block(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray, *, window: Optional[int],
+                    kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    cache_index: Optional[jnp.ndarray] = None,
+                    causal: bool = True, use_kernel: bool = False,
+                    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    ) -> Tuple[jnp.ndarray,
+                               Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """Pre-norm attention with residual.
+
+    kv_cache: (k, v) [B, Hkv, S_max, hd] — decode path updates at
+    ``cache_index`` and attends over the valid prefix (kv_length masking).
+    cross_kv: precomputed encoder K/V for cross-attention (whisper decoder).
+    Returns (y, new_kv_cache).
+    """
+    B, S, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    kv_length = None
+    xn = rms_norm(x, p["ln"])
+    q = mm(xn, p["wq"]).reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        new_cache = None
+        causal_ = False
+    else:
+        k = mm(xn, p["wk"]).reshape(B, S, hkv, hd).transpose(0, 2, 1, 3)
+        v = mm(xn, p["wv"]).reshape(B, S, hkv, hd).transpose(0, 2, 1, 3)
+        if cfg.qk_norm:
+            k = rms_norm(k, p["k_norm"])
+        k = rope(k, positions, cfg.rope_theta)
+        causal_ = causal
+        if kv_cache is not None:
+            ck, cv = kv_cache
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, 0, cache_index, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, 0, cache_index, 0))
+            k, v, new_cache = ck, cv, (ck, cv)
+            kv_length = cache_index + S
+        else:
+            new_cache = None
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    if cross_kv is None:
+        q = rope(q, positions, cfg.rope_theta)
+
+    o = kops.attention(q, k, v, causal=causal_, window=window,
+                       softcap=cfg.attn_softcap, kv_length=kv_length,
+                       use_kernel=use_kernel)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, h * hd)
+    return x + mm(o, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None
+               ) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"ln": jnp.zeros((d,), dtype),
+         "w1": dense_init(ks[0], d, (d, f), dtype),
+         "w2": dense_init(ks[1], f, (f, d), dtype)}
+    if cfg.mlp == "swiglu":
+        p["w3"] = dense_init(ks[2], d, (d, f), dtype)
+    return p
+
+
+def mlp_block(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    xn = rms_norm(x, p["ln"])
+    if cfg.mlp == "swiglu":
+        hmid = jax.nn.silu(mm(xn, p["w1"]).astype(jnp.float32)).astype(
+            x.dtype) * mm(xn, p["w3"])
+    elif cfg.mlp == "relu2":
+        # nemotron-4: squared ReLU
+        r = jax.nn.relu(mm(xn, p["w1"]))
+        hmid = r * r
+    else:
+        hmid = jax.nn.gelu(mm(xn, p["w1"]).astype(jnp.float32)).astype(x.dtype)
+    return x + mm(hmid, p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_params(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    vp = cfg.padded_vocab
+    p = {"tok": dense_init(ks[0], cfg.d_model, (vp, cfg.d_model), dtype),
+         "final_ln": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], cfg.d_model, (cfg.d_model, vp), dtype)
+    return p
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["tok"][tokens]
+
+
+def logits(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """LM head over the PADDED vocab; pad columns masked to -inf (they are
+    unreachable targets, so loss/argmax semantics match the true vocab)."""
+    xn = rms_norm(x, p["final_ln"])
+    if cfg.tie_embeddings:
+        out = xn @ p["tok"].T
+    else:
+        out = mm(xn, p["head"])
+    out = out.astype(jnp.float32)
+    if cfg.logit_softcap is not None:
+        out = cfg.logit_softcap * jnp.tanh(out / cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        out = jnp.where(pad, -1e30, out)
+    return out

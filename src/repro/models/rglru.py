@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin, arXiv:2402.19427).
+
+The recurrence:  a_t = exp(-c * softplus(Lambda) * sigmoid(x W_a))
+                 h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with an input gate i_t and a linear output projection, wrapped in the
+Griffin "recurrent block": two parallel branches (gate branch with GeLU,
+recurrence branch with a temporal-conv stub folded into the input proj),
+multiplied and projected out.  The temporal conv4 of the original is
+implemented as a width-4 causal depthwise conv.
+
+Train path: full-sequence scan (Pallas ``rglru_scan`` kernel or the jnp
+reference).  Decode path: O(1) recurrent state update per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ModelConfig
+from .layers import Params, dense_init, rms_norm
+from .layers import mm as L_mm
+
+C_FACTOR = 8.0
+
+
+def rglru_params(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    dr = d  # recurrence width
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_x": dense_init(ks[0], d, (d, dr), dtype),       # recurrence branch
+        "w_gate": dense_init(ks[1], d, (d, dr), dtype),    # gelu gate branch
+        "conv_w": dense_init(ks[2], 4, (4, dr), dtype),    # causal conv4
+        "w_a": dense_init(ks[3], dr, (dr, dr), dtype),     # recurrence gate
+        "w_i": dense_init(ks[4], dr, (dr, dr), dtype),     # input gate
+        "lam": jnp.full((dr,), 2.0, jnp.float32),          # Lambda param
+        "w_out": dense_init(ks[5], dr, (dr, d), dtype),
+    }
+
+
+def _gates(p: Params, xr: jnp.ndarray):
+    """Recurrence/input gates for pre-activation xr [..., dr]."""
+    ra = jax.nn.sigmoid(L_mm(xr, p["w_a"]).astype(jnp.float32))
+    lam = jax.nn.softplus(p["lam"])
+    a = jnp.exp(-C_FACTOR * lam * ra)                      # [., dr] in (0,1)
+    i = jax.nn.sigmoid(L_mm(xr, p["w_i"]).astype(jnp.float32))
+    return a, i
+
+
+def _causal_conv4(xr: jnp.ndarray, w: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv, width 4.  xr: [B, S, dr]; state: [B, 3, dr]."""
+    B, S, dr = xr.shape
+    if state is None:
+        state = jnp.zeros((B, 3, dr), xr.dtype)
+    xpad = jnp.concatenate([state, xr], axis=1)            # [B, S+3, dr]
+    out = sum(xpad[:, i:i + S] * w[i] for i in range(4))
+    return out, xpad[:, -3:]
+
+
+def rglru_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                state: Optional[Dict[str, jnp.ndarray]] = None,
+                use_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """x: [B, S, d].  ``state`` (decode): {"h": [B, dr], "conv": [B, 3, dr]}.
+
+    Returns (y, new_state) — new_state is None in train mode.
+    """
+    B, S, d = x.shape
+    xn = rms_norm(x, p["ln"])
+    gate = jax.nn.gelu(L_mm(xn, p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    xr = L_mm(xn, p["w_x"])
+    xr, conv_state = _causal_conv4(
+        xr, p["conv_w"], None if state is None else state["conv"])
+    a, i = _gates(p, xr)
+    gx = (i * xr.astype(jnp.float32)).astype(x.dtype)
+
+    if state is None:
+        h = kops.rglru(gx, a.astype(gx.dtype), use_kernel=use_kernel)
+        new_state = None
+    else:
+        beta = jnp.sqrt(jnp.maximum(1.0 - a[:, 0] ** 2, 0.0))
+        h1 = (a[:, 0] * state["h"].astype(jnp.float32)
+              + beta * gx[:, 0].astype(jnp.float32))
+        h = h1[:, None].astype(x.dtype)
+        new_state = {"h": h1, "conv": conv_state}
+
+    y = L_mm(h * gate, p["w_out"])
+    return x + y, new_state
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    dr = cfg.d_model
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, 3, dr), jnp.bfloat16
+                              if cfg.dtype == "bfloat16" else jnp.float32)}

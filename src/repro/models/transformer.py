@@ -1,0 +1,488 @@
+"""Model assembly: embeddings + scanned superlayers + head, for every
+assigned family (dense / moe / hybrid / ssm / encdec / vlm).
+
+Layer weights are STACKED over superlayers and iterated with ``lax.scan`` —
+one HLO while-loop regardless of depth, which keeps 96-layer dry-run
+compiles tractable and is the standard production pattern (MaxText).  A
+*superlayer* is one period of ``cfg.block_pattern`` (e.g. gemma2's
+(local, global) pair, recurrentgemma's (rg, rg, local) triple), so
+heterogeneous stacks still scan uniformly.
+
+Three entry points:
+  ``init_params``   — param pytree (stacked layers).
+  ``forward``       — full-sequence logits (+ MoE aux loss): train/prefill.
+  ``decode_step``   — single-token step over KV caches / recurrent states.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from .moe import moe_block, moe_params
+from .rglru import rglru_block, rglru_init_state, rglru_params
+from .rwkv6 import rwkv_block, rwkv_init_state, rwkv_params
+
+Params = Dict[str, Any]
+
+#: Activation PartitionSpec applied at every superlayer boundary (set by the
+#: launch/train/serve builders before tracing; None = no constraint, e.g.
+#: smoke tests on one device).  Without this, XLA's propagation can lose the
+#: batch sharding inside the layer scan and replicate multi-GB activations.
+_ACT_SPEC: Any = None
+
+
+def set_activation_spec(spec) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def _constrain(x):
+    if _ACT_SPEC is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    except (RuntimeError, ValueError):
+        # no mesh context / mismatched mesh (single-device smoke paths)
+        return x
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _slot_params(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind in ("ga", "la"):
+        mixer = L.attn_params(k1, cfg, dtype)
+    elif kind == "rg":
+        mixer = rglru_params(k1, cfg, dtype)
+    elif kind == "rwkv":
+        mixer = rwkv_params(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    p = {"mixer": mixer}
+    if kind == "rwkv":
+        return p  # rwkv block embeds its own channel-mix FFN
+    if cfg.moe is not None:
+        p["ffn"] = moe_params(k2, cfg, dtype)
+    else:
+        p["ffn"] = L.mlp_params(k2, cfg, dtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg)
+    kE, kL, kX = jax.random.split(key, 3)
+    params: Params = {"embed": L.embed_params(kE, cfg, dtype)}
+
+    n_super = cfg.n_superlayers
+    layer_keys = jax.random.split(kL, n_super)
+    slots = []
+    for li in range(n_super):
+        sk = jax.random.split(layer_keys[li], len(cfg.block_pattern))
+        slots.append({f"slot{j}": _slot_params(sk[j], cfg, kind, dtype)
+                      for j, kind in enumerate(cfg.block_pattern)})
+    params["layers"] = _stack(slots)
+
+    if cfg.tail_pattern:
+        tk = jax.random.split(jax.random.fold_in(kL, 777),
+                              len(cfg.tail_pattern))
+        params["tail"] = {
+            f"tail{j}": _slot_params(tk[j], cfg, kind, dtype)
+            for j, kind in enumerate(cfg.tail_pattern)}
+
+    if cfg.encoder is not None:
+        ek = jax.random.split(kX, cfg.encoder.n_layers + 1)
+        enc_layers = []
+        for li in range(cfg.encoder.n_layers):
+            a, b = jax.random.split(ek[li])
+            enc_layers.append({"attn": L.attn_params(a, cfg, dtype),
+                               "ffn": L.mlp_params(b, cfg, dtype)})
+        params["encoder"] = {"layers": _stack(enc_layers),
+                             "final_ln": jnp.zeros((cfg.d_model,), dtype)}
+        # cross-attention params per decoder superlayer
+        xk = jax.random.split(ek[-1], n_super)
+        params["cross"] = _stack(
+            [L.attn_params(k, cfg, dtype) for k in xk])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper tower; frontend stubbed — inputs are frame embeddings)
+# ---------------------------------------------------------------------------
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray,
+           use_kernel: bool = False) -> jnp.ndarray:
+    pos = jnp.arange(frames.shape[1])
+
+    def layer(x, p):
+        x, _ = L.attention_block(p["attn"], cfg, x, pos, window=None,
+                                 causal=False, use_kernel=use_kernel)
+        x = L.mlp_block(p["ffn"], cfg, x)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, frames.astype(_dtype(cfg)),
+                        params["encoder"]["layers"])
+    return L.rms_norm(x, params["encoder"]["final_ln"])
+
+
+def _cross_kv(cross_p: Params, cfg: ModelConfig, enc: jnp.ndarray):
+    """Precompute per-superlayer encoder K/V (prefill-time, cached)."""
+    B, T, d = enc.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+
+    def one(p):
+        k = L.mm(enc, p["wk"]).reshape(B, T, hkv, hd).transpose(0, 2, 1, 3)
+        v = L.mm(enc, p["wv"]).reshape(B, T, hkv, hd).transpose(0, 2, 1, 3)
+        return k, v
+
+    return jax.vmap(one)(cross_p)  # stacked [n_super, ...]
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frames: Optional[jnp.ndarray] = None,
+            use_kernel: bool = False, last_only: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: [B, S] -> (logits [B, S, V] float32, aux loss scalar).
+
+    ``last_only=True`` (serving prefill): compute the LM head for the final
+    position only — materializing [B, S, V] logits at 32k prefill would be
+    terabytes."""
+    x, aux = _forward_body(params, cfg, tokens, frames, use_kernel)
+    if last_only:
+        x = x[:, -1:]
+    return L.logits(params["embed"], cfg, x), aux
+
+
+def _forward_body(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  frames: Optional[jnp.ndarray] = None,
+                  use_kernel: bool = False
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    cfg_pat = cfg.block_pattern
+    x = L.embed(params["embed"], tokens).astype(_dtype(cfg))
+    pos = jnp.arange(tokens.shape[1])
+
+    cross = None
+    if cfg.encoder is not None:
+        assert frames is not None, "enc-dec model needs encoder frames"
+        enc = encode(params, cfg, frames, use_kernel)
+        cross = _cross_kv(params["cross"], cfg, enc)
+
+    def superlayer(carry, scanned):
+        x, aux = carry
+        x = _constrain(x)
+        lp = scanned["layers"]
+        for j, kind in enumerate(cfg_pat):
+            p = lp[f"slot{j}"]
+            if kind in ("ga", "la"):
+                x, _ = L.attention_block(
+                    p["mixer"], cfg, x, pos,
+                    window=cfg.window if kind == "la" else None,
+                    use_kernel=use_kernel)
+            elif kind == "rg":
+                x, _ = rglru_block(p["mixer"], cfg, x, use_kernel=use_kernel)
+            elif kind == "rwkv":
+                x, _ = rwkv_block(p["mixer"], cfg, x)
+            if kind != "rwkv":
+                if cfg.moe is not None:
+                    x, a = moe_block(p["ffn"], cfg, x)
+                    aux = aux + a
+                else:
+                    x = L.mlp_block(p["ffn"], cfg, x)
+        if scanned["cross"] is not None:
+            x, _ = L.attention_block(scanned["cross"], cfg, x, pos,
+                                     window=None, use_kernel=use_kernel,
+                                     cross_kv=scanned["cross_kv"])
+        return (x, aux), None
+
+    body = superlayer
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(superlayer, policy=policy)
+
+    scanned = {"layers": params["layers"],
+               "cross": params.get("cross"),
+               "cross_kv": cross}
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               scanned)
+
+    # unscanned tail layers (pattern remainder, e.g. recurrentgemma).
+    for j, kind in enumerate(cfg.tail_pattern):
+        p = params["tail"][f"tail{j}"]
+        if kind in ("ga", "la"):
+            x, _ = L.attention_block(
+                p["mixer"], cfg, x, pos,
+                window=cfg.window if kind == "la" else None,
+                use_kernel=use_kernel)
+        elif kind == "rg":
+            x, _ = rglru_block(p["mixer"], cfg, x, use_kernel=use_kernel)
+        elif kind == "rwkv":
+            x, _ = rwkv_block(p["mixer"], cfg, x)
+        if kind != "rwkv":
+            if cfg.moe is not None:
+                x, a = moe_block(p["ffn"], cfg, x)
+                aux = aux + a
+            else:
+                x = L.mlp_block(p["ffn"], cfg, x)
+
+    return x, aux
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   frames: Optional[jnp.ndarray] = None,
+                   use_kernel: bool = False):
+    """Forward up to the final hidden states (no LM head).  Identical body
+    to ``forward``; kept separate so the loss can chunk the head."""
+    # delegate via a head-less call: forward() computes the head on x, so we
+    # re-run its body here.  (Shared helper to avoid drift.)
+    return _forward_body(params, cfg, tokens, frames, use_kernel)
+
+
+def _chunk_nll(embed_p, cfg: ModelConfig, x: jnp.ndarray,
+               targets: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
+    """Token NLL without materializing [B, S, V] logits: scan over sequence
+    chunks; inside a chunk the target logit is taken with a one-hot einsum
+    (vocab stays sharded — no cross-shard gather), and the chunk body is
+    rematerialized so AD keeps only the running sum."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        lg = L.logits(embed_p, cfg, x)
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        return -jnp.take_along_axis(lp, targets[..., None],
+                                    axis=-1)[..., 0].mean()
+    nc = S // chunk
+    xs = x.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    ts = targets.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xc, tc = inp
+        lg = L.logits(embed_p, cfg, xc)               # [B, chunk, Vp] f32
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        onehot = jax.nn.one_hot(tc, cfg.padded_vocab, dtype=lg.dtype)
+        tgt = jnp.einsum("bcv,bcv->bc", lg, onehot)
+        return acc + (lse - tgt).sum(), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros(()), (xs, ts))
+    return total / (B * S)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            targets: jnp.ndarray, frames: Optional[jnp.ndarray] = None,
+            use_kernel: bool = False) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    x, aux = forward_hidden(params, cfg, tokens, frames, use_kernel)
+    nll = _chunk_nll(params["embed"], cfg, x, targets)
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (single token over caches / recurrent states)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    """Stacked per-superlayer caches keyed by slot kind."""
+    dtype = _dtype(cfg)
+    n_super = cfg.n_superlayers
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    state: Params = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        key = f"slot{j}"
+        if kind == "ga":
+            shape = (n_super, batch, hkv, max_seq, hd)
+            state[key] = {"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)}
+        elif kind == "la":
+            w = min(cfg.window or max_seq, max_seq)
+            shape = (n_super, batch, hkv, w, hd)
+            state[key] = {"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)}
+        elif kind == "rg":
+            s = rglru_init_state(cfg, batch)
+            state[key] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n_super,) + x.shape), s)
+        elif kind == "rwkv":
+            s = rwkv_init_state(cfg, batch)
+            state[key] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n_super,) + x.shape), s)
+    tail: Params = {}
+    for j, kind in enumerate(cfg.tail_pattern):
+        key = f"tail{j}"
+        if kind == "ga":
+            shape = (batch, hkv, max_seq, hd)
+            tail[key] = {"k": jnp.zeros(shape, dtype),
+                         "v": jnp.zeros(shape, dtype)}
+        elif kind == "la":
+            w = min(cfg.window or max_seq, max_seq)
+            tail[key] = {"k": jnp.zeros((batch, hkv, w, hd), dtype),
+                         "v": jnp.zeros((batch, hkv, w, hd), dtype)}
+        elif kind == "rg":
+            tail[key] = rglru_init_state(cfg, batch)
+        elif kind == "rwkv":
+            tail[key] = rwkv_init_state(cfg, batch)
+    if tail:
+        state["tail"] = tail
+    return state
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                index: jnp.ndarray, state: Params,
+                cross: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step.
+
+    token: [B] int32; index: [] int32 current position (cache occupancy).
+    Local-attention slots use a ring buffer of size ``window`` (sub-quadratic
+    memory — what makes long_500k feasible for hybrid/ssm archs).
+    Returns (logits [B, V], new_state).
+    """
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None]).astype(_dtype(cfg))
+    pos = jnp.full((1,), index, jnp.int32)
+
+    def superlayer(x, scanned):
+        x = _constrain(x)
+        lp, st, cr = scanned["layers"], scanned["state"], scanned["cross"]
+        new_st = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            p = lp[f"slot{j}"]
+            if kind == "ga":
+                cache = (st[f"slot{j}"]["k"], st[f"slot{j}"]["v"])
+                x, (ck, cv) = L.attention_block(
+                    p["mixer"], cfg, x, pos, window=None, kv_cache=cache,
+                    cache_index=index)
+                new_st[f"slot{j}"] = {"k": ck, "v": cv}
+            elif kind == "la":
+                w = st[f"slot{j}"]["k"].shape[2]
+                ring = index % w
+                cache = (st[f"slot{j}"]["k"], st[f"slot{j}"]["v"])
+                # ring-buffer update; window mask handled via positions
+                x, (ck, cv) = _ring_attention(p["mixer"], cfg, x, pos,
+                                              cache, ring, index)
+                new_st[f"slot{j}"] = {"k": ck, "v": cv}
+            elif kind == "rg":
+                x, s2 = rglru_block(p["mixer"], cfg, x, state=st[f"slot{j}"])
+                new_st[f"slot{j}"] = s2
+            elif kind == "rwkv":
+                x, s2 = rwkv_block(p["mixer"], cfg, x, state=st[f"slot{j}"])
+                new_st[f"slot{j}"] = s2
+            if kind != "rwkv":
+                if cfg.moe is not None:
+                    x, _ = moe_block(p["ffn"], cfg, x)
+                else:
+                    x = L.mlp_block(p["ffn"], cfg, x)
+        if cr is not None:
+            x, _ = L.attention_block(scanned["cross_p"], cfg, x, pos,
+                                     window=None, cross_kv=cr)
+        return x, new_st
+
+    scan_state = {k: v for k, v in state.items() if k != "tail"}
+    scanned = {"layers": params["layers"], "state": scan_state,
+               "cross": cross, "cross_p": params.get("cross")}
+    x, new_state = jax.lax.scan(superlayer, x, scanned)
+
+    if cfg.tail_pattern:
+        new_tail = {}
+        for j, kind in enumerate(cfg.tail_pattern):
+            p = params["tail"][f"tail{j}"]
+            st = state["tail"][f"tail{j}"]
+            if kind == "ga":
+                x, (ck, cv) = L.attention_block(
+                    p["mixer"], cfg, x, pos, window=None,
+                    kv_cache=(st["k"], st["v"]), cache_index=index)
+                new_tail[f"tail{j}"] = {"k": ck, "v": cv}
+            elif kind == "la":
+                w = st["k"].shape[2]
+                x, (ck, cv) = _ring_attention(p["mixer"], cfg, x, pos,
+                                              (st["k"], st["v"]),
+                                              index % w, index)
+                new_tail[f"tail{j}"] = {"k": ck, "v": cv}
+            elif kind == "rg":
+                x, s2 = rglru_block(p["mixer"], cfg, x, state=st)
+                new_tail[f"tail{j}"] = s2
+            elif kind == "rwkv":
+                x, s2 = rwkv_block(p["mixer"], cfg, x, state=st)
+                new_tail[f"tail{j}"] = s2
+            if kind != "rwkv":
+                if cfg.moe is not None:
+                    x, _ = moe_block(p["ffn"], cfg, x)
+                else:
+                    x = L.mlp_block(p["ffn"], cfg, x)
+        new_state["tail"] = new_tail
+
+    return L.logits(params["embed"], cfg, x)[:, 0], new_state
+
+
+def _ring_attention(p, cfg: ModelConfig, x, pos, cache, ring, index):
+    """Sliding-window decode with a ring-buffer KV cache.
+
+    The newest entry overwrites slot ``index % w``.  Validity: all slots are
+    valid once index >= w; before that only the first ``index+1``.  Window
+    semantics are exact because the buffer holds exactly the last ``w``
+    positions.
+    """
+    from ..kernels import ops as kops
+    B, S, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    xn = L.rms_norm(x, p["ln"])
+    q = L.mm(xn, p["wq"]).reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    k = L.mm(xn, p["wk"]).reshape(B, S, hkv, hd).transpose(0, 2, 1, 3)
+    v = L.mm(xn, p["wv"]).reshape(B, S, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+        k = L.rms_norm(k, p["k_norm"])
+    q = L.rope(q, pos, cfg.rope_theta)
+    k = L.rope(k, pos, cfg.rope_theta)
+    ck, cv = cache
+    w = ck.shape[2]
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                      (0, 0, ring, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                      (0, 0, ring, 0))
+    # positions of ring slots (for masking): slot s holds absolute position
+    # index - ((ring - s) mod w); all visible (window == buffer size).
+    valid = jnp.minimum(index + 1, w)
+    # order-independence: softmax over an unordered set — mask invalid slots.
+    slot = jnp.arange(w)
+    dist = (ring - slot) % w          # age of each slot
+    mask_valid = dist < valid
+    logits_mask = jnp.where(mask_valid, 0.0, -1e30)
+    o = _masked_attn(q, ck, cv, logits_mask, cfg)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, h * hd)
+    return x + L.mm(o, p["wo"]), (ck, cv)
+
+
+def _masked_attn(q, k, v, logits_bias, cfg):
+    rep = q.shape[1] // k.shape[1]
+    kk = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    qq = q.astype(jnp.float32)
+    lg = jnp.einsum("bhqd,bhkd->bhqk", qq, kk) * (q.shape[-1] ** -0.5)
+    if cfg.attn_softcap is not None:
+        lg = cfg.attn_softcap * jnp.tanh(lg / cfg.attn_softcap)
+    lg = lg + logits_bias[None, None, None, :]
+    pr = jax.nn.softmax(lg, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", pr, vv).astype(q.dtype)

@@ -1,0 +1,9 @@
+"""Near-memory-processing operators (paper §5): SELECT pushdown, KVS
+pointer chasing, and regex filtering — the three workloads ECI runs inside
+its smart memory controller.  Pure-JAX implementations here; the Pallas TPU
+kernels for the per-shard hot loops live in ``repro.kernels``."""
+
+from .select import select_scan, make_table  # noqa: F401
+from .kvstore import KVStore, build_kvs, kvs_lookup  # noqa: F401
+from .regex import compile_regex  # noqa: F401
+from .dfa import dfa_match  # noqa: F401

@@ -1,0 +1,63 @@
+"""Vectorized DFA execution over packed string fields (paper §5.6).
+
+The operator works on a fixed-width byte field within each row (the paper
+uses a 62 B string inside a 128 B row) and runs the DFA one character per
+step, all rows in parallel — the JAX analogue of 48 parallel one-char-per-
+cycle FPGA engines.  Strings are NUL-padded; a row matches iff the DFA is in
+an accept state at any point before the pad (accept states are absorbing, so
+checking at the end suffices — including for matches *inside* the padding
+boundary, since NUL transitions from an accept state stay accepting).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .regex import DFA
+
+
+def dfa_match(dfa: DFA, strings: jnp.ndarray,
+              lengths: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Match all rows against the DFA.
+
+    Args:
+      dfa: compiled DFA (see ``compile_regex``).
+      strings: [rows, width] uint8, NUL-padded byte strings.
+      lengths: optional [rows] int32 valid lengths; when given, transitions
+        beyond a row's length are frozen (prevents accidental matches that
+        span into the padding).
+
+    Returns [rows] bool match mask.
+    """
+    trans = jnp.asarray(dfa.transitions)
+    accept = jnp.asarray(dfa.accept)
+    rows, width = strings.shape
+    state0 = jnp.zeros((rows,), jnp.int32)
+
+    def step(state, inp):
+        chars, pos = inp
+        nxt = trans[state, chars.astype(jnp.int32)]
+        if lengths is not None:
+            nxt = jnp.where(pos < lengths, nxt, state)
+        return nxt, None
+
+    cols = jnp.arange(width, dtype=jnp.int32)
+    final, _ = jax.lax.scan(step, state0, (strings.T, cols))
+    return accept[final]
+
+
+def dfa_select(dfa: DFA, table: jnp.ndarray, str_lo: int, str_hi: int,
+               capacity: int | None = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Regex-filter a table whose byte columns [str_lo:str_hi) hold the
+    string field.  Same packing contract as ``nmp.select.select_scan``."""
+    n = table.shape[0]
+    capacity = capacity or n
+    mask = dfa_match(dfa, table[:, str_lo:str_hi].astype(jnp.uint8))
+    count = mask.sum(dtype=jnp.int32)
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True)
+    packed = jnp.where((jnp.arange(capacity) < count)[:, None],
+                       table[order[:capacity]], 0)
+    return packed, count, mask

@@ -1,0 +1,91 @@
+"""KVS pointer-chasing operator (paper §5.5).
+
+The paper's workload: a hash table with separate chaining; each 128 B entry
+is (8 B key, 112 B value, 8 B next-pointer); a key hashed over ECI selects a
+bucket whose chain is walked at the home.  Parallelism comes from many
+outstanding requests over 32 parallel operators (Fig. 4).
+
+Layout here (struct-of-arrays, pointer = row index, -1 = nil):
+
+    heads  [n_buckets] int32     bucket -> first entry
+    keys   [n_entries] uint32
+    values [n_entries, v_width]
+    nxt    [n_entries] int32
+
+``kvs_lookup`` walks all query chains in lockstep with ``lax.scan`` — the
+vectorized analogue of the paper's many parallel operators, and the oracle
+for the ``hash_probe`` Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KVStore(NamedTuple):
+    heads: jnp.ndarray    # [n_buckets] int32
+    keys: jnp.ndarray     # [n_entries] uint32
+    values: jnp.ndarray   # [n_entries, v_width]
+    nxt: jnp.ndarray      # [n_entries] int32
+
+
+def fib_hash(key: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Fibonacci multiplicative hash (uint32)."""
+    h = (key.astype(jnp.uint32) * jnp.uint32(2654435769)) >> jnp.uint32(16)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def build_kvs(keys: np.ndarray, values: np.ndarray,
+              n_buckets: int) -> KVStore:
+    """Host-side construction (chains built by insertion order, head=newest)."""
+    keys = np.asarray(keys, np.uint32)
+    n = len(keys)
+    heads = np.full((n_buckets,), -1, np.int32)
+    nxt = np.full((n,), -1, np.int32)
+    # must match fib_hash exactly: the uint32 product WRAPS before >> 16.
+    h = (((keys.astype(np.uint64) * 2654435769) & 0xFFFFFFFF) >> 16
+         ).astype(np.uint32)
+    b = (h % n_buckets).astype(np.int32)
+    for i in range(n):
+        nxt[i] = heads[b[i]]
+        heads[b[i]] = i
+    return KVStore(jnp.asarray(heads), jnp.asarray(keys),
+                   jnp.asarray(values), jnp.asarray(nxt))
+
+
+def kvs_lookup(kvs: KVStore, queries: jnp.ndarray, max_chain: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chase all query chains in lockstep.
+
+    Args:
+      queries: [q] uint32 keys.
+      max_chain: static bound on chain length (the paper controls this
+        directly to simulate table fill states).
+
+    Returns (values [q, v_width], found [q] bool, steps [q] int32 — DRAM
+    accesses per query, the quantity Fig. 6 plots).
+    """
+    n_buckets = kvs.heads.shape[0]
+    q = queries.astype(jnp.uint32)
+    ptr0 = kvs.heads[fib_hash(q, n_buckets)]
+
+    def body(carry, _):
+        ptr, found_idx, steps = carry
+        live = (ptr >= 0) & (found_idx < 0)
+        safe = jnp.maximum(ptr, 0)
+        hit = live & (kvs.keys[safe] == q)
+        found_idx = jnp.where(hit, ptr, found_idx)
+        steps = steps + live.astype(jnp.int32)
+        ptr = jnp.where(live & ~hit, kvs.nxt[safe], ptr)
+        return (ptr, found_idx, steps), None
+
+    init = (ptr0, jnp.full_like(ptr0, -1), jnp.zeros_like(ptr0))
+    (ptr, found_idx, steps), _ = jax.lax.scan(body, init, None,
+                                              length=max_chain)
+    found = found_idx >= 0
+    vals = jnp.where(found[:, None],
+                     kvs.values[jnp.maximum(found_idx, 0)], 0)
+    return vals, found, steps

@@ -1,0 +1,63 @@
+"""SELECT-pushdown operator (paper §5.4).
+
+The paper's query shape: ``SELECT * FROM S WHERE S.a > X AND S.b < Y`` over
+128-byte rows, fully pipelined on the FPGA, matches pushed to an output FIFO
+that the CPU drains with plain reads.
+
+Here a *row* is a fixed-width vector whose first two attributes are the
+filter columns; the operator evaluates the predicate over a shard of rows
+and compacts the matches to the front (the FIFO analogue) with a stable
+argsort — returning a fixed ``capacity`` so the result shape is static under
+``jit``/``shard_map``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_table(key: jax.Array, n_rows: int, row_width: int,
+               selectivity: float, dtype=jnp.float32) -> jnp.ndarray:
+    """Synthesize a table whose rows match ``a > 0 AND b < 1`` with the
+    requested selectivity (matching the paper's seeded-selectivity setup).
+
+    Column 0 (``a``) is +1 for matching rows and -1 otherwise; column 1
+    (``b``) is 0 for matching rows and +2 otherwise; remaining columns are
+    random payload.
+    """
+    k1, k2 = jax.random.split(key)
+    match = jax.random.uniform(k1, (n_rows,)) < selectivity
+    a = jnp.where(match, 1.0, -1.0)
+    b = jnp.where(match, 0.0, 2.0)
+    payload = jax.random.normal(k2, (n_rows, row_width - 2), dtype)
+    return jnp.concatenate([a[:, None], b[:, None],
+                            payload.astype(dtype)], axis=1)
+
+
+def predicate(table: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray,
+              a_col: int = 0, b_col: int = 1) -> jnp.ndarray:
+    """The paper's predicate: a > X AND b < Y.  [rows] bool."""
+    return (table[:, a_col] > x) & (table[:, b_col] < y)
+
+
+def select_scan(table: jnp.ndarray, x, y, capacity: Optional[int] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Scan + filter + compact.
+
+    Returns (packed [capacity, row_width] matches-first in row order,
+    count [] int32, mask [rows] bool).  Rows past ``count`` in ``packed``
+    are zeros.
+    """
+    n = table.shape[0]
+    capacity = capacity or n
+    mask = predicate(table, jnp.asarray(x, table.dtype),
+                     jnp.asarray(y, table.dtype))
+    count = mask.sum(dtype=jnp.int32)
+    # stable compaction: matching rows first, preserving row order (FIFO).
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True)
+    packed = jnp.where(
+        (jnp.arange(capacity) < count)[:, None],
+        table[order[:capacity]], 0)
+    return packed, count, mask

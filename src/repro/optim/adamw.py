@@ -1,0 +1,101 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping, as pure functions
+over explicit state (no optimizer library dependency)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_map(zeros, params),
+                    v=jax.tree_util.tree_map(zeros, params))
+
+
+def schedule(cfg: OptimConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = step.astype(jnp.float32) / max(cfg.warmup_steps, 1)
+    prog = ((step - cfg.warmup_steps).astype(jnp.float32)
+            / max(cfg.total_steps - cfg.warmup_steps, 1))
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps,
+                                   jnp.minimum(warm, 1.0), cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), norm
+
+
+def _decayable(path) -> bool:
+    """Weight decay on matmul weights only (not norms/gates/scalars)."""
+    last = path[-1]
+    name = str(last.key) if hasattr(last, "key") else str(last)
+    return not (name.startswith("ln") or name.endswith("ln")
+                or name.startswith("mix") or name in
+                ("lam", "u", "wlog", "final_ln", "q_norm", "k_norm",
+                 "cm_mix"))
+
+
+def update(cfg: OptimConfig, state: OptState, params, grads
+           ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        upd_ = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        if _decayable(path):
+            upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * upd_
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads,
+                                           state.m, state.v)
+    new_params = jax.tree_util.tree_map(lambda t3: t3[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t3: t3[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t3: t3[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_m, new_v), {
+        "lr": lr, "grad_norm": gnorm}

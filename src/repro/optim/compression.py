@@ -1,0 +1,80 @@
+"""int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At multi-pod scale the gradient all-reduce crosses the (slow) DCN.  The
+standard mitigation: quantize the per-pod gradient contribution to int8 with
+a per-tensor scale, all-reduce the int8 payload (4x fewer bytes than f32,
+2x fewer than bf16), dequantize, and carry the quantization residual into
+the next step (error feedback keeps the scheme unbiased over time — SGD-EF,
+Karimireddy et al. 2019).
+
+``compressed_psum`` is the shard_map building block; the e2e property that
+error feedback preserves convergence is tested in
+``tests/test_substrates.py`` (quantized-vs-exact training on a toy model).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantization."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, err):
+    """Apply error feedback then quantize.  Returns (q_tree, scale_tree,
+    new_err_tree)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        return q, s, corrected - dequantize(q, s)
+
+    out = jax.tree_util.tree_map(one, grads, err)
+    is3 = lambda x: isinstance(x, tuple)
+    q = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is3)
+    s = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is3)
+    e = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=is3)
+    return q, s, e
+
+
+def compressed_psum(grads, err, axis: str):
+    """Inside shard_map: error-feedback int8 all-reduce over ``axis``.
+
+    Returns (mean_grads_f32, new_err).  Scales are all-gathered (tiny) so
+    every pod dequantizes every contribution exactly; the int8 payload is
+    what crosses the wire.
+    """
+    n = jax.lax.psum(1, axis)
+    q, s, new_err = compress_tree(grads, err)
+
+    def reduce_one(qq, ss):
+        # gather per-pod (scale, int8) and sum the dequantized terms.
+        all_q = jax.lax.all_gather(qq, axis)            # [P, ...] int8
+        all_s = jax.lax.all_gather(ss, axis)            # [P]
+        deq = all_q.astype(jnp.float32) * all_s.reshape(
+            (-1,) + (1,) * qq.ndim)
+        return deq.sum(axis=0) / n
+
+    mean = jax.tree_util.tree_map(reduce_one, q, s)
+    return mean, new_err
+
+
+def init_error(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compression_ratio(params, bits: int = 8) -> float:
+    """Wire-bytes ratio vs f32 all-reduce (scales amortize to ~0)."""
+    return 32.0 / bits

@@ -1,0 +1,2 @@
+from .elastic import resume_on_mesh, world_descriptor  # noqa
+from .pipeline import bubble_fraction, pipeline_apply  # noqa

@@ -1,0 +1,44 @@
+"""Elastic scaling: resume a checkpoint onto a different mesh.
+
+The checkpoint format is mesh-agnostic (full logical arrays per leaf) and
+``checkpoint.load`` re-shards via ``device_put`` against the TARGET mesh's
+NamedShardings — so growing/shrinking the pod count between runs is just
+"restart with a different mesh".  The ECI tie-in: the coherence directory's
+parameter-cache bookkeeping answers "which replicas hold stale copies" after
+a reshard — on resume every new replica cache starts Invalid and faults its
+lines in (exactly a remote agent joining with an empty cache; no protocol
+change needed, the paper's §3.4 point about subsetting by workload phase).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from ..checkpoint import checkpoint as ckpt
+from ..launch import sharding as sh
+
+
+def resume_on_mesh(path: str, state_like, mesh: Mesh):
+    """Load a checkpoint and shard it for ``mesh`` (whatever mesh it was
+    written from)."""
+    pspecs = sh.param_specs(state_like.params)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    to_sh = lambda spec: NamedSharding(mesh, spec)
+    shardings = type(state_like)(
+        params=jax.tree_util.tree_map(to_sh, pspecs,
+                                      is_leaf=lambda x: isinstance(x, P)),
+        opt=type(state_like.opt)(
+            step=to_sh(P()),
+            m=jax.tree_util.tree_map(to_sh, pspecs,
+                                     is_leaf=lambda x: isinstance(x, P)),
+            v=jax.tree_util.tree_map(to_sh, pspecs,
+                                     is_leaf=lambda x: isinstance(x, P))),
+        data_step=to_sh(P()))
+    return ckpt.load(path, state_like, shardings)
+
+
+def world_descriptor(mesh: Mesh) -> dict:
+    return {"axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "n_devices": int(mesh.devices.size)}

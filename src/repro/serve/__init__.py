@@ -1,0 +1,2 @@
+from .engine import (CoherentPrefixTier, ServeEngine, decode_state_specs,  # noqa
+                     make_serve_step)

@@ -1,0 +1,193 @@
+"""Serving: sharded decode steps (the dry-run's ``serve_step``) + a batched
+generation engine with an ECI-coherent prefix-reuse tier.
+
+``make_serve_step`` is what the ``decode_32k``/``long_500k`` cells lower:
+one new token against a full KV cache / recurrent state, with the cache
+sharded per ``launch.sharding.kv_cache_spec`` (heads over ``model`` when
+divisible, else sequence-parallel).
+
+``CoherentPrefixTier`` is the paper's Fig. 8 at the serving layer: decode
+states for hot prompt prefixes are published through a ``CoherentStore``
+(STATELESS home subset — serving is read-mostly, so the home tracks no
+per-line state, §3.4).  The store's lines carry *metadata* (pool slot +
+fingerprint); the bulk KV stays in a local pool — coherence where it's
+needed, bandwidth where it's cheap, the separation-of-concerns argument of
+the paper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import STATELESS, CoherentStore
+from ..launch import sharding as sh
+from ..models import decode_step, forward, init_decode_state
+from ..models.config import ModelConfig
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, state,
+                       shard_batch: bool = True) -> Any:
+    """PartitionSpecs for a decode-state pytree: KV caches get
+    kv_cache_spec; recurrent states shard batch over DP.  With
+    ``shard_batch=False`` (global_batch not divisible by the DP degree,
+    e.g. long_500k's batch of 1) batch dims replicate and only the model
+    axis shards (heads or sequence)."""
+    def spec_of(path, leaf):
+        names = [str(p.key) if hasattr(p, "key") else str(p) for p in path]
+        stacked = not any(n.startswith("tail") for n in names)
+        if names[-1] in ("k", "v") and leaf.ndim >= 4:
+            spec = sh.kv_cache_spec(mesh, cfg.n_kv_heads, stacked=stacked)
+            if not shard_batch:
+                spec = P(*(None if i == (1 if stacked else 0) else s
+                           for i, s in enumerate(spec)))
+            return spec
+        # recurrent states: [L?, B, ...] — batch over DP.
+        lead = 1 if stacked else 0
+        spec = [None] * leaf.ndim
+        if shard_batch:
+            spec[lead] = sh.dp_axes(mesh)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, state)
+
+
+def _dp_degree(mesh: Mesh) -> int:
+    d = 1
+    for a in sh.dp_axes(mesh):
+        d *= mesh.shape[a]
+    return d
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, state_like,
+                    params_like, global_batch: Optional[int] = None,
+                    donate: bool = True):
+    """jit the single-token decode with explicit shardings."""
+    from ..models import transformer as tr
+    from ..models import moe as moe_mod
+    tr.set_activation_spec(
+        NamedSharding(mesh, P(sh.dp_axes(mesh), None, None)))
+    moe_mod.set_ep_spec(NamedSharding(mesh, P("model", None, None)))
+    pspecs = sh.param_specs(params_like)
+    if global_batch is None:
+        shard_batch = True
+    else:
+        shard_batch = global_batch % _dp_degree(mesh) == 0
+    if not shard_batch:
+        tr.set_activation_spec(NamedSharding(mesh, P(None, None, None)))
+    # serving layout: weights replicated over 'data' (no per-token weight
+    # gathers), TP over 'model'; KV/batch shard over 'data'.
+    pspecs = sh.param_specs(params_like, mode="serve")
+    sspecs = decode_state_specs(cfg, mesh, state_like, shard_batch)
+    to_sh = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    dp = sh.dp_axes(mesh) if shard_batch else None
+    tok_sh = NamedSharding(mesh, P(dp))
+    scalar = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(mesh, P(dp, None))
+
+    def step(params, token, index, state):
+        return decode_step(params, cfg, token, index, state)
+
+    return jax.jit(
+        step,
+        in_shardings=(to_sh(pspecs), tok_sh, scalar, to_sh(sspecs)),
+        out_shardings=(logits_sh, to_sh(sspecs)),
+        donate_argnums=(3,) if donate else ())
+
+
+class ServeEngine:
+    """Small batched generation engine (example-scale)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 128,
+                 mesh: Optional[Mesh] = None):
+        from ..models import transformer as tr
+        tr.set_activation_spec(None)   # local single-host serving
+        self.cfg, self.params, self.max_seq = cfg, params, max_seq
+        self._step = jax.jit(functools.partial(decode_step),
+                             static_argnums=(1,))
+
+    def prefill(self, prompts: jnp.ndarray, state=None,
+                start_index: int = 0) -> Tuple[Any, int, jnp.ndarray]:
+        """Feed prompt tokens; returns (state, next_index, last_logits)."""
+        B, S0 = prompts.shape
+        if state is None:
+            state = init_decode_state(self.cfg, B, self.max_seq)
+        idx = start_index
+        lg = None
+        for t in range(S0):
+            lg, state = self._step(self.params, self.cfg, prompts[:, t],
+                                   jnp.asarray(idx, jnp.int32), state)
+            idx += 1
+        return state, idx, lg
+
+    def decode(self, state, first_token: jnp.ndarray, index: int,
+               n_new: int) -> Tuple[jnp.ndarray, Any]:
+        """Greedy decode n_new tokens starting from ``first_token``."""
+        tok = first_token
+        out = []
+        for _ in range(n_new):
+            out.append(tok)
+            lg, state = self._step(self.params, self.cfg, tok,
+                                   jnp.asarray(index, jnp.int32), state)
+            index += 1
+            tok = lg.argmax(-1).astype(jnp.int32)
+        return jnp.stack(out, axis=1), state
+
+    def generate(self, prompts: jnp.ndarray, n_new: int
+                 ) -> Tuple[jnp.ndarray, Any]:
+        """prompts: [B, S0]; returns ([B, n_new], final_state)."""
+        state, idx, lg = self.prefill(prompts)
+        tok = lg.argmax(-1).astype(jnp.int32)
+        return self.decode(state, tok, idx, n_new)
+
+
+class CoherentPrefixTier:
+    """Prefix-reuse tier over the ECI stack (paper Fig. 8 for serving).
+
+    Lines are (slot, fingerprint) metadata records in a ``CoherentStore``
+    running the READ_ONLY subset (2 joint states: consumers only LOAD/EVICT;
+    the home's ``publish`` writes use the retained home-initiated
+    downgrade-to-invalid, so consumer caches are invalidated coherently —
+    a pure read path could drop even that and go STATELESS, §3.4).  Decode
+    states live in a host-side pool; reads of a hot prefix hit the
+    consumer-side coherent cache — zero interconnect traffic (the
+    measurable quantity the benchmark reports).
+    """
+
+    def __init__(self, n_lines: int = 256):
+        from ..core import READ_ONLY
+        backing = jnp.zeros((n_lines, 2), jnp.float32)   # (slot+1, fp)
+        self.store = CoherentStore(backing, READ_ONLY)
+        self.pool: Dict[int, Any] = {}
+        self.n_lines = n_lines
+        self._next_slot = 0
+
+    def _line_of(self, prefix: Tuple[int, ...]) -> Tuple[int, float]:
+        h = hash(prefix) & 0x7FFFFFFF
+        return h % self.n_lines, float(h % (1 << 20))
+
+    def publish(self, prefix: Tuple[int, ...], state: Any) -> None:
+        line, fp = self._line_of(prefix)
+        slot = self._next_slot
+        self._next_slot += 1
+        self.pool[slot] = state
+        # home-side write: invalidates any consumer copies coherently.
+        self.store.home_write([line], jnp.asarray([[slot + 1.0, fp]]))
+
+    def lookup(self, prefix: Tuple[int, ...]) -> Optional[Any]:
+        line, fp = self._line_of(prefix)
+        rec = np.asarray(self.store.read([line]))[0]
+        if rec[0] >= 1.0 and rec[1] == fp:
+            return self.pool.get(int(rec[0]) - 1)
+        return None
+
+    @property
+    def hit_rate(self) -> float:
+        h, m = self.store.hits, self.store.misses
+        return h / max(h + m, 1)

@@ -1,0 +1,117 @@
+"""The canonical jitted train step: FSDP+TP sharded, microbatched gradient
+accumulation, AdamW, bf16 params / f32 moments.
+
+This is what the dry-run lowers for every ``train_4k`` cell: the
+``in_shardings`` come from ``launch.sharding`` rules, XLA inserts the FSDP
+all-gathers / reduce-scatters and the DP gradient all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import loss_fn
+from ..models.config import ModelConfig
+from ..optim import adamw
+from ..launch import sharding as sh
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+    data_step: jnp.ndarray      # the entire data-pipeline state (one int)
+
+
+def init_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw.init(params),
+                      data_step=jnp.zeros((), jnp.int32))
+
+
+def _split_micro(batch: Dict[str, jnp.ndarray], k: int):
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+
+def train_step(cfg: ModelConfig, ocfg: adamw.OptimConfig,
+               microbatches: int, state: TrainState,
+               batch: Dict[str, jnp.ndarray]
+               ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+    """One optimizer step (pure; jit/shard via ``make_train_step``)."""
+
+    def loss_of(params, mb):
+        frames = mb.get("frames")
+        return loss_fn(params, cfg, mb["tokens"], mb["targets"],
+                       frames=frames)
+
+    if microbatches == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(state.params, batch)
+    else:
+        mbs = _split_micro(batch, microbatches)
+
+        def acc(carry, mb):
+            gsum, lsum = carry
+            (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                state.params, mb)
+            gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+            return (gsum, lsum + l), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+        (gsum, lsum), _ = jax.lax.scan(acc, (zeros, jnp.zeros(())), mbs)
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+        loss = lsum / microbatches
+        metrics = {}
+
+    new_params, new_opt, om = adamw.update(ocfg, state.opt, state.params,
+                                           grads)
+    out = {"loss": loss, **om}
+    return TrainState(new_params, new_opt, state.data_step + 1), out
+
+
+def make_train_step(cfg: ModelConfig, ocfg: adamw.OptimConfig, mesh: Mesh,
+                    params_like, microbatches: int = 1, donate: bool = True,
+                    sharding_mode: str = "2d"):
+    """jit the step with explicit in/out shardings for the mesh.
+
+    sharding_mode "fsdp" retires TP and uses both mesh axes for DP+FSDP —
+    the §Perf remap for small-d models (see launch.sharding._remap_fsdp).
+    """
+    from ..models import transformer as tr
+    from ..models import moe as moe_mod
+    tr.set_activation_spec(
+        NamedSharding(mesh, P(sh.dp_axes(mesh, sharding_mode), None, None)))
+    if sharding_mode == "fsdp":
+        # experts replicated; keep the (E, C, d) buffers distributed over
+        # the CAPACITY dim so the dispatch scatter stays (mostly) local
+        # instead of all-reducing a replicated buffer (found via the HLO
+        # verification of the naive remap — see EXPERIMENTS.md §Perf).
+        moe_mod.set_ep_spec(
+            NamedSharding(mesh, P(None, ("data", "model"), None)))
+    else:
+        moe_mod.set_ep_spec(NamedSharding(mesh, P("model", None, None)))
+    pspecs = sh.param_specs(params_like, sharding_mode)
+    bspec = sh.batch_spec(mesh, mode=sharding_mode)
+    state_specs = TrainState(
+        params=pspecs,
+        opt=adamw.OptState(step=P(), m=pspecs, v=pspecs),
+        data_step=P())
+    batch_specs = {"tokens": bspec, "targets": bspec}
+    if cfg.encoder is not None:
+        batch_specs["frames"] = P(sh.dp_axes(mesh), None, None)
+    to_sh = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    fn = functools.partial(train_step, cfg, ocfg, microbatches)
+    metric_sh = NamedSharding(mesh, P())
+    return jax.jit(
+        fn,
+        in_shardings=(to_sh(state_specs), to_sh(batch_specs)),
+        out_shardings=(to_sh(state_specs),
+                       {"loss": metric_sh, "lr": metric_sh,
+                        "grad_norm": metric_sh}),
+        donate_argnums=(0,) if donate else ())

@@ -1,0 +1,106 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hash_probe import hash_probe
+from repro.kernels.regex_dfa import regex_dfa_from
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.select_scan import select_scan
+from repro.nmp import build_kvs, compile_regex, make_table
+
+KEY = jax.random.key(42)
+
+
+@pytest.mark.parametrize("n,w,block", [(256, 8, 64), (512, 16, 128),
+                                       (128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_select_scan(n, w, block, dtype):
+    t = make_table(KEY, n, w, 0.3).astype(dtype)
+    p, c = select_scan(t, 0.0, 1.0, block_rows=block, interpret=True)
+    pr, cr = kref.select_scan_ref(t, 0.0, 1.0, block)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(p, np.float32),
+                               np.asarray(pr, np.float32), rtol=1e-2)
+
+
+@pytest.mark.parametrize("pattern", ["abc", "a(b|c)+d", "[0-9]+", "x.?y"])
+@pytest.mark.parametrize("width", [8, 32])
+def test_regex_dfa(pattern, width):
+    import random
+    random.seed(width)
+    dfa = compile_regex(pattern)
+    strs = ["".join(random.choice("abcdxy019") for _ in range(width - 2))
+            for _ in range(128)]
+    arr = np.zeros((128, width), np.uint8)
+    for i, s in enumerate(strs):
+        arr[i, :len(s)] = np.frombuffer(s.encode(), np.uint8)
+    arr = jnp.asarray(arr)
+    got = regex_dfa_from(dfa, arr, block_rows=64, interpret=True)
+    want = kref.regex_dfa_ref(jnp.asarray(dfa.transitions),
+                              jnp.asarray(dfa.accept), arr)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_entries,n_buckets,max_chain",
+                         [(500, 64, 32), (1000, 1000, 8)])
+def test_hash_probe(n_entries, n_buckets, max_chain):
+    keys = np.arange(1, n_entries + 1, dtype=np.uint32)
+    kvs = build_kvs(keys, np.ones((n_entries, 2), np.float32), n_buckets)
+    q = jnp.asarray(np.random.RandomState(0).randint(
+        1, n_entries * 2, 128).astype(np.uint32))
+    f1, s1 = hash_probe(kvs.heads, kvs.keys, kvs.nxt, q,
+                        max_chain=max_chain, block_q=64, interpret=True)
+    f2, s2 = kref.hash_probe_ref(kvs.heads, kvs.keys, kvs.nxt, q, max_chain)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+ATTN_CASES = [
+    # B, Hq, Hkv, Sq, Sk, D, causal, window, softcap
+    (2, 4, 2, 64, 64, 32, True, None, None),
+    (1, 4, 1, 32, 64, 16, True, None, None),     # MQA + longer KV
+    (1, 2, 2, 64, 64, 32, True, 16, None),       # sliding window
+    (1, 2, 2, 64, 64, 32, True, None, 30.0),     # gemma2 softcap
+    (1, 2, 2, 64, 64, 32, False, None, None),    # bidirectional (encoder)
+    (1, 3, 3, 1, 64, 32, True, None, None),      # decode
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    B, Hq, Hkv, Sq, Sk, D, causal, window, cap = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, D), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, block_q=32, block_k=32,
+                          interpret=True)
+    want = kref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                    softcap=cap)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol,
+                               rtol=atol)
+
+
+@pytest.mark.parametrize("B,S,D,chunk,bd",
+                         [(2, 64, 32, 16, 16), (1, 128, 64, 64, 64),
+                          (3, 32, 16, 32, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(B, S, D, chunk, bd, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (B, S, D), dtype)
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, D))).astype(dtype)
+    got = rglru_scan(x, a, chunk=chunk, block_d=bd, interpret=True)
+    want = kref.rglru_scan_ref(x, a)
+    atol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol,
+                               rtol=atol)

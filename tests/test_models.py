@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train step on CPU, asserting shapes and no NaNs; decode/prefill
+consistency for every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn)
+from repro.models.transformer import _cross_kv, encode
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _inputs(cfg, key, B=2, S=16):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    frames = None
+    if cfg.encoder is not None:
+        frames = jax.random.normal(
+            key, (B, cfg.encoder.n_frames, cfg.d_model), jnp.float32)
+    return toks, frames
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.key(0)
+    params = init_params(key, cfg)
+    toks, frames = _inputs(cfg, key)
+    lg, aux = forward(params, cfg, toks, frames=frames)
+    assert lg.shape == (2, 16, cfg.vocab)
+    assert lg.dtype == jnp.float32
+    assert not bool(jnp.isnan(lg).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    """One gradient step must produce finite grads for every param."""
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.key(1)
+    params = init_params(key, cfg)
+    toks, frames = _inputs(cfg, key, B=2, S=8)
+    targets = jnp.roll(toks, -1, axis=1)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, toks, targets, frames)
+    assert jnp.isfinite(loss)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    # and the step must reduce loss when applied (sanity, lr tiny)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - 0.5 * g,
+                                        params, grads)
+    loss2, _ = loss_fn(new_params, cfg, toks, targets, frames)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe is not None:
+        # disable capacity dropping so decode/prefill are comparable.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.key(2)
+    params = init_params(key, cfg)
+    B, S = 2, 12
+    toks, frames = _inputs(cfg, key, B=B, S=S)
+    cross = None
+    if cfg.encoder is not None:
+        enc = encode(params, cfg, frames)
+        cross = _cross_kv(params["cross"], cfg, enc)
+    lg, _ = forward(params, cfg, toks, frames=frames)
+
+    state = init_decode_state(cfg, B, max_seq=S)
+    got = None
+    for t in range(S):
+        got, state = decode_step(params, cfg, toks[:, t],
+                                 jnp.asarray(t, jnp.int32), state,
+                                 cross=cross)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(lg[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_param_counts_match_published():
+    """The exact configs must land near their published sizes."""
+    expect = {
+        "nemotron-4-340b": 340e9,
+        "granite-34b": 34e9,
+        "gemma2-9b": 9e9,
+        "smollm-360m": 360e6,
+        "recurrentgemma-9b": 9e9,
+        "qwen3-moe-235b-a22b": 235e9,
+        "chameleon-34b": 34e9,
+        "rwkv6-3b": 3e9,
+    }
+    for arch, n in expect.items():
+        cfg = get_config(arch)
+        got = cfg.param_count()
+        assert 0.5 * n < got < 1.6 * n, (arch, got, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.active_param_count()
+    assert 10e9 < active < 40e9, active   # a22b
+    assert active < cfg.param_count() / 4
+
+
+def test_ring_buffer_window_attention():
+    """Local-attention decode past the window must equal prefill exactly
+    (ring buffer holds the last `window` keys)."""
+    cfg = get_config("gemma2-9b", smoke=True)   # window=16 in smoke
+    assert cfg.window == 16
+    key = jax.random.key(3)
+    params = init_params(key, cfg)
+    B, S = 1, 24   # crosses the window boundary
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    lg, _ = forward(params, cfg, toks)
+    state = init_decode_state(cfg, B, max_seq=S)
+    for t in range(S):
+        got, state = decode_step(params, cfg, toks[:, t],
+                                 jnp.asarray(t, jnp.int32), state)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(lg[:, -1]),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,171 @@
+"""Hypothesis property tests on system invariants beyond the protocol
+bisimulation: pushdown correctness, regex vs python-re oracle, EWF packing,
+checkpoint roundtrips, transport conservation, quantization bounds."""
+import re as pyre
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+# ---------------------------------------------------------------------------
+# regex compiler vs python's re (search semantics)
+# ---------------------------------------------------------------------------
+
+_ATOMS = ["a", "b", "c", "x", "[ab]", "[^c]", ".", "\\d"]
+
+
+def _pattern(draw):
+    n = draw(st.integers(1, 4))
+    parts = []
+    for _ in range(n):
+        a = draw(st.sampled_from(_ATOMS))
+        q = draw(st.sampled_from(["", "*", "+", "?"]))
+        parts.append(a + q)
+    pat = "".join(parts)
+    if draw(st.booleans()):
+        pat = pat + "|" + draw(st.sampled_from(_ATOMS))
+    return pat
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_regex_matches_python_re(data):
+    from repro.nmp import compile_regex, dfa_match
+    pat = _pattern(data.draw)
+    strings = data.draw(st.lists(
+        st.text(alphabet="abcx01", min_size=0, max_size=10),
+        min_size=1, max_size=8))
+    try:
+        dfa = compile_regex(pat)
+    except ValueError:
+        return  # state-limit guard is allowed to trip
+    width = 12
+    arr = np.zeros((len(strings), width), np.uint8)
+    for i, s in enumerate(strings):
+        arr[i, :len(s)] = np.frombuffer(s.encode(), np.uint8)
+    got = np.asarray(dfa_match(dfa, jnp.asarray(arr)))
+    want = np.asarray([pyre.search(pat, s) is not None for s in strings])
+    np.testing.assert_array_equal(got, want, err_msg=f"pattern={pat!r}")
+
+
+# ---------------------------------------------------------------------------
+# pushdown select == filter oracle for arbitrary tables
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(-1, 1), st.floats(-1, 1))
+def test_select_scan_is_filter(seed, x, y):
+    from repro.nmp.select import select_scan
+    key = jax.random.key(seed)
+    table = jax.random.normal(key, (64, 4))
+    packed, count, mask = select_scan(table, x, y)
+    want = (np.asarray(table[:, 0]) > x) & (np.asarray(table[:, 1]) < y)
+    assert int(count) == int(want.sum())
+    np.testing.assert_array_equal(np.asarray(mask), want)
+    np.testing.assert_allclose(np.asarray(packed[:int(count)]),
+                               np.asarray(table)[want], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# EWF packing roundtrip over the full field ranges
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 15), st.integers(0, 15), st.booleans(), st.booleans(),
+       st.integers(0, 3), st.integers(0, 2**32 - 1),
+       st.integers(0, 2**20 - 1))
+def test_ewf_roundtrip_property(mt, vc, pay, dirty, node, line, txn):
+    from repro.core.messages import pack, unpack
+    m = unpack(np.uint64(pack(mt, vc, pay, dirty, node, line, txn)))
+    assert (int(m.msg_type), int(m.vc), bool(m.has_payload), bool(m.dirty),
+            int(m.node), int(m.line), int(m.txn)) == (
+        mt, vc, pay, dirty, node, line, txn)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint roundtrip over generated pytrees
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.dictionaries(
+    st.text(alphabet="abcdef", min_size=1, max_size=6),
+    st.tuples(st.integers(1, 5), st.integers(1, 5),
+              st.sampled_from(["float32", "bfloat16", "int32"])),
+    min_size=1, max_size=5))
+def test_checkpoint_roundtrip_property(spec):
+    import tempfile
+    from pathlib import Path
+    from repro.checkpoint import checkpoint as ck
+    tmp = Path(tempfile.mkdtemp())
+    rng = np.random.RandomState(0)
+    tree = {k: jnp.asarray(rng.randn(a, b), dtype=dt)
+            for k, (a, b, dt) in spec.items()}
+    path = str(tmp / "step_1.ckpt")
+    ck.save(path, tree, meta={"step": 1})
+    assert ck.verify(path)
+    out, _ = ck.load(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# transport: conservation + credit bounds under random traffic
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+def test_transport_conservation(seed, credit):
+    """Messages are never lost or duplicated; per-VC occupancy never
+    exceeds credits."""
+    from repro.core import transport as tp
+    from repro.core.messages import MsgType
+    rng = np.random.RandomState(seed)
+    L, B = 16, 2
+    ch = tp.make_channel(L, B)
+    credits = jnp.full((tp.N_VCS,), credit, jnp.int32)
+    delays = jnp.asarray(tp.DEFAULT_DELAYS)
+    sent = np.zeros(L, np.int64)
+    recv = np.zeros(L, np.int64)
+    for _ in range(30):
+        want = jnp.asarray(rng.rand(L) < 0.5)
+        msg = jnp.full((L,), int(MsgType.REQ_READ_SHARED), jnp.int8)
+        ch, acc = tp.submit(ch, tp.CLASS_REMOTE_REQ, want, msg,
+                            jnp.zeros(L, bool), jnp.zeros((L, B)), credits)
+        sent += np.asarray(acc)
+        occ = np.asarray(tp.occupancy(ch, tp.CLASS_REMOTE_REQ))
+        assert (occ <= credit).all(), occ
+        ch = tp.tick(ch)
+        ch, ready = tp.deliver(ch, tp.CLASS_REMOTE_REQ, delays)
+        recv += np.asarray(ready)
+    # drain
+    for _ in range(10):
+        ch = tp.tick(ch)
+        ch, ready = tp.deliver(ch, tp.CLASS_REMOTE_REQ, delays)
+        recv += np.asarray(ready)
+    np.testing.assert_array_equal(sent, recv)
+
+
+# ---------------------------------------------------------------------------
+# quantization error bounds
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 1e3))
+def test_weight_quantization_error_bound(seed, scale):
+    from repro.serve.quantize import quantize_weight
+    w = jax.random.normal(jax.random.key(seed), (32, 16)) * scale
+    q = quantize_weight(w)
+    back = q["q"].astype(jnp.float32) * q["s"]
+    # per-channel bound: |err| <= scale/2 = max|col| / 254
+    bound = np.asarray(jnp.abs(w).max(axis=0)) / 254.0 + 1e-6
+    err = np.asarray(jnp.abs(back - w)).max(axis=0)
+    assert (err <= bound * 1.01).all()

@@ -1,0 +1,184 @@
+"""Protocol-level tests: envelope requirements, reference-model invariants,
+and bisimulation of the vectorized JAX engine against the python oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import Engine
+from repro.core.model_ref import TwoNodeRef
+from repro.core.protocol import (FULL, MINIMAL, LocalOp,
+                                 count_states_and_transitions,
+                                 verify_envelope)
+from repro.core.states import HomeState, RemoteState
+
+N_LINES, BLOCK = 6, 2
+
+
+def test_envelope_minimal():
+    assert verify_envelope(MINIMAL) == []
+
+
+def test_envelope_full():
+    assert verify_envelope(FULL) == []
+
+
+def test_protocol_size_metrics():
+    m = count_states_and_transitions(FULL)
+    assert m["joint_states"] == 9
+    assert m["signalled_transitions"] >= 10
+
+
+# ---------------------------------------------------------------------------
+# Reference model: invariants hold along random programs (asserts internally).
+# ---------------------------------------------------------------------------
+
+op_strategy = st.tuples(
+    st.sampled_from(["load", "store", "evict", "demote", "hread", "hwrite"]),
+    st.integers(0, N_LINES - 1),
+    st.integers(1, 100),
+)
+
+
+def run_ref(ref: TwoNodeRef, program):
+    loads = []
+    for op, line, val in program:
+        if op == "load":
+            loads.append(("r", line, ref.remote_load(line)))
+        elif op == "store":
+            ref.remote_store(line, val)
+        elif op == "evict":
+            ref.remote_evict(line)
+        elif op == "demote":
+            ref.remote_demote(line)
+        elif op == "hread":
+            loads.append(("h", line, ref.home_read(line)))
+        elif op == "hwrite":
+            ref.home_write(line, val + 1000)
+    ref.check_all()
+    return loads
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(op_strategy, min_size=1, max_size=40),
+       st.booleans())
+def test_ref_model_invariants(program, moesi):
+    ref = TwoNodeRef(N_LINES, moesi=moesi)
+    run_ref(ref, program)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(op_strategy, min_size=1, max_size=30))
+def test_moesi_mesi_observational_equivalence(program):
+    """Requirement 4 writ large: the protocol variant (hidden-O forwarding
+    vs write-through) must never change the VALUES any node reads."""
+    a = TwoNodeRef(N_LINES, moesi=True)
+    b = TwoNodeRef(N_LINES, moesi=False)
+    assert run_ref(a, program) == run_ref(b, program)
+
+
+# ---------------------------------------------------------------------------
+# Bisimulation: JAX engine == python oracle after every transaction retires.
+# ---------------------------------------------------------------------------
+
+
+class EngineDriver:
+    """Drives the vectorized engine one transaction at a time (so results
+    are comparable with the atomic oracle) and extracts observables."""
+
+    def __init__(self, moesi: bool):
+        backing = jnp.zeros((N_LINES, BLOCK), jnp.float32)
+        self.eng = Engine(backing, moesi=moesi)
+        self.st = self.eng.init()
+
+    def _settle(self):
+        self.st = self.eng.drain(self.st, max_steps=64)
+        assert self.eng.quiescent(self.st), "engine failed to quiesce"
+
+    def _submit(self, line, op, val=None):
+        opv = jnp.zeros((N_LINES,), jnp.int8).at[line].set(int(op))
+        vv = jnp.zeros((N_LINES, BLOCK), jnp.float32)
+        if val is not None:
+            vv = vv.at[line].set(float(val))
+        result = None
+        for _ in range(64):
+            self.st, out = self.eng.step(self.st, op=opv, op_val=vv)
+            if bool(out.load_done[line]):
+                result = float(out.load_val[line, 0])
+            opv = jnp.where(out.accepted, 0, opv).astype(jnp.int8)
+            if not bool(opv.any()):
+                break
+        self._settle()
+        if op == LocalOp.LOAD and result is None:
+            # the load may retire during settling; read the cache.
+            result = float(self.st.agent.cache[line, 0])
+        return result
+
+    def load(self, line):
+        return self._submit(line, LocalOp.LOAD)
+
+    def store(self, line, val):
+        self._submit(line, LocalOp.STORE, val)
+
+    def evict(self, line):
+        self._submit(line, LocalOp.EVICT)
+
+    def demote(self, line):
+        self._submit(line, LocalOp.DEMOTE)
+
+    def home_read(self, line):
+        want = jnp.zeros((N_LINES,), bool).at[line].set(True)
+        result = None
+        for _ in range(64):
+            self.st, out = self.eng.step(self.st, want_read=want)
+            want = jnp.zeros((N_LINES,), bool)
+            if bool(out.hread_done[line]):
+                result = float(out.hread_val[line, 0])
+                break
+        self._settle()
+        return result
+
+    def home_write(self, line, val):
+        want = jnp.zeros((N_LINES,), bool).at[line].set(True)
+        vv = jnp.zeros((N_LINES, BLOCK), jnp.float32).at[line].set(float(val))
+        self.st, _ = self.eng.step(self.st, want_write=want, wval=vv)
+        self._settle()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(op_strategy, min_size=1, max_size=25), st.booleans())
+def test_engine_bisimulates_oracle(program, moesi):
+    ref = TwoNodeRef(N_LINES, moesi=moesi)
+    eng = EngineDriver(moesi=moesi)
+
+    for op, line, val in program:
+        if op == "load":
+            assert eng.load(line) == float(ref.remote_load(line))
+        elif op == "store":
+            ref.remote_store(line, val)
+            eng.store(line, val)
+        elif op == "evict":
+            ref.remote_evict(line)
+            eng.evict(line)
+        elif op == "demote":
+            ref.remote_demote(line)
+            eng.demote(line)
+        elif op == "hread":
+            assert eng.home_read(line) == float(ref.home_read(line))
+        elif op == "hwrite":
+            ref.home_write(line, val + 1000)
+            eng.home_write(line, val + 1000)
+
+        # stable-state equality on every line after each retired transaction
+        np.testing.assert_array_equal(
+            np.asarray(eng.st.agent.remote_state),
+            np.asarray([int(s) for s in ref.remote_state]))
+        np.testing.assert_array_equal(
+            np.asarray(eng.st.dir.home_state),
+            np.asarray([int(s) for s in ref.home_state]))
+        assert int(eng.st.dir.illegal) == 0
+        assert int(eng.st.agent.illegal) == 0
+
+    # final: every line's readable value agrees with the oracle's truth.
+    for line in range(N_LINES):
+        assert eng.load(line) == float(ref.remote_load(line))
