@@ -202,6 +202,52 @@ def bench_locality() -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
+# §4.1 N-node fan-out: invalidation message count vs sharer count
+# ---------------------------------------------------------------------------
+
+
+def bench_fanout() -> List[Row]:
+    """Message-count scaling of the N-remote engine: an exclusive grant
+    costs one HOME_DOWNGRADE_I round-trip PER SHARER — the linear-in-N
+    interconnect cost that motivates the paper's 2-node subsetting (§3.4:
+    the ACCI implementation needs none of this).  Cross-checked against the
+    atomic oracle's count and the analytic model (msgs = sharers)."""
+    from repro.core import CoherentStore, FULL_MOESI, MultiNodeRef
+    rows: List[Row] = []
+    n_lines, block = 32, 8
+    for n_remotes in (2, 3, 4):
+        backing = jnp.zeros((n_lines, block), jnp.float32)
+        cs = CoherentStore(backing, FULL_MOESI, n_remotes=n_remotes)
+        ids = np.arange(n_lines)
+        for node in range(n_remotes):          # every remote shares all lines
+            cs.read(ids, node=node)
+        before = cs.interconnect_messages.get("HOME_DOWNGRADE_I", 0)
+        t0 = time.perf_counter()
+        cs.write(ids, jnp.ones((n_lines, block), jnp.float32), node=0)
+        dt = (time.perf_counter() - t0) * 1e6 / n_lines
+        sent = cs.interconnect_messages.get("HOME_DOWNGRADE_I", 0) - before
+        per_store = sent / n_lines
+        # oracle cross-check (same schedule, atomic semantics)
+        ref = MultiNodeRef(1, n_remotes=n_remotes)
+        for node in range(n_remotes):
+            ref.load(node, 0)
+        rbefore = ref.invalidation_messages()
+        ref.store(0, 0, 1)
+        ref_sent = ref.invalidation_messages() - rbefore
+        # the equality IS the figure — check it, don't just typeset it.
+        assert per_store == ref_sent == n_remotes - 1, \
+            (per_store, ref_sent, n_remotes)
+        rows.append((f"fanout/n{n_remotes}_store_inval_msgs", dt,
+                     f"engine {per_store:.1f} msgs/store == oracle "
+                     f"{ref_sent} == model {n_remotes - 1} (sharers-1); "
+                     f"2-node subset pays 0"))
+    rows.append(("fanout/scaling_law", 0.0,
+                 "invalidations/store = sharers-1: linear in N — the cost "
+                 "the paper's 2-node ACCI subset avoids entirely (§3.4)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # §3.4 specialization: protocol-size table
 # ---------------------------------------------------------------------------
 
@@ -219,5 +265,5 @@ def bench_protocol_size() -> List[Row]:
     return rows
 
 
-ALL = [bench_protocol_size, bench_interconnect, bench_select,
+ALL = [bench_protocol_size, bench_interconnect, bench_fanout, bench_select,
        bench_pointer_chase, bench_regex, bench_locality]

@@ -26,7 +26,25 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dependency: only the compression codec needs it.
+    import zstandard as _zstandard
+except ModuleNotFoundError:  # pragma: no cover - exercised on minimal envs
+    _zstandard = None
+
+
+def _zstd():
+    """Return the zstandard module or fail with an actionable error.
+
+    The import is lazy so that ``import repro.checkpoint`` (and test
+    collection) works on minimal environments; only actually saving or
+    loading a checkpoint requires the codec.
+    """
+    if _zstandard is None:
+        raise ModuleNotFoundError(
+            "checkpoint save/load requires the optional 'zstandard' package "
+            "(pip install zstandard)")
+    return _zstandard
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -54,7 +72,7 @@ def _unflatten_into(tree_like, flat: Dict[str, np.ndarray]):
 
 def save(path: str, tree, meta: Optional[Dict[str, Any]] = None) -> str:
     """Write checkpoint atomically.  Returns the final path."""
-    cctx = zstandard.ZstdCompressor(level=3)
+    cctx = _zstd().ZstdCompressor(level=3)
     flat = _flatten(tree)
     leaves = {}
     manifest = hashlib.sha256()
@@ -86,10 +104,10 @@ def save(path: str, tree, meta: Optional[Dict[str, Any]] = None) -> str:
 
 def verify(path: str) -> bool:
     """Integrity check without materializing arrays."""
+    dctx = _zstd().ZstdDecompressor()
     try:
         with open(path, "rb") as f:
             obj = msgpack.unpackb(f.read(), raw=False)
-        dctx = zstandard.ZstdDecompressor()
         manifest = hashlib.sha256()
         for key in sorted(obj["leaves"]):
             rec = obj["leaves"][key]
@@ -108,7 +126,7 @@ def load(path: str, tree_like, shardings=None
     pytree of NamedSharding) re-shards onto the target mesh."""
     with open(path, "rb") as f:
         obj = msgpack.unpackb(f.read(), raw=False)
-    dctx = zstandard.ZstdDecompressor()
+    dctx = _zstd().ZstdDecompressor()
     flat = {}
     for key, rec in obj["leaves"].items():
         raw = dctx.decompress(rec["data"])

@@ -4,15 +4,20 @@ Layers (paper §3-4): states & lattice (``states``), signalled transitions
 (``messages``), the protocol envelope as dense tables (``protocol``), the
 vectorized home directory (``directory``) and remote agent (``agent``), the
 virtual-channel transport (``transport``), the wired two-node engine
-(``engine``), protocol subsetting (``specialize``), the application-facing
-store (``coherent_store``), distributed operator pushdown (``pushdown``)
-and the trace/NFA toolkit (``tracing``).
+(``engine``), the N-remote sharer-vector engine (``engine_mn`` +
+``directory_mn``, bisimulated against the ``multinode`` oracle), protocol
+subsetting (``specialize``), the application-facing store
+(``coherent_store``), distributed operator pushdown (``pushdown``) and the
+trace/NFA toolkit (``tracing``).
 """
 
 from .coherent_store import CoherentStore  # noqa: F401
 from .engine import Engine  # noqa: F401
+from .engine_mn import EngineMN  # noqa: F401
 from .messages import MsgType  # noqa: F401
-from .protocol import FULL, MINIMAL, LocalOp, verify_envelope  # noqa: F401
+from .multinode import MultiNodeRef  # noqa: F401
+from .protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL,  # noqa: F401
+                       LocalOp, verify_envelope, verify_envelope_mn)
 from .specialize import (ENHANCED_MESI, FULL_MOESI, READ_ONLY,  # noqa: F401
                          STATELESS, SUBSETS, subset_metrics)
 from .states import HomeState, RemoteState  # noqa: F401

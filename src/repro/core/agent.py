@@ -109,12 +109,18 @@ def submit(tables: DenseTables, st: AgentState, op: jnp.ndarray,
 
 
 def on_response(tables: DenseTables, st: AgentState, active: jnp.ndarray,
-                resp: jnp.ndarray, payload: jnp.ndarray
-                ) -> Tuple[AgentState, jnp.ndarray]:
+                resp: jnp.ndarray, payload: jnp.ndarray,
+                nack_holds: bool = False) -> Tuple[AgentState, jnp.ndarray]:
     """Complete pending transactions with their responses.
 
     Returns (state, retry[L]) — retry marks NACKed lines whose op should be
     resubmitted by the caller.
+
+    ``nack_holds=True`` (the N-remote engine) keeps the CURRENT state on a
+    NACK instead of the table's fallback: with several remotes a home-
+    initiated invalidation can cross the request in flight, so the agent
+    may already have been downgraded below the state it requested from —
+    the retry then reissues from wherever it actually is.
     """
     req = st.pending_req.astype(jnp.int32)
     rm = resp.astype(jnp.int32)
@@ -122,6 +128,9 @@ def on_response(tables: DenseTables, st: AgentState, active: jnp.ndarray,
     legal = new_state >= 0
     do = active & legal
     nack = active & (rm == int(MsgType.RESP_NACK))
+    if nack_holds:
+        new_state = jnp.where(nack, st.remote_state.astype(jnp.int32),
+                              new_state)
 
     carries = (rm == int(MsgType.RESP_DATA)) | (rm == int(MsgType.RESP_DATA_DIRTY))
     cache = jnp.where((do & carries)[:, None], payload, st.cache)

@@ -28,13 +28,22 @@ from typing import Callable, Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import Engine, EngineState
+from .engine import Engine
+from .engine_mn import EngineMN
 from .protocol import LocalOp
 from .specialize import FULL_MOESI, ProtocolSubset
 
 
 class CoherentStore:
-    """Block store with a coherent consumer-side cache (single-controller).
+    """Block store with a coherent consumer-side cache.
+
+    With ``n_remotes == 1`` (the default) this is the paper's 2-node
+    subset: one consumer agent against the home, the specialized fast path
+    (including the STATELESS home of §3.4).  With ``n_remotes > 1`` the
+    store runs the vectorized N-remote engine (``core.engine_mn``): up to
+    4 consumer agents, each with its own cache, kept coherent by the
+    sharer-vector directory — ``read``/``write``/``evict`` then take a
+    ``node`` argument selecting the acting consumer.
 
     This is the *semantic* model used by tests, benchmarks and the serving
     example; the multi-device data path is ``core.pushdown`` (shard_map), and
@@ -44,12 +53,21 @@ class CoherentStore:
     def __init__(self, backing: jnp.ndarray,
                  subset: ProtocolSubset = FULL_MOESI,
                  operator: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
-                 max_rounds: int = 64):
+                 max_rounds: int = 64, n_remotes: int = 1):
         assert backing.ndim == 2, "backing must be [n_blocks, block]"
         self.subset = subset
-        self.engine = Engine(backing, moesi=subset.tables.moesi,
-                             stateless=subset.stateless_home)
-        self.state: EngineState = self.engine.init()
+        self.n_remotes = n_remotes
+        if n_remotes == 1:
+            self.engine = Engine(backing, moesi=subset.tables.moesi,
+                                 stateless=subset.stateless_home)
+        else:
+            if subset.stateless_home:
+                raise ValueError(
+                    "the stateless home tracks no sharers, so it cannot "
+                    "keep multiple remotes coherent (use n_remotes=1)")
+            self.engine = EngineMN(backing, n_remotes,
+                                   moesi=subset.tables.moesi)
+        self.state = self.engine.init()
         self.n_blocks, self.block = backing.shape
         self.operator = operator
         self.max_rounds = max_rounds
@@ -58,31 +76,77 @@ class CoherentStore:
 
     # -- internal ----------------------------------------------------------
 
-    def _run_ops(self, op_vec, val=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Submit a per-line op vector; run until every op retires."""
+    def _op_vec(self, block_ids, op: int, node: int) -> jnp.ndarray:
+        """Build the per-line op vector ([L] or [R, L]) for ``block_ids``."""
+        assert 0 <= node < self.n_remotes, \
+            f"node {node} out of range for n_remotes={self.n_remotes}"
+        ids = jnp.asarray(block_ids)
+        if self.n_remotes == 1:
+            return jnp.zeros((self.n_blocks,), jnp.int8).at[ids].set(op)
+        return jnp.zeros((self.n_remotes, self.n_blocks),
+                         jnp.int8).at[node, ids].set(op)
+
+    def _val_vec(self, block_ids, values, node: int) -> jnp.ndarray:
+        ids = jnp.asarray(block_ids)
+        dt = self.state.dir.backing.dtype
+        if self.n_remotes == 1:
+            vv = jnp.zeros((self.n_blocks, self.block), dt)
+            return vv.at[ids].set(values)
+        vv = jnp.zeros((self.n_remotes, self.n_blocks, self.block), dt)
+        return vv.at[node, ids].set(values)
+
+    def _drain(self, round_fn, what: str) -> None:
+        """Run ``round_fn(st) -> (st, still_busy)`` until quiet.
+
+        Raises instead of returning partial results when the budget runs
+        out — a silent zero block is indistinguishable from real data."""
+        st = self.state
+        for _ in range(self.max_rounds):
+            st, busy = round_fn(st)
+            if not busy:
+                break
+        else:
+            self.state = st
+            raise RuntimeError(
+                f"{what} did not retire within max_rounds="
+                f"{self.max_rounds}; raise max_rounds for deep fan-out/"
+                f"contention schedules")
+        self.state = st
+
+    def _run_ops(self, opv, val=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Submit an op vector; run until every op retires.
+
+        Returns per-line (done, vals) reduced over remotes (at most one
+        remote acts per line per call through the public API)."""
         L, B = self.n_blocks, self.block
-        opv = jnp.asarray(op_vec, jnp.int8)
-        if not self.subset.check_workload(np.asarray(opv)):
+        opv = jnp.asarray(opv, jnp.int8)
+        if not self.subset.check_workload(np.asarray(opv).ravel()):
             raise ValueError(
                 f"op program outside subset '{self.subset.name}' guarantee")
         vv = val if val is not None else jnp.zeros(
-            (L, B), self.state.dir.backing.dtype)
+            opv.shape + (B,), self.state.dir.backing.dtype)
         done = jnp.zeros((L,), bool)
         vals = jnp.zeros((L, B), self.state.dir.backing.dtype)
-        st = self.state
-        for _ in range(self.max_rounds):
+
+        def round_fn(st):
+            nonlocal opv, done, vals
             st, out = self.engine.step(st, op=opv, op_val=vv)
             opv = jnp.where(out.accepted, 0, opv).astype(jnp.int8)
-            vals = jnp.where(out.load_done[:, None], out.load_val, vals)
-            done = done | out.load_done
-            if not bool(opv.any()) and self.engine.quiescent(st):
-                break
-        self.state = st
+            if self.n_remotes == 1:
+                ld, lv = out.load_done, out.load_val
+            else:
+                ld = out.load_done.any(axis=0)
+                lv = out.load_val.sum(axis=0)      # one-hot over remotes
+            vals = jnp.where(ld[:, None], lv, vals)
+            done = done | ld
+            return st, bool(opv.any()) or not self.engine.quiescent(st)
+
+        self._drain(round_fn, "coherent ops")
         return done, vals
 
     # -- public API --------------------------------------------------------
 
-    def read(self, block_ids) -> jnp.ndarray:
+    def read(self, block_ids, node: int = 0) -> jnp.ndarray:
         """Coherent read of blocks; hits the consumer cache when possible.
 
         If an operator is attached, a read of block ``i`` that MISSES in the
@@ -93,27 +157,27 @@ class CoherentStore:
         block_ids = np.atleast_1d(np.asarray(block_ids))
         if self.operator is not None:
             self._materialize(block_ids)
-        op = jnp.zeros((self.n_blocks,), jnp.int8)
-        op = op.at[jnp.asarray(block_ids)].set(int(LocalOp.LOAD))
+        op = self._op_vec(block_ids, int(LocalOp.LOAD), node)
         self.ops_issued += len(block_ids)
         done, vals = self._run_ops(op)
         return vals[jnp.asarray(block_ids)]
 
-    def write(self, block_ids, values: jnp.ndarray) -> None:
-        """Coherent write (write-invalidate upgrade at the consumer)."""
+    def write(self, block_ids, values: jnp.ndarray, node: int = 0) -> None:
+        """Coherent write (write-invalidate upgrade at the consumer).
+
+        With several remotes the upgrade fans out one invalidation per
+        other sharer — the N-node message cost ``interconnect_messages``
+        exposes (and ``benchmarks/paper_benches.py:bench_fanout`` plots).
+        """
         block_ids = np.atleast_1d(np.asarray(block_ids))
-        op = jnp.zeros((self.n_blocks,), jnp.int8)
-        op = op.at[jnp.asarray(block_ids)].set(int(LocalOp.STORE))
-        vv = jnp.zeros((self.n_blocks, self.block),
-                       self.state.dir.backing.dtype)
-        vv = vv.at[jnp.asarray(block_ids)].set(values)
+        op = self._op_vec(block_ids, int(LocalOp.STORE), node)
+        vv = self._val_vec(block_ids, values, node)
         self.ops_issued += len(block_ids)
         self._run_ops(op, vv)
 
-    def evict(self, block_ids) -> None:
+    def evict(self, block_ids, node: int = 0) -> None:
         block_ids = np.atleast_1d(np.asarray(block_ids))
-        op = jnp.zeros((self.n_blocks,), jnp.int8)
-        op = op.at[jnp.asarray(block_ids)].set(int(LocalOp.EVICT))
+        op = self._op_vec(block_ids, int(LocalOp.EVICT), node)
         self._run_ops(op)
 
     def home_read(self, block_ids) -> jnp.ndarray:
@@ -123,14 +187,15 @@ class CoherentStore:
         want = want.at[jnp.asarray(block_ids)].set(True)
         vals = jnp.zeros((self.n_blocks, self.block),
                          self.state.dir.backing.dtype)
-        st = self.state
-        for _ in range(self.max_rounds):
+
+        def round_fn(st):
+            nonlocal want, vals
             st, out = self.engine.step(st, want_read=want)
             want = jnp.zeros((self.n_blocks,), bool)
             vals = jnp.where(out.hread_done[:, None], out.hread_val, vals)
-            if self.engine.quiescent(st):
-                break
-        self.state = st
+            return st, not self.engine.quiescent(st)
+
+        self._drain(round_fn, "home_read")
         return vals[jnp.asarray(block_ids)]
 
     def home_write(self, block_ids, values: jnp.ndarray) -> None:
@@ -141,40 +206,48 @@ class CoherentStore:
         vv = jnp.zeros((self.n_blocks, self.block),
                        self.state.dir.backing.dtype)
         vv = vv.at[jnp.asarray(block_ids)].set(values)
-        st = self.state
-        for _ in range(self.max_rounds):
+        def round_fn(st):
+            nonlocal want
             st, _ = self.engine.step(st, want_write=want, wval=vv)
             want = jnp.zeros((self.n_blocks,), bool)
-            if self.engine.quiescent(st):
-                break
-        self.state = st
+            return st, not self.engine.quiescent(st)
+
+        self._drain(round_fn, "home_write")
 
     def _materialize(self, block_ids: np.ndarray) -> None:
-        """Run the attached operator at the home for blocks the consumer
-        does not already cache (results then flow through the protocol)."""
+        """Run the attached operator at the home for blocks no consumer has
+        cached yet (results then flow through the protocol).
+
+        A line cached at ANY node already holds the materialized (or
+        since-written) coherent value, so it is served as-is.  For the
+        rest, the operator's source and result both move through the
+        coherent home-side access path: ``home_read`` recalls a dirty home
+        copy invisibly, ``home_write`` installs the result — so a stale
+        ``backing`` is never read or clobbered."""
         from .states import RemoteState
-        cached = np.asarray(self.state.agent.remote_state) != int(RemoteState.I)
+        agent = np.asarray(self._agent_states()) != int(RemoteState.I)
+        cached = agent if self.n_remotes == 1 else agent.any(axis=0)
         todo = [int(b) for b in block_ids if not cached[b]]
         if not todo:
             return
-        idx = jnp.asarray(todo)
-        src = self.state.dir.backing[idx]
-        out = self.operator(src)
-        # the operator's result replaces the served line, written at the home
-        # (invisible to the consumer protocol-wise — it is just "the data").
-        dstate = self.state.dir
-        self.state = self.state._replace(
-            dir=dstate._replace(backing=dstate.backing.at[idx].set(out)))
+        src = self.home_read(todo)
+        self.home_write(todo, self.operator(src))
 
     # -- accounting --------------------------------------------------------
 
+    def _agent_states(self):
+        return (self.state.agent.remote_state if self.n_remotes == 1
+                else self.state.agents.remote_state)
+
     @property
     def hits(self) -> int:
-        return int(self.state.agent.hits)
+        a = self.state.agent if self.n_remotes == 1 else self.state.agents
+        return int(np.asarray(a.hits).sum())
 
     @property
     def misses(self) -> int:
-        return int(self.state.agent.misses)
+        a = self.state.agent if self.n_remotes == 1 else self.state.agents
+        return int(np.asarray(a.misses).sum())
 
     @property
     def interconnect_messages(self) -> Dict[str, int]:

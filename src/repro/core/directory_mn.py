@@ -1,0 +1,214 @@
+"""Sharer-vector home directory for the N-remote engine (paper §4.1).
+
+The 2-node directory (``core.directory``) tracks ONE remote view per line;
+this one keeps a full view VECTOR ``[R, L]`` — the classic full-map
+directory (Censier-Feautrier, the paper's ref [10]) with the sharer bitmask
+being ``view != I``.  Three vectorized operations cover the protocol:
+
+* ``absorb`` — downgrade payloads arriving at the home (voluntary evictions
+  and replies to home-initiated downgrades), applied per-remote with the
+  at-most-one-dirty-source-per-line reduction;
+* ``grant`` — complete a request once its fan-out preconditions hold
+  (no other owner for a shared grant; every other view I for an exclusive
+  one), keyed on (msg, home state) via the baked ``DenseTablesMN``;
+* ``needed_downgrades`` — the write-invalidate fan-out rule: one
+  ``HOME_DOWNGRADE_*`` per conflicting sharer, the message-count cost of
+  scaling that motivates the paper's 2-node subsetting (§3.4).
+
+All of it is gathers and masked updates over dense arrays — fully
+``jit``-able, no python control flow in the hot path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from .messages import MsgType
+from .protocol import MN_REQUEST_VIEW, DenseTablesMN, MnAbsorb
+from .states import HomeState, RemoteView
+
+
+class DirectoryMNState(NamedTuple):
+    home_state: jnp.ndarray   # [L] int8 HomeState
+    view: jnp.ndarray         # [R, L] int8 RemoteView per remote
+    backing: jnp.ndarray      # [L, B] at-rest data
+    home_buf: jnp.ndarray     # [L, B] home's copy (valid when state != I)
+    illegal: jnp.ndarray      # [] int32
+
+
+def make_directory_mn(backing: jnp.ndarray, n_remotes: int
+                      ) -> DirectoryMNState:
+    n_lines = backing.shape[0]
+    return DirectoryMNState(
+        home_state=jnp.zeros((n_lines,), jnp.int8),
+        view=jnp.zeros((n_remotes, n_lines), jnp.int8),
+        backing=backing,
+        home_buf=jnp.zeros_like(backing),
+        illegal=jnp.zeros((), jnp.int32),
+    )
+
+
+def _jt(table, *idx):
+    return jnp.asarray(table)[idx]
+
+
+def home_value(st: DirectoryMNState) -> jnp.ndarray:
+    """[L, B] — the line value as seen by the home (own copy if cached)."""
+    has = st.home_state != int(HomeState.I)
+    return jnp.where(has[:, None], st.home_buf, st.backing)
+
+
+def absorb(tables: DenseTablesMN, st: DirectoryMNState,
+           active: jnp.ndarray, kind: jnp.ndarray, dirty: jnp.ndarray,
+           payload: jnp.ndarray) -> DirectoryMNState:
+    """Apply per-remote downgrade-ish arrivals to the directory.
+
+    Args:
+      active: [R, L] bool — remote r delivered an absorbable message on l.
+      kind: [R, L] int8 MnAbsorb kind.
+      dirty: [R, L] bool — the message carried a dirty payload.
+      payload: [R, L, B] — line data (valid where dirty).
+
+    View updates commute across remotes; at most one absorb per line can be
+    dirty (single-writer invariant), so home-state/data effects reduce over
+    R by selecting the unique dirty source.
+    """
+    vol_i = int(MnAbsorb.VOL_I)
+    rep_s = int(MnAbsorb.REPLY_S)
+    rep_i = int(MnAbsorb.REPLY_I)
+
+    # -- per-remote view updates ------------------------------------------
+    to_i = active & ((kind == vol_i) | (kind == rep_i))
+    # a clean reply to a recall-to-shared only confirms S if the home still
+    # believes EM — a crossing voluntary eviction may already have cleared
+    # the view, and the remote is then truly I (race handling, §3.3).
+    to_s = active & (kind == rep_s) & \
+        ((st.view == int(RemoteView.EM)) | dirty)
+    view = jnp.where(to_i, jnp.int8(int(RemoteView.I)), st.view)
+    view = jnp.where(to_s, jnp.int8(int(RemoteView.S)), view)
+
+    # -- home-state / data effects (at most one dirty source per line) -----
+    d_act = active & dirty                           # [R, L]
+    any_dirty = d_act.any(axis=0)                    # [L]
+    src = jnp.argmax(d_act, axis=0)                  # [L] the dirty remote
+    L = st.home_state.shape[0]
+    lines = jnp.arange(L)
+    d_kind = kind[src, lines].astype(jnp.int32)      # [L]
+    d_pay = payload[src, lines]                      # [L, B]
+
+    hs = st.home_state.astype(jnp.int32)
+    one = jnp.ones((L,), jnp.int32)
+    new_home = _jt(tables.absorb_new_home, d_kind, one, hs)
+    to_back = _jt(tables.absorb_to_backing, d_kind, one, hs) & any_dirty
+    to_buf = _jt(tables.absorb_to_homebuf, d_kind, one, hs) & any_dirty
+
+    home_state = jnp.where(any_dirty, new_home.astype(jnp.int8),
+                           st.home_state)
+    backing = jnp.where(to_back[:, None], d_pay, st.backing)
+    home_buf = jnp.where(to_buf[:, None], d_pay, st.home_buf)
+
+    # hidden-O upkeep: when the LAST sharer leaves a hidden-O line, the home
+    # is simply dirty-exclusive again (O -> M); the invariant "hidden O only
+    # while sharers exist" stays true at quiescence.
+    no_sharers = ~(view != int(RemoteView.I)).any(axis=0)
+    was_vol = (active & (kind == vol_i)).any(axis=0)
+    o_to_m = was_vol & no_sharers & \
+        (home_state == int(HomeState.O))
+    home_state = jnp.where(o_to_m, jnp.int8(int(HomeState.M)), home_state)
+
+    return st._replace(home_state=home_state, view=view,
+                       backing=backing, home_buf=home_buf)
+
+
+def needed_downgrades(st: DirectoryMNState, active: jnp.ndarray,
+                      msg: jnp.ndarray, node: jnp.ndarray) -> jnp.ndarray:
+    """[R, L] int8 — the HOME_DOWNGRADE_* each remote needs before ``msg``
+    from ``node`` can be granted (NOP where none).  The vectorized twin of
+    ``protocol.mn_needed_mask``."""
+    R, L = st.view.shape
+    rids = jnp.arange(R)[:, None]                    # [R, 1]
+    others = rids != node[None, :]                   # [R, L]
+    shared_req = active & (msg == int(MsgType.REQ_READ_SHARED))
+    excl_req = active & ((msg == int(MsgType.REQ_READ_EXCL))
+                         | (msg == int(MsgType.REQ_UPGRADE)))
+    recall = shared_req[None, :] & others & \
+        (st.view == int(RemoteView.EM))
+    inval = excl_req[None, :] & others & \
+        (st.view != int(RemoteView.I))
+    out = jnp.where(inval, jnp.int8(int(MsgType.HOME_DOWNGRADE_I)),
+                    jnp.int8(int(MsgType.NOP)))
+    return jnp.where(recall, jnp.int8(int(MsgType.HOME_DOWNGRADE_S)), out)
+
+
+def home_needed_downgrades(st: DirectoryMNState, want_read: jnp.ndarray,
+                           want_write: jnp.ndarray) -> jnp.ndarray:
+    """[R, L] int8 — downgrades required before a HOME-side access: reads
+    recall a dirty owner to S, writes invalidate every sharer."""
+    recall = want_read[None, :] & (st.view == int(RemoteView.EM))
+    inval = want_write[None, :] & (st.view != int(RemoteView.I))
+    out = jnp.where(inval, jnp.int8(int(MsgType.HOME_DOWNGRADE_I)),
+                    jnp.int8(int(MsgType.NOP)))
+    return jnp.where(recall & ~inval,
+                     jnp.int8(int(MsgType.HOME_DOWNGRADE_S)), out)
+
+
+def grant(tables: DenseTablesMN, st: DirectoryMNState, active: jnp.ndarray,
+          msg: jnp.ndarray, node: jnp.ndarray
+          ) -> Tuple[DirectoryMNState, jnp.ndarray, jnp.ndarray]:
+    """Complete requests whose downgrade preconditions hold.
+
+    Args:
+      active: [L] bool — a grant fires on the line this step.
+      msg: [L] int8 — the parked request type.
+      node: [L] int32 — the requester.
+
+    Returns (new_state, resp [L] int8 (NOP where inactive), payload [L, B]).
+    An UPGRADE whose requester view was concurrently invalidated is NACKed
+    (the agent falls back to I and reissues READ_EXCL) — the transaction-
+    layer race of §3.3, kept rare by per-line serialization.
+    """
+    R, L = st.view.shape
+    lines = jnp.arange(L)
+    m = msg.astype(jnp.int32)
+    hs = st.home_state.astype(jnp.int32)
+    req_view = st.view[node, lines].astype(jnp.int32)    # requester's view
+
+    want_view = _jt(jnp.asarray(
+        [MN_REQUEST_VIEW.get(i, 0) for i in range(16)], jnp.int32), m)
+    legal = _jt(tables.grant_legal, m, hs) & (req_view == want_view)
+    is_upgrade_race = active & (m == int(MsgType.REQ_UPGRADE)) & \
+        (req_view != int(RemoteView.S))
+    do = active & legal
+
+    val = home_value(st)                                  # serve-then-move
+    new_home = _jt(tables.grant_new_home, m, hs)
+    resp = _jt(tables.grant_resp, m, hs)
+    wb = _jt(tables.grant_wb, m, hs)
+
+    backing = jnp.where((do & wb)[:, None], st.home_buf, st.backing)
+    home_state = jnp.where(do, new_home.astype(jnp.int8), st.home_state)
+    new_view = _jt(tables.grant_view, m)
+    onehot = jnp.arange(R)[:, None] == node[None, :]      # [R, L]
+    view = jnp.where(onehot & do[None, :], new_view[None, :].astype(jnp.int8),
+                     st.view)
+
+    resp = jnp.where(do, resp.astype(jnp.int8), jnp.int8(int(MsgType.NOP)))
+    resp = jnp.where(is_upgrade_race, jnp.int8(int(MsgType.RESP_NACK)), resp)
+    bad = active & ~legal & ~is_upgrade_race
+    new = st._replace(home_state=home_state, view=view, backing=backing,
+                      illegal=st.illegal + bad.sum().astype(jnp.int32))
+    return new, resp, val
+
+
+def home_apply_write(st: DirectoryMNState, mask: jnp.ndarray,
+                     value: jnp.ndarray) -> DirectoryMNState:
+    """Home-side writes for ``mask`` lines (preconditions: all views I)."""
+    has = st.home_state != int(HomeState.I)
+    wb = mask & has
+    direct = mask & ~has
+    return st._replace(
+        home_buf=jnp.where(wb[:, None], value, st.home_buf),
+        home_state=jnp.where(wb, jnp.int8(int(HomeState.M)), st.home_state),
+        backing=jnp.where(direct[:, None], value, st.backing),
+    )

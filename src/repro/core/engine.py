@@ -55,6 +55,15 @@ class StepOutput(NamedTuple):
     accepted: jnp.ndarray     # [L] bool — this step's remote ops accepted
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_step(moesi: bool, stateless: bool):
+    """One compiled step per (mode, stateless) pair, SHARED across Engine
+    instances — a fresh ``jax.jit(partial(...))`` per instance would carry
+    its own trace cache and recompile for every store/test constructed."""
+    tables = FULL if moesi else MINIMAL
+    return jax.jit(functools.partial(step, tables, stateless=stateless))
+
+
 class Engine:
     """Convenience wrapper binding tables/config and jitting the step."""
 
@@ -69,8 +78,7 @@ class Engine:
             delays if delays is not None else tp.DEFAULT_DELAYS)
         self.credits = jnp.asarray(
             credits if credits is not None else tp.DEFAULT_CREDITS)
-        self._step = jax.jit(functools.partial(
-            step, self.tables, stateless=stateless))
+        self._step = _jitted_step(moesi, stateless)
         self._backing = backing
 
     def init(self) -> EngineState:
@@ -103,13 +111,16 @@ class Engine:
         return st
 
     def quiescent(self, st: EngineState) -> bool:
-        busy = (int((st.agent.pending_req != 0).sum())
-                + int((st.agent.pending_op != 0).sum())
-                + int((st.hreq_pending != 0).sum())
-                + int(st.want_read.sum()) + int(st.want_write.sum()))
+        # one fused expression -> a single device-to-host sync; drain
+        # loops call this every round, so per-term syncs dominate wall-
+        # clock otherwise.
+        busy = ((st.agent.pending_req != 0).sum()
+                + (st.agent.pending_op != 0).sum()
+                + (st.hreq_pending != 0).sum()
+                + st.want_read.sum() + st.want_write.sum())
         for ch in (st.ch_req, st.ch_resp, st.ch_hreq, st.ch_hresp):
-            busy += int((ch.msg != 0).sum())
-        return busy == 0
+            busy = busy + (ch.msg != 0).sum()
+        return int(busy) == 0
 
 
 def make_engine_state(backing: jnp.ndarray) -> EngineState:
@@ -134,6 +145,31 @@ def _count(msg_count, payload_msgs, mask, msg, has_payload):
         mask.astype(jnp.int32))
     payload_msgs = payload_msgs + (mask & has_payload).sum()
     return msg_count, payload_msgs
+
+
+def stall_unready_ops(tables: DenseTables, ch_req, eff_op: jnp.ndarray,
+                      remote_state: jnp.ndarray, op_val: jnp.ndarray,
+                      credits: jnp.ndarray) -> jnp.ndarray:
+    """Defer local ops whose outgoing message the transport cannot take.
+
+    Dry-runs the submission (slot free + VC credit, via ``tp.submit``
+    itself) and masks non-accepted ops to NOP so the caller retries them.
+    Without this, a dirty eviction would apply its M->I hit-transition at
+    the agent and then silently DROP the VOL_DOWNGRADE_I payload when the
+    VC is out of credit.  The surviving emission set is a subset of the
+    dry-run's candidates, so per-VC ranks can only shrink and the real
+    submit accepts everything that emits.  Shared by both engines (the
+    N-remote engine vmaps it over the remote axis).
+    """
+    o = eff_op.astype(jnp.int32)
+    rs = remote_state.astype(jnp.int32)
+    req_of = jnp.asarray(tables.loc_request)[o, rs].astype(jnp.int8)
+    would_emit = req_of != jnp.int8(int(MsgType.NOP))
+    _, acc_pre = tp.submit(ch_req, tp.CLASS_REMOTE_REQ, would_emit, req_of,
+                           jnp.zeros(would_emit.shape, bool), op_val,
+                           credits)
+    return jnp.where(would_emit & ~acc_pre, jnp.int8(int(LocalOp.NOP)),
+                     eff_op)
 
 
 def step(tables: DenseTables, st: EngineState,
@@ -215,13 +251,16 @@ def step(tables: DenseTables, st: EngineState,
              (astate.pending_req == nop)
     eff_op = jnp.where(parked, astate.pending_op, op)
     eff_op = jnp.where(locked, jnp.int8(int(LocalOp.NOP)), eff_op)
+    eff_op = stall_unready_ops(tables, ch_req, eff_op, astate.remote_state,
+                               op_val, credits)
     eff_val = jnp.where(parked[:, None], astate.pending_val, op_val)
     astate2, accepted, emit, req_dirty, req_pay = ag.submit(
         tables, astate, eff_op, eff_val)
     send_req = emit != nop
     ch_req, acc_req = tp.submit(ch_req, tp.CLASS_REMOTE_REQ, send_req, emit,
                                 req_dirty, req_pay, credits)
-    # revert the MSHR of lines the transport refused — they retry.
+    # belt-and-braces: the dry-run guarantees acceptance, but revert the
+    # MSHR of any refused line so a miss retries rather than hangs.
     refused = send_req & ~acc_req
     astate2 = astate2._replace(
         pending_req=jnp.where(refused, nop, astate2.pending_req))

@@ -1,0 +1,402 @@
+"""The vectorized N-remote coherency engine (paper §4.1, N <= 4).
+
+One home (sharer-vector directory, ``core.directory_mn``) plus ``R``
+caching remotes, each a full 4-state agent (``core.agent``) batched over a
+leading remote axis with ``vmap`` — the per-remote virtual channels are the
+same single-slot-per-line ``transport.Channel`` arrays, stacked ``[R, L]``.
+The whole step is one fused ``jit`` program; python appears only in the
+drain loop, exactly as in the 2-node engine.
+
+Transaction discipline (the "intermediate states" of a real directory):
+
+* the home parks ONE request per line (``txn_msg``/``txn_node``), fans out
+  one ``HOME_DOWNGRADE_*`` per conflicting sharer (the N-node message cost
+  the paper's 2-node subsetting avoids), and grants once every reply has
+  arrived and no voluntary downgrade is still in flight on the line;
+* per-remote per-line channel slots serialize each remote's traffic, so a
+  voluntary eviction always reaches the home before the same remote's next
+  request — the ordering that keeps the race handling finite;
+* crossings (a recall passing an eviction) resolve through the reply-race
+  rows of the remote table plus view-aware absorption at the home
+  (``directory_mn.absorb``), NACK+retry for invalidated upgrades.
+
+``tests/test_engine_mn.py`` bisimulates this engine against the atomic
+oracle ``core.multinode.MultiNodeRef`` for N in {2, 3, 4} in both MESI and
+MOESI modes.
+
+The N-remote envelope excludes DEMOTE (transition 7) — the op set of the
+oracle — which is a sound subset under requirement 5: the workload
+guarantees ``VOL_DOWNGRADE_S`` is never generated, so the home need not
+support it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import agent as ag
+from . import directory_mn as dmn
+from . import transport as tp
+from .engine import _count, stall_unready_ops
+from .messages import MsgType
+from .protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL, DenseTables,
+                       DenseTablesMN, LocalOp, MnAbsorb)
+from .states import RemoteView
+
+MAX_REMOTES = 4   # EWF carries 2-bit node ids (paper §4.1)
+
+
+class EngineMNState(NamedTuple):
+    dir: dmn.DirectoryMNState
+    agents: ag.AgentState        # every field has a leading [R] axis
+    ch_req: tp.Channel           # [R, L] remote -> home requests + evictions
+    ch_resp: tp.Channel          # [R, L] home -> remote grant responses
+    ch_hreq: tp.Channel          # [R, L] home -> remote downgrades (fan-out)
+    ch_hresp: tp.Channel         # [R, L] remote -> home downgrade replies
+    hreq_pending: jnp.ndarray    # [R, L] int8: outstanding HOME_DOWNGRADE_*
+    txn_msg: jnp.ndarray         # [L] int8: parked request type (NOP = none)
+    txn_node: jnp.ndarray        # [L] int32: parked requester id
+    want_read: jnp.ndarray       # [L] bool: home-side read outstanding
+    want_write: jnp.ndarray      # [L] bool: home-side write outstanding
+    want_wval: jnp.ndarray       # [L, B]
+    msg_count: jnp.ndarray       # [16] int32: delivered messages by type
+    payload_msgs: jnp.ndarray    # [] int32: messages that carried data
+    step_no: jnp.ndarray         # [] int32
+
+
+class StepMNOutput(NamedTuple):
+    load_done: jnp.ndarray       # [R, L] bool — a LOAD retired this step
+    load_val: jnp.ndarray        # [R, L, B]
+    hread_done: jnp.ndarray      # [L] bool
+    hread_val: jnp.ndarray       # [L, B]
+    accepted: jnp.ndarray        # [R, L] bool — caller ops taken this step
+
+
+def make_engine_mn_state(backing: jnp.ndarray, n_remotes: int
+                         ) -> EngineMNState:
+    L, B = backing.shape
+    R = n_remotes
+
+    def mk():
+        ch = tp.make_channel(L, B, backing.dtype)
+        return tp.Channel(*(jnp.broadcast_to(a, (R,) + a.shape) for a in ch))
+
+    agent = ag.make_agent(L, B, backing.dtype)
+    agents = ag.AgentState(*(jnp.broadcast_to(a, (R,) + a.shape)
+                             for a in agent))
+    return EngineMNState(
+        dir=dmn.make_directory_mn(backing, R),
+        agents=agents,
+        ch_req=mk(), ch_resp=mk(), ch_hreq=mk(), ch_hresp=mk(),
+        hreq_pending=jnp.zeros((R, L), jnp.int8),
+        txn_msg=jnp.zeros((L,), jnp.int8),
+        txn_node=jnp.zeros((L,), jnp.int32),
+        want_read=jnp.zeros((L,), bool),
+        want_write=jnp.zeros((L,), bool),
+        want_wval=jnp.zeros((L, B), backing.dtype),
+        msg_count=jnp.zeros((16,), jnp.int32),
+        payload_msgs=jnp.zeros((), jnp.int32),
+        step_no=jnp.zeros((), jnp.int32),
+    )
+
+
+def _ready(ch: tp.Channel, msg_class: int, delays: jnp.ndarray
+           ) -> jnp.ndarray:
+    """[R, L] mask of in-flight messages whose VC delay has elapsed.
+
+    The ``transport.deliver`` precondition, split out because request
+    arbitration (step 4) must pop only the WINNING slot per line — every
+    other channel uses the vmapped ``deliver`` directly."""
+    L = ch.msg.shape[-1]
+    vcs = tp.vc_of(jnp.arange(L), msg_class)
+    return (ch.msg != int(MsgType.NOP)) & (ch.age >= delays[vcs][None, :])
+
+
+def _pop(ch: tp.Channel, mask: jnp.ndarray) -> tp.Channel:
+    """Free the slots in ``mask``; fields are read from the input channel."""
+    return ch._replace(msg=jnp.where(mask, jnp.int8(int(MsgType.NOP)),
+                                     ch.msg))
+
+
+def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
+            st: EngineMNState, op: jnp.ndarray, op_val: jnp.ndarray,
+            want_read: jnp.ndarray, want_write: jnp.ndarray,
+            wval: jnp.ndarray, delays: jnp.ndarray, credits: jnp.ndarray
+            ) -> Tuple[EngineMNState, StepMNOutput]:
+    """One fused engine step over all remotes and lines."""
+    nop = jnp.int8(int(MsgType.NOP))
+    R, L = st.hreq_pending.shape
+    msg_count, payload_msgs = st.msg_count, st.payload_msgs
+
+    v_tick = jax.vmap(tp.tick)
+    v_sub = jax.vmap(tp.submit, in_axes=(0, None, 0, 0, 0, 0, None))
+    v_deliver = jax.vmap(tp.deliver, in_axes=(0, None, None))
+    a_submit = jax.vmap(functools.partial(ag.submit, tables))
+    a_resp = jax.vmap(functools.partial(ag.on_response, tables,
+                                        nack_holds=True))
+    a_home = jax.vmap(functools.partial(ag.on_home_msg, tables))
+    inf_credits = jnp.full_like(credits, 1 << 30)
+
+    # accumulate new home-side wants.
+    want_read = st.want_read | want_read
+    want_write = st.want_write | want_write
+    wv = jnp.where((want_write & ~st.want_write)[:, None], wval,
+                   st.want_wval)
+
+    # ---- 1. time advances on all channels --------------------------------
+    ch_req, ch_resp = v_tick(st.ch_req), v_tick(st.ch_resp)
+    ch_hreq, ch_hresp = v_tick(st.ch_hreq), v_tick(st.ch_hresp)
+
+    # ---- 2. downgrade replies arrive at the home -------------------------
+    ch_hresp_in = ch_hresp
+    ch_hresp, hr_arr = v_deliver(ch_hresp, tp.CLASS_REMOTE_RESP, delays)
+    rep_kind = jnp.where(
+        st.hreq_pending == int(MsgType.HOME_DOWNGRADE_S),
+        jnp.int8(int(MnAbsorb.REPLY_S)), jnp.int8(int(MnAbsorb.REPLY_I)))
+    dstate = dmn.absorb(tables_mn, st.dir, hr_arr, rep_kind,
+                        ch_hresp_in.dirty, ch_hresp_in.payload)
+    hreq_pending = jnp.where(hr_arr, nop, st.hreq_pending)
+    msg_count, payload_msgs = _count(msg_count, payload_msgs, hr_arr,
+                                     ch_hresp_in.msg, ch_hresp_in.dirty)
+
+    # ---- 3. voluntary downgrades arrive at the home ----------------------
+    ready_req = _ready(ch_req, tp.CLASS_REMOTE_REQ, delays)
+    is_vol = (ch_req.msg == int(MsgType.VOL_DOWNGRADE_I)) | \
+             (ch_req.msg == int(MsgType.VOL_DOWNGRADE_S))
+    pop_vol = ready_req & is_vol
+    dstate = dmn.absorb(
+        tables_mn, dstate, pop_vol,
+        jnp.full((R, L), int(MnAbsorb.VOL_I), jnp.int8),
+        ch_req.dirty, ch_req.payload)
+    msg_count, payload_msgs = _count(msg_count, payload_msgs, pop_vol,
+                                     ch_req.msg, ch_req.dirty)
+
+    # ---- 4. request arbitration: ONE request per free line ---------------
+    req_ready = ready_req & ~is_vol
+    # a line is free for a new transaction only when no downgrade round-trip
+    # is outstanding AND no grant response is still in flight — otherwise a
+    # fan-out invalidation could cross the previous requester's grant (the
+    # delivered response would resurrect a sharer the directory just wrote
+    # off).  Per-line serialization, as in the 2-node engine's step 6/7.
+    resp_in_flight = (ch_resp.msg != nop).any(axis=0)
+    line_free = (st.txn_msg == nop) & ~(hreq_pending != nop).any(axis=0) & \
+        ~resp_in_flight
+    any_req = req_ready.any(axis=0)
+    winner = jnp.argmax(req_ready, axis=0)                   # lowest remote
+    accept_line = any_req & line_free
+    lines = jnp.arange(L)
+    win_msg = ch_req.msg[winner, lines]
+    pop_req = accept_line[None, :] & \
+        (jnp.arange(R)[:, None] == winner[None, :])
+    ch_req = _pop(ch_req, pop_vol | (pop_req & req_ready))
+    txn_msg = jnp.where(accept_line, win_msg, st.txn_msg)
+    txn_node = jnp.where(accept_line, winner, st.txn_node)
+    msg_count, payload_msgs = _count(
+        msg_count, payload_msgs, accept_line, win_msg,
+        jnp.zeros((L,), bool))
+
+    # ---- 5. fan-out: emit one HOME_DOWNGRADE_* per conflicting sharer ----
+    active_txn = txn_msg != nop
+    # an UPGRADE whose requester was concurrently invalidated is doomed to
+    # a NACK — suppress its fan-out so the new owner keeps the line.
+    req_view_now = dstate.view[txn_node, lines].astype(jnp.int32)
+    doomed = active_txn & (txn_msg == int(MsgType.REQ_UPGRADE)) & \
+        (req_view_now != int(RemoteView.S))
+    needed = dmn.needed_downgrades(dstate, active_txn & ~doomed,
+                                   txn_msg, txn_node)
+    send_h = (needed != nop) & (hreq_pending == nop)
+    ch_hreq, acc_h = v_sub(ch_hreq, tp.CLASS_HOME_REQ, send_h, needed,
+                           jnp.zeros((R, L), bool),
+                           jnp.zeros_like(st.ch_hreq.payload), credits)
+    hreq_pending = jnp.where(acc_h, needed, hreq_pending)
+
+    # ---- 6. grant parked requests whose preconditions now hold -----------
+    in_flight_vol = ((ch_req.msg == int(MsgType.VOL_DOWNGRADE_I)) |
+                     (ch_req.msg == int(MsgType.VOL_DOWNGRADE_S))
+                     ).any(axis=0)
+    in_flight_h = (ch_hreq.msg != nop).any(axis=0) | \
+                  (ch_hresp.msg != nop).any(axis=0)
+    # `needed` must be EMPTY, not merely pending-free: a fan-out submission
+    # refused for credit leaves hreq_pending == NOP with the sharer's view
+    # intact — granting then would hand out exclusivity while the line is
+    # still shared.  (Step 10's ready_w carries the same guard.)
+    complete = active_txn & ~(needed != nop).any(axis=0) & \
+        ~(hreq_pending != nop).any(axis=0) & \
+        ~in_flight_vol & ~in_flight_h
+    dstate, resp, resp_pay = dmn.grant(tables_mn, dstate, complete,
+                                       txn_msg, txn_node)
+    txn_msg = jnp.where(complete, nop, txn_msg)
+    send_resp = (jnp.arange(R)[:, None] == txn_node[None, :]) & \
+        (resp != nop)[None, :]
+    ch_resp, _ = v_sub(ch_resp, tp.CLASS_HOME_RESP, send_resp,
+                       jnp.broadcast_to(resp, (R, L)),
+                       jnp.zeros((R, L), bool),
+                       jnp.broadcast_to(resp_pay, (R, L) + resp_pay.shape[1:]),
+                       inf_credits)
+    carries = (resp == int(MsgType.RESP_DATA)) | \
+              (resp == int(MsgType.RESP_DATA_DIRTY))
+    msg_count, payload_msgs = _count(msg_count, payload_msgs,
+                                     resp != nop, resp, carries)
+
+    # ---- 7. grant responses arrive at the remotes ------------------------
+    ch_resp_in = ch_resp
+    ch_resp, r_arr = v_deliver(ch_resp, tp.CLASS_HOME_RESP, delays)
+    was_load = st.agents.pending_op == int(LocalOp.LOAD)
+    agents, _nack = a_resp(st.agents, r_arr, ch_resp_in.msg,
+                           ch_resp_in.payload)
+    load_done = r_arr & was_load & ~_nack
+    load_val = jnp.where(load_done[:, :, None], agents.cache, 0)
+
+    # ---- 8. home-initiated downgrades arrive at the remotes --------------
+    ch_hreq_in = ch_hreq
+    ch_hreq, h_arr = v_deliver(ch_hreq, tp.CLASS_HOME_REQ, delays)
+    agents, hresp, hresp_dirty, hresp_pay = a_home(agents, h_arr,
+                                                   ch_hreq_in.msg)
+    msg_count, payload_msgs = _count(msg_count, payload_msgs, h_arr,
+                                     ch_hreq_in.msg,
+                                     jnp.zeros((R, L), bool))
+    ch_hresp, _ = v_sub(ch_hresp, tp.CLASS_REMOTE_RESP, hresp != nop,
+                        hresp, hresp_dirty, hresp_pay, inf_credits)
+
+    # ---- 9. remotes submit local ops (fresh + parked retries) ------------
+    locked = (hreq_pending != nop) | (ch_hreq.msg != nop)
+    parked = (agents.pending_op != int(LocalOp.NOP)) & \
+             (agents.pending_req == nop)
+    eff_op = jnp.where(parked, agents.pending_op, op)
+    eff_op = jnp.where(locked, jnp.int8(int(LocalOp.NOP)), eff_op)
+    # the N-remote envelope excludes DEMOTE (see module docstring).
+    eff_op = jnp.where(eff_op == int(LocalOp.DEMOTE),
+                       jnp.int8(int(LocalOp.NOP)), eff_op)
+    # An op that would emit a message stalls until the transport CAN take
+    # it (slot + credit) — see engine.stall_unready_ops for the dirty-
+    # eviction drop this prevents.
+    v_stall = jax.vmap(functools.partial(stall_unready_ops, tables),
+                       in_axes=(0, 0, 0, 0, None))
+    eff_op = v_stall(ch_req, eff_op, agents.remote_state, op_val, credits)
+    eff_val = jnp.where(parked[:, :, None], agents.pending_val, op_val)
+    agents2, accepted, emit, req_dirty, req_pay = a_submit(agents, eff_op,
+                                                           eff_val)
+    ch_req, acc_req = v_sub(ch_req, tp.CLASS_REMOTE_REQ, emit != nop, emit,
+                            req_dirty, req_pay, credits)
+    refused = (emit != nop) & ~acc_req
+    agents2 = agents2._replace(
+        pending_req=jnp.where(refused, nop, agents2.pending_req))
+    # load hits retire immediately.
+    o = eff_op.astype(jnp.int32)
+    rs = agents.remote_state.astype(jnp.int32)
+    hit = jnp.asarray(tables.loc_hit)[o, rs]
+    load_hit = accepted & hit & (o == int(LocalOp.LOAD))
+    load_done = load_done | load_hit
+    load_val = jnp.where(load_hit[:, :, None], agents2.cache, load_val)
+
+    # ---- 10. home-side accesses ------------------------------------------
+    busy = ((ch_req.msg != nop).any(axis=0)
+            | (ch_resp.msg != nop).any(axis=0)
+            | (ch_hreq.msg != nop).any(axis=0)
+            | (ch_hresp.msg != nop).any(axis=0)
+            | (agents2.pending_req != nop).any(axis=0)
+            | (agents2.pending_op != int(LocalOp.NOP)).any(axis=0))
+    want_service = (want_read | want_write) & (txn_msg == nop)
+    needed_w = dmn.home_needed_downgrades(
+        dstate, want_read & want_service, want_write & want_service)
+    send_w = (needed_w != nop) & (hreq_pending == nop) & ~busy[None, :]
+    ch_hreq, acc_w = v_sub(ch_hreq, tp.CLASS_HOME_REQ, send_w, needed_w,
+                           jnp.zeros((R, L), bool),
+                           jnp.zeros_like(st.ch_hreq.payload), credits)
+    hreq_pending = jnp.where(acc_w, needed_w, hreq_pending)
+    ready_w = want_service & ~(needed_w != nop).any(axis=0) & \
+        ~(hreq_pending != nop).any(axis=0) & ~busy
+    hread_done = ready_w & want_read
+    hread_val = jnp.where(hread_done[:, None], dmn.home_value(dstate), 0)
+    dstate = dmn.home_apply_write(dstate, ready_w & want_write, wv)
+    want_read2 = want_read & ~ready_w
+    want_write2 = want_write & ~ready_w
+
+    new = EngineMNState(
+        dir=dstate, agents=agents2,
+        ch_req=ch_req, ch_resp=ch_resp, ch_hreq=ch_hreq, ch_hresp=ch_hresp,
+        hreq_pending=hreq_pending, txn_msg=txn_msg, txn_node=txn_node,
+        want_read=want_read2, want_write=want_write2, want_wval=wv,
+        msg_count=msg_count, payload_msgs=payload_msgs,
+        step_no=st.step_no + 1,
+    )
+    caller_taken = accepted & ~parked
+    return new, StepMNOutput(load_done, load_val, hread_done, hread_val,
+                             caller_taken)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step_mn(moesi: bool):
+    """One compiled step per protocol mode, shared across engine instances
+    (shape changes retrace inside jax.jit's own cache)."""
+    tables = FULL if moesi else MINIMAL
+    tables_mn = MN_FULL if moesi else MN_MINIMAL
+    return jax.jit(functools.partial(step_mn, tables, tables_mn))
+
+
+class EngineMN:
+    """Convenience wrapper binding mode/config and jitting the step."""
+
+    def __init__(self, backing: jnp.ndarray, n_remotes: int,
+                 moesi: bool = True,
+                 delays: Optional[np.ndarray] = None,
+                 credits: Optional[np.ndarray] = None):
+        assert 1 <= n_remotes <= MAX_REMOTES, \
+            f"EWF carries 2-bit node ids (n_remotes={n_remotes})"
+        self.n_remotes = n_remotes
+        self.moesi = moesi
+        self.tables = FULL if moesi else MINIMAL
+        self.tables_mn = MN_FULL if moesi else MN_MINIMAL
+        self.n_lines, self.block = backing.shape
+        self.delays = jnp.asarray(
+            delays if delays is not None else tp.DEFAULT_DELAYS)
+        self.credits = jnp.asarray(
+            credits if credits is not None else tp.DEFAULT_CREDITS)
+        self._step = _jitted_step_mn(moesi)
+        self._backing = backing
+
+    def init(self) -> EngineMNState:
+        return make_engine_mn_state(self._backing, self.n_remotes)
+
+    def step(self, st: EngineMNState, op=None, op_val=None,
+             want_read=None, want_write=None, wval=None
+             ) -> Tuple[EngineMNState, StepMNOutput]:
+        R, L, B = self.n_remotes, self.n_lines, self.block
+        dt = st.dir.backing.dtype
+        if op is None:
+            op = jnp.zeros((R, L), jnp.int8)
+        if op_val is None:
+            op_val = jnp.zeros((R, L, B), dt)
+        if want_read is None:
+            want_read = jnp.zeros((L,), bool)
+        if want_write is None:
+            want_write = jnp.zeros((L,), bool)
+        if wval is None:
+            wval = jnp.zeros((L, B), dt)
+        return self._step(st, op, op_val, want_read, want_write, wval,
+                          self.delays, self.credits)
+
+    def drain(self, st: EngineMNState, max_steps: int = 128
+              ) -> EngineMNState:
+        """Run empty steps until every transaction retires."""
+        for _ in range(max_steps):
+            if self.quiescent(st):
+                break
+            st, _ = self.step(st)
+        return st
+
+    def quiescent(self, st: EngineMNState) -> bool:
+        # one fused expression -> a single device-to-host sync per call
+        # (drain loops poll this every round).
+        busy = ((st.agents.pending_req != 0).sum()
+                + (st.agents.pending_op != 0).sum()
+                + (st.hreq_pending != 0).sum()
+                + (st.txn_msg != 0).sum()
+                + st.want_read.sum() + st.want_write.sum())
+        for ch in (st.ch_req, st.ch_resp, st.ch_hreq, st.ch_hresp):
+            busy = busy + (ch.msg != 0).sum()
+        return int(busy) == 0

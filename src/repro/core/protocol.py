@@ -493,6 +493,309 @@ def verify_envelope(tables: DenseTables) -> List[str]:
     return violations
 
 
+# ---------------------------------------------------------------------------
+# N-remote (sharer-vector) dense-table extensions (paper §4.1).
+#
+# The paper's formal specification "covered 4-node NUMA systems"; the tables
+# below are its executable superset for one home + up to 4 caching remotes.
+# The DIRECTORY keeps a per-remote view vector (a full-map sharer directory a
+# la Censier-Feautrier, paper ref [10]); a request is granted only after the
+# home has fanned out and collected every needed downgrade, so the grant
+# tables are keyed on (request msg, home state) alone — the requester's view
+# and the other remotes' views are preconditions enforced by the directory's
+# needed-downgrade rule (``mn_needed_mask``), checked mechanically by
+# ``verify_envelope_mn``.
+#
+# The N-remote envelope is the MultiNodeRef superset: local ops exclude
+# DEMOTE (transition 7), a sound subset under requirement 5 (the workload
+# guarantees no VOL_DOWNGRADE_S is ever generated).
+# ---------------------------------------------------------------------------
+
+
+class MnAbsorb:
+    """Kinds of payload-absorbing messages the MN home can receive."""
+
+    VOL_I = 0     # voluntary downgrade-to-I from a remote (transitions 4-6)
+    REPLY_S = 1   # reply to HOME_DOWNGRADE_S (transition 9)
+    REPLY_I = 2   # reply to HOME_DOWNGRADE_I (transition 8)
+    N = 3
+
+
+#: Local ops admitted by the N-remote envelope (DEMOTE excluded, see above).
+MN_LOCAL_OPS = frozenset({LocalOp.NOP, LocalOp.LOAD, LocalOp.STORE,
+                          LocalOp.EVICT})
+
+#: Requests the MN remote may send and the requester view each requires.
+MN_REQUEST_VIEW = {
+    int(M.REQ_READ_SHARED): int(V.I),
+    int(M.REQ_READ_EXCL): int(V.I),
+    int(M.REQ_UPGRADE): int(V.S),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseTablesMN:
+    """Sharer-vector home tables (gather-friendly), layered on DenseTables.
+
+    grant_*: [N_MSG, N_HOME] — effect of granting a request once its
+      downgrade preconditions hold (post-fan-out).
+    absorb_*: [MnAbsorb.N, 2, N_HOME] — effect of a downgrade payload
+      arriving at the home, indexed by (kind, dirty, home state).
+    """
+
+    grant_new_home: np.ndarray    # [msg, home] -> HomeState
+    grant_resp: np.ndarray        # [msg, home] -> MsgType of the response
+    grant_wb: np.ndarray          # [msg, home] -> write home_buf to backing
+    grant_legal: np.ndarray       # [msg, home] -> bool
+    grant_view: np.ndarray        # [msg] -> requester RemoteView after grant
+    absorb_new_home: np.ndarray   # [kind, dirty, home] -> HomeState
+    absorb_to_backing: np.ndarray  # [kind, dirty, home] -> payload->backing
+    absorb_to_homebuf: np.ndarray  # [kind, dirty, home] -> payload->home_buf
+    base: DenseTables
+    moesi: bool
+
+
+def bake_mn(moesi: bool) -> DenseTablesMN:
+    """Bake the N-remote grant/absorb tables for MESI or MOESI mode.
+
+    Semantics mirror the atomic oracle ``core.multinode.MultiNodeRef``
+    transition for transition — the bisimulation tests in
+    ``tests/test_engine_mn.py`` hold the two to state/value equality.
+    """
+    g_nh = np.zeros((N_MSG, N_HOME), np.int8)
+    g_rp = np.full((N_MSG, N_HOME), int(M.RESP_NACK), np.int8)
+    g_wb = np.zeros((N_MSG, N_HOME), bool)
+    g_lg = np.zeros((N_MSG, N_HOME), bool)
+    g_vw = np.zeros((N_MSG,), np.int8)
+
+    rs = int(M.REQ_READ_SHARED)
+    re = int(M.REQ_READ_EXCL)
+    up = int(M.REQ_UPGRADE)
+
+    # -- READ_SHARED grant (precondition: no remote owner) -----------------
+    g_vw[rs] = int(V.S)
+    for hs in (H.I, H.S, H.E, H.M, H.O):
+        g_lg[rs, int(hs)] = True
+        g_rp[rs, int(hs)] = int(M.RESP_DATA)     # requirement 4: always clean
+        g_nh[rs, int(hs)] = int(hs)
+    g_nh[rs, int(H.E)] = int(H.S)                # EI -> SS
+    if moesi:
+        g_nh[rs, int(H.M)] = int(H.O)            # transition 10: MI -> (O)S
+    else:
+        g_nh[rs, int(H.M)] = int(H.S)            # write-through, then share
+        g_wb[rs, int(H.M)] = True
+    if not moesi:
+        g_lg[rs, int(H.O)] = False               # O unreachable in MESI mode
+
+    # -- READ_EXCL / UPGRADE grant (precondition: every other view is I) ---
+    for msg, resp in ((re, int(M.RESP_DATA)), (up, int(M.RESP_ACK))):
+        g_vw[msg] = int(V.EM)
+        for hs in (H.I, H.S, H.E, H.M, H.O):
+            g_lg[msg, int(hs)] = True
+            g_rp[msg, int(hs)] = resp            # requirement 4: uniform
+            g_nh[msg, int(hs)] = int(H.I)        # home gives the line up
+            if hs in (H.M, H.O):
+                g_wb[msg, int(hs)] = True        # invisible writeback first
+        if not moesi:
+            g_lg[msg, int(H.O)] = False
+    # an UPGRADE implies the requester holds S, so the home cannot hold the
+    # line exclusively — (E, S) and (M, S) are not joint states.
+    g_lg[up, int(H.E)] = False
+    g_lg[up, int(H.M)] = False
+
+    # -- absorb tables ------------------------------------------------------
+    a_nh = np.zeros((MnAbsorb.N, 2, N_HOME), np.int8)
+    a_bk = np.zeros((MnAbsorb.N, 2, N_HOME), bool)
+    a_hb = np.zeros((MnAbsorb.N, 2, N_HOME), bool)
+    for kind in range(MnAbsorb.N):
+        for dirty in (0, 1):
+            for hs in range(N_HOME):
+                a_nh[kind, dirty, hs] = hs       # default: home unchanged
+    for hs in range(N_HOME):
+        # voluntary downgrade-to-I with a dirty payload (remote was M).
+        if moesi and hs in (int(H.I), int(H.O)):
+            a_nh[MnAbsorb.VOL_I, 1, hs] = int(H.M)   # absorb, stay hidden
+            a_hb[MnAbsorb.VOL_I, 1, hs] = True
+        else:
+            a_bk[MnAbsorb.VOL_I, 1, hs] = True       # write-through
+        # dirty reply to a recall-to-shared (owner was M).
+        if moesi:
+            a_nh[MnAbsorb.REPLY_S, 1, hs] = int(H.O)  # hidden-O (req. 4)
+            a_hb[MnAbsorb.REPLY_S, 1, hs] = True
+        else:
+            a_nh[MnAbsorb.REPLY_S, 1, hs] = int(H.S)  # write back, keep copy
+            a_hb[MnAbsorb.REPLY_S, 1, hs] = True
+            a_bk[MnAbsorb.REPLY_S, 1, hs] = True
+        # dirty reply to an invalidation: write-through in BOTH modes (the
+        # line is about to be granted exclusively; nothing stays at home).
+        a_bk[MnAbsorb.REPLY_I, 1, hs] = True
+
+    return DenseTablesMN(g_nh, g_rp, g_wb, g_lg, g_vw, a_nh, a_bk, a_hb,
+                         FULL if moesi else MINIMAL, moesi)
+
+
+MN_MINIMAL = bake_mn(moesi=False)
+MN_FULL = bake_mn(moesi=True)
+
+
+def mn_needed_mask(msg: int, requester_view: int, other_view: int) -> int:
+    """The directory's fan-out rule (pure python, used by the envelope
+    checker; the vectorized twin lives in ``core.directory_mn``): which
+    HOME_DOWNGRADE_* (or NOP) must be sent to a remote holding
+    ``other_view`` before ``msg`` can be granted."""
+    if msg == int(M.REQ_READ_SHARED):
+        # only an exclusive owner blocks a shared grant (transition 9).
+        return int(M.HOME_DOWNGRADE_S) if other_view == int(V.EM) \
+            else int(M.NOP)
+    if msg in (int(M.REQ_READ_EXCL), int(M.REQ_UPGRADE)):
+        # write-invalidate: every other sharer/owner is invalidated
+        # (transition 8) — one message per sharer, the N-node fan-out cost.
+        return int(M.HOME_DOWNGRADE_I) if other_view != int(V.I) \
+            else int(M.NOP)
+    return int(M.NOP)
+
+
+def verify_envelope_mn(tables: DenseTablesMN) -> List[str]:
+    """Check the §3.3 requirements over the sharer-vector home tables.
+
+    The 2-node ``verify_envelope`` checks the pairwise joint-state tables;
+    this is its N-remote analogue: requirements are checked against the
+    grant/absorb tables plus the fan-out rule, mechanically.  The checks
+    are independent of the remote count — every rule is per-(requester,
+    other-remote), N only scales message counts.
+    """
+    violations: List[str] = []
+    t = tables
+
+    # Distance-from-rest of (home state, REQUESTER view) in the N-remote
+    # setting.  Unlike the pairwise JOINT_RANK, (O, I) and (M, I) with OTHER
+    # remotes sharing are valid here — the rank is w.r.t. this requester.
+    mn_rank: Dict[Tuple[int, int], int] = {
+        (int(H.I), int(V.I)): 0,
+        (int(H.S), int(V.I)): 1, (int(H.E), int(V.I)): 1,
+        (int(H.M), int(V.I)): 2, (int(H.O), int(V.I)): 2,
+        (int(H.S), int(V.S)): 3, (int(H.O), int(V.S)): 3,
+        (int(H.I), int(V.S)): 4,
+        (int(H.I), int(V.EM)): 5,
+    }
+
+    # requirement 1: a grant moves the (home, requester) joint state
+    # monotonically UP the lattice (grants are upgrades by construction;
+    # transition 10's MI -> (O)S is up in this rank, the hidden O sitting
+    # in SS's observational class).
+    for msg, req_view in MN_REQUEST_VIEW.items():
+        for hs in range(N_HOME):
+            if not t.grant_legal[msg, hs]:
+                continue
+            src = mn_rank.get((hs, req_view))
+            dst = mn_rank.get((int(t.grant_new_home[msg, hs]),
+                               int(t.grant_view[msg])))
+            if src is None or dst is None:
+                violations.append(
+                    f"req1: unmappable MN grant {MsgType(msg).name} @ "
+                    f"home={HomeState(hs).name}")
+                continue
+            if dst <= src:
+                violations.append(
+                    f"req1: non-upgrade MN grant {MsgType(msg).name} @ "
+                    f"home={HomeState(hs).name}")
+
+    # requirements 2 and 7 over the remote table (shared with the 2-node
+    # engine; fan-out multiplies messages, not message types): the remote
+    # must be PREPARED for every home-initiated downgrade in every state
+    # (req 7), and the reply is mandatory (req 2).
+    for msg in (int(M.HOME_DOWNGRADE_S), int(M.HOME_DOWNGRADE_I)):
+        for rstate in range(N_REMOTE):
+            if not t.base.rem_legal[msg, rstate]:
+                violations.append(
+                    f"req7: MN remote unprepared for {MsgType(msg).name} in "
+                    f"state {RemoteState(rstate).name}")
+            elif t.base.rem_resp[msg, rstate] == int(M.NOP):
+                violations.append(
+                    "req2: MN home-initiated downgrade without reply")
+
+    # requirement 3: no silent dirty->clean local transition (shared local
+    # table, restricted to the MN op set).
+    for op in MN_LOCAL_OPS:
+        row_ns = int(t.base.loc_new_state[int(op), int(RemoteState.M)])
+        row_rq = int(t.base.loc_request[int(op), int(RemoteState.M)])
+        if row_ns != int(RemoteState.M) and row_rq == int(M.NOP):
+            violations.append(f"req3: silent dirty->clean MN local op {op}")
+
+    # requirement 4: the response to a given request must not depend on the
+    # home's hidden state (S vs E vs M vs O all answer identically).
+    for msg in MN_REQUEST_VIEW:
+        resps = {int(t.grant_resp[msg, hs])
+                 for hs in range(N_HOME) if t.grant_legal[msg, hs]}
+        if len(resps) > 1:
+            violations.append(
+                f"req4: MN remote can distinguish home states via "
+                f"{MsgType(msg).name} responses: {resps}")
+
+    # requirement 5: the home handles everything the MN remote may send —
+    # every request in every legal home state, every absorb kind in every
+    # (dirty, home state) combination.
+    for msg, req_view in MN_REQUEST_VIEW.items():
+        for hs in range(N_HOME):
+            if hs == int(H.O) and not t.moesi:
+                continue                    # O unreachable in MESI mode
+            if (hs, req_view) not in {(h, v) for (h, v) in (
+                    (int(H.I), int(V.I)), (int(H.S), int(V.I)),
+                    (int(H.E), int(V.I)), (int(H.M), int(V.I)),
+                    (int(H.O), int(V.I)), (int(H.S), int(V.S)),
+                    (int(H.O), int(V.S)), (int(H.I), int(V.S)))}:
+                continue                    # source joint state unreachable
+            if not t.grant_legal[msg, hs]:
+                violations.append(
+                    f"req5: MN home cannot grant {MsgType(msg).name} @ "
+                    f"home={HomeState(hs).name}")
+    for kind in range(MnAbsorb.N):
+        for dirty in (0, 1):
+            for hs in range(N_HOME):
+                nh = int(t.absorb_new_home[kind, dirty, hs])
+                if not (0 <= nh < N_HOME):
+                    violations.append(
+                        f"req5: MN absorb {kind} dirty={dirty} "
+                        f"home={HomeState(hs).name} has no outcome")
+
+    # requirement 6: exclusivity — before an exclusive grant the fan-out
+    # rule must demand an invalidation for EVERY other non-I view, and
+    # before a shared grant a recall for every exclusive owner.  The rule
+    # is per-other-remote (the fan-out is a map over the sharer vector),
+    # so enumerating the single other-view domain covers all 3^(R-1)
+    # view-vector combinations — n_remotes scales message COUNT, not the
+    # rule's domain.
+    for msg in MN_REQUEST_VIEW:
+        for v in range(N_VIEW):
+            need = mn_needed_mask(msg, MN_REQUEST_VIEW[msg], v)
+            if msg in (int(M.REQ_READ_EXCL), int(M.REQ_UPGRADE)):
+                if v != int(V.I) and need != int(M.HOME_DOWNGRADE_I):
+                    violations.append(
+                        f"req6: exclusive grant {MsgType(msg).name} "
+                        f"leaves a sharer with view {RemoteView(v).name}")
+            else:
+                if v == int(V.EM) and need != int(M.HOME_DOWNGRADE_S):
+                    violations.append(
+                        "req6: shared grant leaves an exclusive owner")
+                if v == int(V.S) and need != int(M.NOP):
+                    violations.append(
+                        "req6: shared grant needlessly recalls a sharer")
+
+    # requirement 7 (converse of 2): replies/grants the remote must accept —
+    # every grant response type must complete the pending request.
+    for msg in MN_REQUEST_VIEW:
+        for hs in range(N_HOME):
+            if not t.grant_legal[msg, hs]:
+                continue
+            resp = int(t.grant_resp[msg, hs])
+            if int(t.base.resp_new_state[msg, resp]) < 0:
+                violations.append(
+                    f"req7: MN remote cannot complete {MsgType(msg).name} "
+                    f"with {MsgType(resp).name}")
+
+    return violations
+
+
 def count_states_and_transitions(tables: DenseTables) -> Dict[str, int]:
     """Protocol-size metrics used by the specialization benchmark (the
     paper's headline: full protocols have 100+ states; the read-only subset

@@ -158,14 +158,21 @@ class CoherentPrefixTier:
     states live in a host-side pool; reads of a hot prefix hit the
     consumer-side coherent cache — zero interconnect traffic (the
     measurable quantity the benchmark reports).
+
+    ``n_readers > 1`` puts the tier on the N-remote engine: each reader
+    (e.g. a decode replica) owns a coherent cache of its own, and a
+    ``publish`` fans out one invalidation per reader that holds the line —
+    the sharer-vector directory keeping every replica's view exact (the
+    4-node NUMA superset of §4.1 doing real serving work).
     """
 
-    def __init__(self, n_lines: int = 256):
+    def __init__(self, n_lines: int = 256, n_readers: int = 1):
         from ..core import READ_ONLY
         backing = jnp.zeros((n_lines, 2), jnp.float32)   # (slot+1, fp)
-        self.store = CoherentStore(backing, READ_ONLY)
+        self.store = CoherentStore(backing, READ_ONLY, n_remotes=n_readers)
         self.pool: Dict[int, Any] = {}
         self.n_lines = n_lines
+        self.n_readers = n_readers
         self._next_slot = 0
 
     def _line_of(self, prefix: Tuple[int, ...]) -> Tuple[int, float]:
@@ -177,12 +184,14 @@ class CoherentPrefixTier:
         slot = self._next_slot
         self._next_slot += 1
         self.pool[slot] = state
-        # home-side write: invalidates any consumer copies coherently.
+        # home-side write: invalidates every reader's copy coherently (one
+        # HOME_DOWNGRADE_I per sharer on the N-remote engine).
         self.store.home_write([line], jnp.asarray([[slot + 1.0, fp]]))
 
-    def lookup(self, prefix: Tuple[int, ...]) -> Optional[Any]:
+    def lookup(self, prefix: Tuple[int, ...],
+               reader: int = 0) -> Optional[Any]:
         line, fp = self._line_of(prefix)
-        rec = np.asarray(self.store.read([line]))[0]
+        rec = np.asarray(self.store.read([line], node=reader))[0]
         if rec[0] >= 1.0 and rec[1] == fp:
             return self.pool.get(int(rec[0]) - 1)
         return None

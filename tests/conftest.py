@@ -1,0 +1,40 @@
+"""Shared fixtures: small canonical sizes and session-scoped jit warm-up.
+
+The engines share one compiled step per protocol mode (see
+``_jitted_step`` / ``_jitted_step_mn``); warming them once per session at
+the canonical small test shapes keeps every individual test's wall-clock
+down to its actual work instead of first-use compilation.
+"""
+import jax.numpy as jnp
+import pytest
+
+#: canonical small sizes shared by the protocol/engine tests.
+SMALL_LINES, SMALL_BLOCK = 6, 2
+
+
+@pytest.fixture(scope="session")
+def small_backing():
+    """[SMALL_LINES, SMALL_BLOCK] float32 zeros — the common engine seed."""
+    return jnp.zeros((SMALL_LINES, SMALL_BLOCK), jnp.float32)
+
+
+@pytest.fixture(scope="session")
+def warm_engines():
+    """Compile the 2-node and N-remote engine steps once per session.
+
+    Both engine wrappers cache their jitted step per protocol mode, so one
+    dummy step per (mode, shape) here means later tests only pay for the
+    steps they actually run.
+    """
+    from repro.core.engine import Engine
+    from repro.core.engine_mn import EngineMN
+
+    for moesi in (False, True):
+        eng = Engine(jnp.zeros((SMALL_LINES, SMALL_BLOCK), jnp.float32),
+                     moesi=moesi)
+        eng.step(eng.init())
+        for n_remotes in (2, 3, 4):
+            mn = EngineMN(jnp.zeros((16, SMALL_BLOCK), jnp.float32),
+                          n_remotes=n_remotes, moesi=moesi)
+            mn.step(mn.init())
+    return True

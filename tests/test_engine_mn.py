@@ -1,0 +1,331 @@
+"""N-remote engine tests: mechanical envelope checks for the sharer-vector
+tables, seeded differential bisimulation of the vectorized engine against
+the atomic ``MultiNodeRef`` oracle (N in {2,3,4}, MESI + MOESI), race
+stress under concurrent same-line traffic, and the fan-out cost law.
+
+No ``hypothesis`` dependency: schedules come from ``random.Random(seed)``,
+so this module runs (and the envelope requirements stay checked) on
+minimal environments where the property-test modules skip.
+
+Lines are independent coherence units, so one "schedule" is the op
+sequence of one line; a run of L lines x T rounds executes L schedules
+concurrently against one engine — which is how the slow tier reaches the
+5k-schedule bisimulation budget without 5k python drain loops.
+"""
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine_mn import EngineMN
+from repro.core.multinode import MultiNodeRef
+from repro.core.protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL,
+                                 LocalOp, verify_envelope,
+                                 verify_envelope_mn)
+from repro.core.states import HomeState as H
+from repro.core.states import RemoteState as R_
+
+BLOCK = 2
+
+
+# ---------------------------------------------------------------------------
+# Envelope requirements (§3.3), checked mechanically over the tables.
+# ---------------------------------------------------------------------------
+
+
+def test_envelope_2node_tables():
+    """The 2-node checks, re-asserted here so minimal environments (no
+    hypothesis -> test_protocol skips) still verify the envelope."""
+    assert verify_envelope(MINIMAL) == []
+    assert verify_envelope(FULL) == []
+
+
+@pytest.mark.parametrize("tables", [MN_MINIMAL, MN_FULL],
+                         ids=["mesi", "moesi"])
+def test_envelope_mn_tables(tables):
+    """All 7 requirements hold for the sharer-vector home tables (the
+    checks are per-remote-pair rules, independent of N)."""
+    assert verify_envelope_mn(tables) == []
+
+
+# ---------------------------------------------------------------------------
+# Differential bisimulation driver.
+# ---------------------------------------------------------------------------
+
+KINDS = ["load", "store", "evict", "hread", "hwrite", "load", "store"]
+
+
+def _run_round(eng, st, sched, n_remotes, n_lines):
+    """Submit one op per line (each at its scheduled node) and drain."""
+    op = np.zeros((n_remotes, n_lines), np.int8)
+    val = np.zeros((n_remotes, n_lines, BLOCK), np.float32)
+    wr = np.zeros((n_lines,), bool)
+    ww = np.zeros((n_lines,), bool)
+    wv = np.zeros((n_lines, BLOCK), np.float32)
+    for line, (kind, node, v) in enumerate(sched):
+        if kind == "load":
+            op[node, line] = LocalOp.LOAD
+        elif kind == "store":
+            op[node, line] = LocalOp.STORE
+            val[node, line] = v
+        elif kind == "evict":
+            op[node, line] = LocalOp.EVICT
+        elif kind == "hread":
+            wr[line] = True
+        else:
+            ww[line] = True
+            wv[line] = v
+    opv, vv = jnp.asarray(op), jnp.asarray(val)
+    st, out = eng.step(st, op=opv, op_val=vv, want_read=jnp.asarray(wr),
+                       want_write=jnp.asarray(ww), wval=jnp.asarray(wv))
+    opv = jnp.where(out.accepted, 0, opv).astype(jnp.int8)
+    for _ in range(300):
+        if not bool(opv.any()) and eng.quiescent(st):
+            return st
+        st, out = eng.step(st, op=opv, op_val=vv)
+        opv = jnp.where(out.accepted, 0, opv).astype(jnp.int8)
+    raise AssertionError("engine failed to quiesce within the round budget")
+
+
+def _assert_bisimilar(st, ref, n_remotes, n_lines):
+    """State/value/sharer-mask agreement at quiescence (the acceptance
+    criterion of the N-remote engine)."""
+    rs = np.asarray(st.agents.remote_state)
+    hs = np.asarray(st.dir.home_state)
+    view = np.asarray(st.dir.view)
+    cache = np.asarray(st.agents.cache)
+    hbuf = np.asarray(st.dir.home_buf)
+    backing = np.asarray(st.dir.backing)
+    assert int(st.dir.illegal) == 0
+    assert int(np.asarray(st.agents.illegal).sum()) == 0
+
+    ref_rs = np.asarray([[int(s) for s in ref.remote_state[r]]
+                         for r in range(n_remotes)])
+    np.testing.assert_array_equal(rs, ref_rs, err_msg="remote states")
+    np.testing.assert_array_equal(
+        hs, np.asarray([int(s) for s in ref.home_state]),
+        err_msg="home states")
+    # sharer mask: the directory's view vector must equal the oracle's
+    # actual sharer set (full-map accuracy at quiescence).
+    eng_sharers = view != 0
+    ref_sharers = ref_rs != int(R_.I)
+    np.testing.assert_array_equal(eng_sharers, ref_sharers,
+                                  err_msg="sharer mask")
+    view_of = {int(R_.I): 0, int(R_.S): 1, int(R_.E): 2, int(R_.M): 2}
+    np.testing.assert_array_equal(
+        view, np.vectorize(view_of.get)(ref_rs), err_msg="views")
+    for line in range(n_lines):
+        for r in range(n_remotes):
+            if ref_rs[r, line] != int(R_.I):
+                assert cache[r, line, 0] == ref.remote_cache[r][line], \
+                    f"remote {r} cache value on line {line}"
+        if hs[line] != int(H.I):
+            assert hbuf[line, 0] == ref.home_buf[line], \
+                f"home_buf on line {line}"
+        assert backing[line, 0] == ref.backing[line], \
+            f"backing on line {line}"
+
+
+def run_bisimulation(seed, n_remotes, moesi, n_lines, rounds):
+    """One engine vs one oracle over ``n_lines`` concurrent schedules."""
+    rng = random.Random(seed)
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, moesi=moesi)
+    st = eng.init()
+    ref = MultiNodeRef(n_lines, n_remotes=n_remotes, moesi=moesi)
+    for _ in range(rounds):
+        sched = [(rng.choice(KINDS), rng.randrange(n_remotes),
+                  rng.randrange(1, 100)) for _ in range(n_lines)]
+        st = _run_round(eng, st, sched, n_remotes, n_lines)
+        for line, (kind, node, v) in enumerate(sched):
+            if kind == "load":
+                ref.load(node, line)
+            elif kind == "store":
+                ref.store(node, line, v)
+            elif kind == "evict":
+                ref.evict(node, line)
+            elif kind == "hread":
+                ref.home_read(line)
+            else:
+                ref.home_write(line, v)
+        ref.check_all()
+        _assert_bisimilar(st, ref, n_remotes, n_lines)
+    return n_lines  # schedules executed
+
+
+@pytest.mark.parametrize("moesi", [False, True], ids=["mesi", "moesi"])
+@pytest.mark.parametrize("n_remotes", [2, 3, 4])
+def test_engine_mn_bisimulates_oracle(n_remotes, moesi, warm_engines):
+    """Fast tier: 16 schedules x 6 rounds per (N, mode)."""
+    run_bisimulation(seed=1009 * n_remotes + int(moesi),
+                     n_remotes=n_remotes, moesi=moesi,
+                     n_lines=16, rounds=6)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("moesi", [False, True], ids=["mesi", "moesi"])
+@pytest.mark.parametrize("n_remotes", [2, 3, 4])
+def test_engine_mn_bisimulates_oracle_5k(n_remotes, moesi):
+    """Slow tier: >= 5000 random op schedules across the 6 configs
+    (6 x 9 seeds x 96 lines = 5184), each schedule 10 rounds deep."""
+    total = 0
+    for seed in range(9):
+        total += run_bisimulation(seed=7919 * seed + 13 * n_remotes
+                                  + int(moesi), n_remotes=n_remotes,
+                                  moesi=moesi, n_lines=96, rounds=10)
+    assert total * 6 >= 5000   # per-config share of the fleet budget
+
+
+# ---------------------------------------------------------------------------
+# Race stress: concurrent same-line traffic from every remote.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("moesi", [False, True], ids=["mesi", "moesi"])
+def test_engine_mn_concurrent_races(moesi):
+    """All four remotes hammer the same few lines concurrently; at each
+    quiescence the single-writer, sharer-exclusivity and value-coherence
+    invariants must hold (the oracle is atomic, so interleavings are
+    checked against invariants rather than a unique reference state)."""
+    n_lines, n_remotes = 4, 4
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, moesi=moesi)
+    st = eng.init()
+    rng = random.Random(23 + int(moesi))
+    for t in range(25):
+        op = np.zeros((n_remotes, n_lines), np.int8)
+        val = np.zeros((n_remotes, n_lines, BLOCK), np.float32)
+        for r in range(n_remotes):
+            for line in range(n_lines):
+                if rng.random() < 0.6:
+                    op[r, line] = rng.choice(
+                        [LocalOp.LOAD, LocalOp.STORE, LocalOp.STORE,
+                         LocalOp.EVICT])
+                    val[r, line] = 100 * r + t
+        opv, vv = jnp.asarray(op), jnp.asarray(val)
+        for _ in range(400):
+            st, out = eng.step(st, op=opv, op_val=vv)
+            opv = jnp.where(out.accepted, 0, opv).astype(jnp.int8)
+            if not bool(opv.any()) and eng.quiescent(st):
+                break
+        else:
+            raise AssertionError(f"round {t} failed to quiesce")
+        rs = np.asarray(st.agents.remote_state)
+        hs = np.asarray(st.dir.home_state)
+        cache = np.asarray(st.agents.cache)
+        owners = rs >= int(R_.E)
+        assert owners.sum(axis=0).max() <= 1, "two owners on a line"
+        owned = owners.any(axis=0)
+        assert not (owned & ((rs != 0).sum(axis=0) > 1)).any(), \
+            "owner coexists with sharers"
+        assert not (owned & (hs != int(H.I))).any(), \
+            "exclusive owner but home not I"
+        assert int(st.dir.illegal) == 0
+        assert int(np.asarray(st.agents.illegal).sum()) == 0
+        for line in range(n_lines):
+            vals = {float(cache[r, line, 0]) for r in range(n_remotes)
+                    if rs[r, line] != 0}
+            assert len(vals) <= 1, f"sharers disagree on line {line}"
+            dirty = (rs[:, line] == int(R_.M)).any() or \
+                hs[line] in (int(H.M), int(H.O))
+            if vals and not dirty:
+                assert float(np.asarray(st.dir.backing)[line, 0]) in vals, \
+                    f"clean line {line} stale in backing"
+
+
+# ---------------------------------------------------------------------------
+# Fan-out cost: one invalidation per sharer (the §4.1 scaling law).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_remotes", [2, 3, 4])
+def test_engine_mn_fanout_cost(n_remotes):
+    """An exclusive grant costs exactly (sharers - 1) HOME_DOWNGRADE_I
+    messages — the engine's count matches the oracle's count matches the
+    analytic model, quantifying what the 2-node subset avoids."""
+    from repro.core.messages import MsgType
+    eng = EngineMN(jnp.zeros((2, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, moesi=True)
+    st = eng.init()
+    for node in range(n_remotes):    # every remote shares both lines
+        st = _run_round(eng, st, [("load", node, 0), ("load", node, 0)],
+                        n_remotes, 2)
+    before = int(st.msg_count[int(MsgType.HOME_DOWNGRADE_I)])
+    st = _run_round(eng, st, [("store", 0, 7), ("store", 0, 7)],
+                    n_remotes, 2)
+    sent = int(st.msg_count[int(MsgType.HOME_DOWNGRADE_I)]) - before
+    assert sent == 2 * (n_remotes - 1), (sent, n_remotes)
+
+    ref = MultiNodeRef(1, n_remotes=n_remotes)
+    for node in range(n_remotes):
+        ref.load(node, 0)
+    before = ref.invalidation_messages()
+    ref.store(0, 0, 7)
+    assert ref.invalidation_messages() - before == n_remotes - 1
+
+
+def test_engine_mn_fanout_under_credit_pressure():
+    """A mass store against mass sharers exhausts the 64-credit home-
+    request VC mid-fan-out; refused invalidations must DEFER the grant,
+    not skip it (regression: grants used to fire with sharers intact,
+    serving stale cache hits forever with illegal == 0)."""
+    from repro.core import CoherentStore, FULL_MOESI
+    n = 256                       # 128 per odd/even VC > 64 credits
+    cs = CoherentStore(jnp.zeros((n, BLOCK), jnp.float32), FULL_MOESI,
+                       n_remotes=2)
+    ids = np.arange(n)
+    cs.read(ids, node=1)          # node 1 shares every line
+    cs.read(ids, node=0)
+    cs.write(ids, jnp.full((n, BLOCK), 1.0), node=0)   # mass fan-out
+    rs1 = np.asarray(cs.state.agents.remote_state)[1]
+    assert (rs1 == int(R_.I)).all(), \
+        f"{(rs1 != 0).sum()} sharers survived the fan-out"
+    got = np.asarray(cs.read(ids, node=1))
+    assert (got == 1.0).all(), \
+        f"{(got != 1.0).all(axis=1).sum()} stale reads at node 1"
+
+
+# ---------------------------------------------------------------------------
+# The stack above the engine: CoherentStore and the serving tier.
+# ---------------------------------------------------------------------------
+
+
+def test_coherent_store_multi_reader():
+    """Three consumers against one store: dirty forwarding, fan-out
+    invalidation and home access all through the public API."""
+    from repro.core import CoherentStore, FULL_MOESI
+    backing = jnp.arange(12.0).reshape(6, 2)
+    cs = CoherentStore(backing, FULL_MOESI, n_remotes=3)
+    np.testing.assert_allclose(np.asarray(cs.read([0, 1], node=0)),
+                               [[0., 1.], [2., 3.]])
+    cs.write([0], jnp.asarray([[9., 9.]]), node=2)      # invalidates node 0
+    np.testing.assert_allclose(np.asarray(cs.read([0], node=1)),
+                               [[9., 9.]])               # dirty forward
+    np.testing.assert_allclose(np.asarray(cs.home_read([0])), [[9., 9.]])
+    msgs = cs.interconnect_messages
+    assert msgs.get("HOME_DOWNGRADE_I", 0) >= 1         # the fan-out paid
+
+
+def test_coherent_store_stateless_rejects_multi_reader(small_backing):
+    from repro.core import CoherentStore, STATELESS
+    with pytest.raises(ValueError):
+        CoherentStore(small_backing, STATELESS, n_remotes=2)
+
+
+def test_prefix_tier_multi_reader():
+    """The serving tier on the N-remote engine: a publish invalidates
+    every reader's cached record coherently."""
+    from repro.serve.engine import CoherentPrefixTier
+    tier = CoherentPrefixTier(n_lines=16, n_readers=3)
+    tier.publish((1, 2, 3), "v1")
+    assert tier.lookup((1, 2, 3), reader=0) == "v1"
+    assert tier.lookup((1, 2, 3), reader=2) == "v1"
+    assert tier.lookup((4, 5), reader=1) is None
+    tier.publish((1, 2, 3), "v2")                        # fan-out invalidate
+    assert tier.lookup((1, 2, 3), reader=0) == "v2"
+    assert tier.lookup((1, 2, 3), reader=2) == "v2"
+    # second lookups hit the per-reader coherent caches
+    h0 = tier.store.hits
+    assert tier.lookup((1, 2, 3), reader=0) == "v2"
+    assert tier.store.hits == h0 + 1

@@ -1,9 +1,14 @@
 """4-node NUMA protocol superset (core/multinode.py): invariants under
 random multi-remote programs + the invalidation fan-out scaling cost."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.multinode import MultiNodeRef
+pytest.importorskip(
+    "hypothesis",
+    reason="reference-model property tests need the optional 'hypothesis' "
+           "package; test_engine_mn.py drives MultiNodeRef without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.multinode import MultiNodeRef  # noqa: E402
 
 N_LINES = 4
 

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="system property tests need the optional 'hypothesis' package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 # ---------------------------------------------------------------------------
 # regex compiler vs python's re (search semantics)

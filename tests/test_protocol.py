@@ -3,7 +3,13 @@ and bisimulation of the vectorized JAX engine against the python oracle."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property/bisimulation tests need the optional 'hypothesis' "
+           "package; the mechanical N-node checks in test_engine_mn.py "
+           "cover the envelope without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.engine import Engine
 from repro.core.model_ref import TwoNodeRef

@@ -10,8 +10,16 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
+import importlib.util
+
 from repro.checkpoint import checkpoint as ck
 from repro.configs import get_config
+
+#: checkpoint serialization needs the optional zstd codec; everything else
+#: in this module runs without it (checkpoint's import is lazy).
+requires_zstd = pytest.mark.skipif(
+    importlib.util.find_spec("zstandard") is None,
+    reason="checkpoint save/load requires the optional 'zstandard' package")
 from repro.data import DataConfig, SyntheticPipeline
 from repro.models import init_params
 from repro.optim import OptimConfig, compression
@@ -30,6 +38,7 @@ def _mesh():
 # ---------------------------------------------------------------------------
 
 
+@requires_zstd
 def test_checkpoint_roundtrip(tmp_path):
     tree = {"a": jnp.arange(10, dtype=jnp.float32),
             "b": {"c": jnp.ones((3, 4), jnp.bfloat16)},
@@ -45,6 +54,7 @@ def test_checkpoint_roundtrip(tmp_path):
                                       np.asarray(b, np.float32))
 
 
+@requires_zstd
 def test_checkpoint_detects_corruption(tmp_path):
     tree = {"w": jnp.arange(1000, dtype=jnp.float32)}
     path = str(tmp_path / "step_2.ckpt")
@@ -57,6 +67,7 @@ def test_checkpoint_detects_corruption(tmp_path):
         ck.load(path, tree)
 
 
+@requires_zstd
 def test_latest_valid_skips_corrupt(tmp_path):
     tree = {"w": jnp.arange(100, dtype=jnp.float32)}
     p1 = ck.step_path(str(tmp_path), 1)
@@ -158,6 +169,7 @@ def _tiny_trainer(ckdir, steps=10, lr=1e-3, seq=16, batch=4, **kw):
     return Trainer(cfg, ocfg, tcfg, mesh, params, dcfg)
 
 
+@requires_zstd
 def test_failure_resume_bitwise(tmp_path):
     ckdir = str(tmp_path / "ck")
     t1 = _tiny_trainer(ckdir)
@@ -175,12 +187,14 @@ def test_failure_resume_bitwise(tmp_path):
                                       np.asarray(b, np.float32))
 
 
+@requires_zstd
 def test_straggler_detection(tmp_path):
     t = _tiny_trainer(str(tmp_path / "ck2"), steps=10)
     res = t.run(delay_at=8)
     assert any(e["step"] == 8 for e in res["stragglers"]), res["stragglers"]
 
 
+@requires_zstd
 def test_loss_decreases(tmp_path):
     t = _tiny_trainer(str(tmp_path / "ck3"), steps=80, lr=5e-3, seq=32,
                       batch=8)
@@ -195,6 +209,7 @@ def test_loss_decreases(tmp_path):
 # ---------------------------------------------------------------------------
 
 
+@requires_zstd
 def test_elastic_resume(tmp_path):
     from repro.runtime import resume_on_mesh
     cfg = get_config("smollm-360m", smoke=True)
