@@ -248,6 +248,48 @@ def bench_fanout() -> List[Row]:
 
 
 # ---------------------------------------------------------------------------
+# §5 streaming microbenchmark: sustained throughput under contention
+# ---------------------------------------------------------------------------
+
+
+def bench_streaming() -> List[Row]:
+    """Sustained ops/step and invalidation fan-out under zipfian hot-line
+    contention for N in {2, 3, 4}, driven by the quiescence-free streaming
+    driver (``repro.traffic``) — the paper's "extensive microbenchmarks"
+    under overlapping traffic rather than drain-to-quiescence rounds.  The
+    max-wait column is the starvation bound the rotating MN arbitration
+    guarantees (fixed-priority arbitration leaves it unbounded)."""
+    from repro.core.engine_mn import EngineMN
+    from repro.traffic import WORKLOADS, run_stream, summarize
+    rows: List[Row] = []
+    n_lines, block, ops = 32, 4, 96
+    for n_remotes in (2, 3, 4):
+        eng = EngineMN(jnp.zeros((n_lines, block), jnp.float32),
+                       n_remotes=n_remotes)
+        wl = WORKLOADS["zipfian"](jax.random.key(0), ops, n_remotes,
+                                  n_lines)
+        steps = 12 * ops
+        run_stream(eng, wl, steps=steps)          # warm the fused scan
+        t0 = time.perf_counter()
+        run = run_stream(eng, wl, steps=steps)
+        dt = time.perf_counter() - t0
+        assert run.completed
+        s = summarize(run.counters, run.msg_count)
+        rows.append((f"stream/zipf_n{n_remotes}", dt * 1e6 / s["steps"],
+                     f"{s['ops_per_step']:.3f} ops/step sustained; "
+                     f"{s['inval_per_excl_grant']:.2f} invals/excl grant; "
+                     f"max_wait {max(s['max_wait'])} steps; peak req "
+                     f"occupancy {s['peak_occupancy']['req']}"))
+    rows.append(("stream/model", 0.0,
+                 "sustained ops/step rises with R then SATURATES (~1) as "
+                 "hot-line serialization + fan-out eat the extra stream; "
+                 "invals/excl-grant grows toward sharers-1 (§4.1) — the "
+                 "interconnect fan-out is the scaling cost; max_wait "
+                 "stays bounded (rotating arbitration)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # §3.4 specialization: protocol-size table
 # ---------------------------------------------------------------------------
 
@@ -265,5 +307,6 @@ def bench_protocol_size() -> List[Row]:
     return rows
 
 
-ALL = [bench_protocol_size, bench_interconnect, bench_fanout, bench_select,
-       bench_pointer_chase, bench_regex, bench_locality]
+ALL = [bench_protocol_size, bench_interconnect, bench_fanout,
+       bench_streaming, bench_select, bench_pointer_chase, bench_regex,
+       bench_locality]

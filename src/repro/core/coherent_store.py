@@ -73,6 +73,12 @@ class CoherentStore:
         self.max_rounds = max_rounds
         #: interconnect accounting for the paper-figure benchmarks
         self.ops_issued = 0
+        #: materialized-generation bit per line: True once the attached
+        #: operator's result (or an explicit write) defines the block's
+        #: content.  Without it, re-reading an EVICTED virtual block
+        #: re-applied the operator over its own previous output — fine for
+        #: idempotent filters, wrong for anything else.
+        self._materialized = np.zeros(self.n_blocks, bool)
 
     # -- internal ----------------------------------------------------------
 
@@ -116,32 +122,30 @@ class CoherentStore:
     def _run_ops(self, opv, val=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Submit an op vector; run until every op retires.
 
+        The whole retire loop is ONE fused ``lax.while_loop`` device
+        program (``Engine.run_ops`` / ``EngineMN.run_ops``) — the python
+        per-round drain it replaces paid a host sync plus a dispatch per
+        engine step (see ``benchmarks/perf_hillclimb.py:run_cell_d``).
+
         Returns per-line (done, vals) reduced over remotes (at most one
         remote acts per line per call through the public API)."""
-        L, B = self.n_blocks, self.block
+        B = self.block
         opv = jnp.asarray(opv, jnp.int8)
         if not self.subset.check_workload(np.asarray(opv).ravel()):
             raise ValueError(
                 f"op program outside subset '{self.subset.name}' guarantee")
         vv = val if val is not None else jnp.zeros(
             opv.shape + (B,), self.state.dir.backing.dtype)
-        done = jnp.zeros((L,), bool)
-        vals = jnp.zeros((L, B), self.state.dir.backing.dtype)
-
-        def round_fn(st):
-            nonlocal opv, done, vals
-            st, out = self.engine.step(st, op=opv, op_val=vv)
-            opv = jnp.where(out.accepted, 0, opv).astype(jnp.int8)
-            if self.n_remotes == 1:
-                ld, lv = out.load_done, out.load_val
-            else:
-                ld = out.load_done.any(axis=0)
-                lv = out.load_val.sum(axis=0)      # one-hot over remotes
-            vals = jnp.where(ld[:, None], lv, vals)
-            done = done | ld
-            return st, bool(opv.any()) or not self.engine.quiescent(st)
-
-        self._drain(round_fn, "coherent ops")
+        st, done, vals, _, still_busy = self.engine.run_ops(
+            self.state, opv, vv, self.max_rounds)
+        self.state = st
+        if bool(still_busy):
+            # raise instead of returning partial results — a silent zero
+            # block is indistinguishable from real data.
+            raise RuntimeError(
+                f"coherent ops did not retire within max_rounds="
+                f"{self.max_rounds}; raise max_rounds for deep fan-out/"
+                f"contention schedules")
         return done, vals
 
     # -- public API --------------------------------------------------------
@@ -174,6 +178,9 @@ class CoherentStore:
         vv = self._val_vec(block_ids, values, node)
         self.ops_issued += len(block_ids)
         self._run_ops(op, vv)
+        # an explicit write defines the block's content: the operator must
+        # not re-run over it if the line is later evicted and re-read.
+        self._materialized[block_ids] = True
 
     def evict(self, block_ids, node: int = 0) -> None:
         block_ids = np.atleast_1d(np.asarray(block_ids))
@@ -213,21 +220,27 @@ class CoherentStore:
             return st, not self.engine.quiescent(st)
 
         self._drain(round_fn, "home_write")
+        self._materialized[block_ids] = True
 
     def _materialize(self, block_ids: np.ndarray) -> None:
         """Run the attached operator at the home for blocks no consumer has
         cached yet (results then flow through the protocol).
 
         A line cached at ANY node already holds the materialized (or
-        since-written) coherent value, so it is served as-is.  For the
-        rest, the operator's source and result both move through the
-        coherent home-side access path: ``home_read`` recalls a dirty home
-        copy invisibly, ``home_write`` installs the result — so a stale
-        ``backing`` is never read or clobbered."""
+        since-written) coherent value, so it is served as-is; a line whose
+        ``_materialized`` generation bit is set already had the operator
+        (or an explicit write) define its content — re-running the
+        operator there would feed it its OWN previous output (wrong for
+        any non-idempotent operator).  For the rest, the operator's source
+        and result both move through the coherent home-side access path:
+        ``home_read`` recalls a dirty home copy invisibly, ``home_write``
+        installs the result — so a stale ``backing`` is never read or
+        clobbered."""
         from .states import RemoteState
         agent = np.asarray(self._agent_states()) != int(RemoteState.I)
         cached = agent if self.n_remotes == 1 else agent.any(axis=0)
-        todo = [int(b) for b in block_ids if not cached[b]]
+        todo = [int(b) for b in block_ids
+                if not cached[b] and not self._materialized[b]]
         if not todo:
             return
         src = self.home_read(todo)

@@ -114,13 +114,65 @@ class Engine:
         # one fused expression -> a single device-to-host sync; drain
         # loops call this every round, so per-term syncs dominate wall-
         # clock otherwise.
-        busy = ((st.agent.pending_req != 0).sum()
-                + (st.agent.pending_op != 0).sum()
-                + (st.hreq_pending != 0).sum()
-                + st.want_read.sum() + st.want_write.sum())
-        for ch in (st.ch_req, st.ch_resp, st.ch_hreq, st.ch_hresp):
-            busy = busy + (ch.msg != 0).sum()
-        return int(busy) == 0
+        return not bool(busy_flag(st))
+
+    def run_ops(self, st: EngineState, opv: jnp.ndarray, op_val: jnp.ndarray,
+                max_rounds: int = 64):
+        """Submit ``opv`` and drain to quiescence in ONE fused while_loop.
+
+        The python-per-round drain this replaces paid a host sync plus a
+        full dispatch per engine step; here the whole retire loop is a
+        single device program.  Returns (state, done[L], vals[L,B],
+        rounds, still_busy) — ``still_busy`` is the traced leftover-work
+        flag the caller turns into the non-retirement error."""
+        return _jitted_run_ops(self.tables.moesi, self.stateless)(
+            st, opv, op_val, self.delays, self.credits,
+            jnp.asarray(max_rounds, jnp.int32))
+
+
+def busy_flag(st: EngineState) -> jnp.ndarray:
+    """Traced scalar bool: any transaction, channel slot or home want is
+    still in flight.  Shared by ``quiescent`` (host-side poll) and the
+    fused drain loops (device-side while_loop condition)."""
+    busy = ((st.agent.pending_req != 0).any()
+            | (st.agent.pending_op != 0).any()
+            | (st.hreq_pending != 0).any()
+            | st.want_read.any() | st.want_write.any())
+    for ch in (st.ch_req, st.ch_resp, st.ch_hreq, st.ch_hresp):
+        busy = busy | (ch.msg != 0).any()
+    return busy
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_run_ops(moesi: bool, stateless: bool):
+    """One fused submit-and-drain program per (mode, stateless) pair,
+    shared across Engine instances exactly like ``_jitted_step``."""
+    tables = FULL if moesi else MINIMAL
+    step_fn = functools.partial(step, tables, stateless=stateless)
+
+    def run(st, opv, vv, delays, credits, max_rounds):
+        L, B = st.dir.backing.shape
+        zb = jnp.zeros((L,), bool)
+        zwv = jnp.zeros((L, B), st.dir.backing.dtype)
+
+        def cond(c):
+            st_, opv_, _, _, rounds = c
+            return (opv_.any() | busy_flag(st_)) & (rounds < max_rounds)
+
+        def body(c):
+            st_, opv_, done, vals, rounds = c
+            st_, out = step_fn(st_, opv_, vv, zb, zb, zwv, delays, credits)
+            opv_ = jnp.where(out.accepted, 0, opv_).astype(jnp.int8)
+            done = done | out.load_done
+            vals = jnp.where(out.load_done[:, None], out.load_val, vals)
+            return (st_, opv_, done, vals, rounds + 1)
+
+        init = (st, opv, zb, jnp.zeros((L, B), st.dir.backing.dtype),
+                jnp.zeros((), jnp.int32))
+        st, opv, done, vals, rounds = jax.lax.while_loop(cond, body, init)
+        return st, done, vals, rounds, opv.any() | busy_flag(st)
+
+    return jax.jit(run)
 
 
 def make_engine_state(backing: jnp.ndarray) -> EngineState:

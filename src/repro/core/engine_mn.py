@@ -9,8 +9,11 @@ drain loop, exactly as in the 2-node engine.
 
 Transaction discipline (the "intermediate states" of a real directory):
 
-* the home parks ONE request per line (``txn_msg``/``txn_node``), fans out
-  one ``HOME_DOWNGRADE_*`` per conflicting sharer (the N-node message cost
+* the home parks ONE request per line (``txn_msg``/``txn_node``), chosen
+  among competing ready requests by a per-line ROTATING priority pointer
+  (``arb_rr``, advanced past each winner — starvation-free under the
+  sustained same-line traffic of ``repro.traffic``), fans out one
+  ``HOME_DOWNGRADE_*`` per conflicting sharer (the N-node message cost
   the paper's 2-node subsetting avoids), and grants once every reply has
   arrived and no voluntary downgrade is still in flight on the line;
 * per-remote per-line channel slots serialize each remote's traffic, so a
@@ -60,6 +63,7 @@ class EngineMNState(NamedTuple):
     hreq_pending: jnp.ndarray    # [R, L] int8: outstanding HOME_DOWNGRADE_*
     txn_msg: jnp.ndarray         # [L] int8: parked request type (NOP = none)
     txn_node: jnp.ndarray        # [L] int32: parked requester id
+    arb_rr: jnp.ndarray          # [L] int32: rotating arbitration pointer
     want_read: jnp.ndarray       # [L] bool: home-side read outstanding
     want_write: jnp.ndarray      # [L] bool: home-side write outstanding
     want_wval: jnp.ndarray       # [L, B]
@@ -95,6 +99,7 @@ def make_engine_mn_state(backing: jnp.ndarray, n_remotes: int
         hreq_pending=jnp.zeros((R, L), jnp.int8),
         txn_msg=jnp.zeros((L,), jnp.int8),
         txn_node=jnp.zeros((L,), jnp.int32),
+        arb_rr=jnp.zeros((L,), jnp.int32),
         want_read=jnp.zeros((L,), bool),
         want_write=jnp.zeros((L,), bool),
         want_wval=jnp.zeros((L, B), backing.dtype),
@@ -186,8 +191,18 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     line_free = (st.txn_msg == nop) & ~(hreq_pending != nop).any(axis=0) & \
         ~resp_in_flight
     any_req = req_ready.any(axis=0)
-    winner = jnp.argmax(req_ready, axis=0)                   # lowest remote
+    # Rotating priority (the ROADMAP starvation fix): the per-line pointer
+    # ``arb_rr`` names the highest-priority remote; each accepted request
+    # advances it PAST the winner, so a persistently-ready remote climbs
+    # one rank per transaction and wins within R-1 grants — a bounded wait
+    # no fixed argmax order gives.  (Rotating by raw ``step_no`` is NOT
+    # enough: contended-line transaction latencies can align with the
+    # rotation period and park the same priority order at every free
+    # instant — the pointer rotates per GRANT, which cannot alias.)
+    prio = (jnp.arange(R)[:, None] - st.arb_rr[None, :]) % R
+    winner = jnp.argmin(jnp.where(req_ready, prio, R), axis=0)
     accept_line = any_req & line_free
+    arb_rr = jnp.where(accept_line, (winner + 1) % R, st.arb_rr)
     lines = jnp.arange(L)
     win_msg = ch_req.msg[winner, lines]
     pop_req = accept_line[None, :] & \
@@ -320,6 +335,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
         dir=dstate, agents=agents2,
         ch_req=ch_req, ch_resp=ch_resp, ch_hreq=ch_hreq, ch_hresp=ch_hresp,
         hreq_pending=hreq_pending, txn_msg=txn_msg, txn_node=txn_node,
+        arb_rr=arb_rr,
         want_read=want_read2, want_write=want_write2, want_wval=wv,
         msg_count=msg_count, payload_msgs=payload_msgs,
         step_no=st.step_no + 1,
@@ -336,6 +352,54 @@ def _jitted_step_mn(moesi: bool):
     tables = FULL if moesi else MINIMAL
     tables_mn = MN_FULL if moesi else MN_MINIMAL
     return jax.jit(functools.partial(step_mn, tables, tables_mn))
+
+
+def busy_flag_mn(st: EngineMNState) -> jnp.ndarray:
+    """Traced scalar bool: any transaction, channel slot or home want is
+    still in flight (device-side twin of ``EngineMN.quiescent``)."""
+    busy = ((st.agents.pending_req != 0).any()
+            | (st.agents.pending_op != 0).any()
+            | (st.hreq_pending != 0).any()
+            | (st.txn_msg != 0).any()
+            | st.want_read.any() | st.want_write.any())
+    for ch in (st.ch_req, st.ch_resp, st.ch_hreq, st.ch_hresp):
+        busy = busy | (ch.msg != 0).any()
+    return busy
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_run_ops_mn(moesi: bool):
+    """One fused submit-and-drain program per protocol mode, shared across
+    EngineMN instances exactly like ``_jitted_step_mn``."""
+    tables = FULL if moesi else MINIMAL
+    tables_mn = MN_FULL if moesi else MN_MINIMAL
+    step_fn = functools.partial(step_mn, tables, tables_mn)
+
+    def run(st, opv, vv, delays, credits, max_rounds):
+        L, B = st.dir.backing.shape
+        zb = jnp.zeros((L,), bool)
+        zwv = jnp.zeros((L, B), st.dir.backing.dtype)
+
+        def cond(c):
+            st_, opv_, _, _, rounds = c
+            return (opv_.any() | busy_flag_mn(st_)) & (rounds < max_rounds)
+
+        def body(c):
+            st_, opv_, done, vals, rounds = c
+            st_, out = step_fn(st_, opv_, vv, zb, zb, zwv, delays, credits)
+            opv_ = jnp.where(out.accepted, 0, opv_).astype(jnp.int8)
+            ld = out.load_done.any(axis=0)
+            done = done | ld
+            # one-hot over remotes (at most one acts per line per call).
+            vals = jnp.where(ld[:, None], out.load_val.sum(axis=0), vals)
+            return (st_, opv_, done, vals, rounds + 1)
+
+        init = (st, opv, zb, jnp.zeros((L, B), st.dir.backing.dtype),
+                jnp.zeros((), jnp.int32))
+        st, opv, done, vals, rounds = jax.lax.while_loop(cond, body, init)
+        return st, done, vals, rounds, opv.any() | busy_flag_mn(st)
+
+    return jax.jit(run)
 
 
 class EngineMN:
@@ -392,11 +456,14 @@ class EngineMN:
     def quiescent(self, st: EngineMNState) -> bool:
         # one fused expression -> a single device-to-host sync per call
         # (drain loops poll this every round).
-        busy = ((st.agents.pending_req != 0).sum()
-                + (st.agents.pending_op != 0).sum()
-                + (st.hreq_pending != 0).sum()
-                + (st.txn_msg != 0).sum()
-                + st.want_read.sum() + st.want_write.sum())
-        for ch in (st.ch_req, st.ch_resp, st.ch_hreq, st.ch_hresp):
-            busy = busy + (ch.msg != 0).sum()
-        return int(busy) == 0
+        return not bool(busy_flag_mn(st))
+
+    def run_ops(self, st: EngineMNState, opv: jnp.ndarray,
+                op_val: jnp.ndarray, max_rounds: int = 64):
+        """Submit ``opv`` [R, L] and drain to quiescence in ONE fused
+        while_loop — see ``Engine.run_ops``.  Returns (state, done[L],
+        vals[L,B], rounds, still_busy) with done/vals reduced over the
+        remote axis (at most one remote acts per line per call)."""
+        return _jitted_run_ops_mn(self.moesi)(
+            st, opv, op_val, self.delays, self.credits,
+            jnp.asarray(max_rounds, jnp.int32))

@@ -1,0 +1,20 @@
+"""Streaming traffic subsystem: workload generators, a quiescence-free
+engine driver, and hardware-style perf counters (see docs/traffic.md).
+
+    from repro.traffic import WORKLOADS, run_stream, summarize
+
+    eng = EngineMN(jnp.zeros((64, 4), jnp.float32), n_remotes=4)
+    wl = WORKLOADS["zipfian"](jax.random.key(0), 128, 4, 64)
+    run = run_stream(eng, wl, steps=1024)
+    print(summarize(run.counters, run.msg_count))
+"""
+from .counters import (Counters, assert_counts_match, replay_reference,
+                       summarize, validate_run)
+from .driver import StreamRun, run_stream
+from .workloads import WORKLOADS, Workload
+
+__all__ = [
+    "Counters", "StreamRun", "WORKLOADS", "Workload",
+    "assert_counts_match", "replay_reference", "run_stream", "summarize",
+    "validate_run",
+]

@@ -1,0 +1,212 @@
+"""Hardware-style perf counters for the streaming traffic subsystem.
+
+Real coherence fabrics expose exactly this telemetry: per-message-type
+delivery counts, invalidation fan-out, per-initiator retirement-latency
+histograms, channel occupancy and a starvation bound (max request wait).
+Here the counters are a small NamedTuple of dense arrays folded through
+the driver's ``lax.scan`` carry — updated entirely on-device, read out
+once at the end of a run.
+
+The per-message-type counts live in the engine state itself
+(``msg_count``, extended by the driver into a per-run delta); everything
+else accumulates in ``Counters``.
+
+**Validation** (``replay_reference`` + ``assert_counts_match``): the
+driver's retirement trace is a per-line linearization of the streamed
+execution, so replaying it op-by-op into the atomic ``MultiNodeRef``
+oracle must reproduce the engine's message counts EXACTLY — modulo one
+documented identity: an upgrade that lost a race costs the engine one
+extra ``REQ_UPGRADE`` + ``RESP_NACK`` pair before it retires as the
+``REQ_READ_EXCL`` the oracle sees.  For eviction-free LOAD/STORE streams
+(all of ``traffic.workloads``) there are no other divergences; voluntary
+downgrades crossing home-initiated recalls would break the per-line
+serialization the replay relies on, which is why the generators never
+emit EVICT.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.messages import MsgType
+from ..core.multinode import MultiNodeRef
+from ..core.protocol import LocalOp
+
+#: retirement-latency histogram bucket edges (engine steps); bucket i
+#: holds lat in [edge[i-1], edge[i]), the last bucket is the overflow.
+LAT_EDGES = np.asarray([1, 2, 4, 8, 16, 32, 64, 128, 256], np.int32)
+N_LAT_BUCKETS = len(LAT_EDGES) + 1
+
+#: the four coherence channel classes, in Counters.occ_* order.
+CHANNELS = ("req", "resp", "hreq", "hresp")
+
+
+class Counters(NamedTuple):
+    """Scan-carried telemetry (all int32, device-resident)."""
+
+    lat_hist: jnp.ndarray   # [R, N_LAT_BUCKETS] retirement latency histo
+    max_wait: jnp.ndarray   # [R] worst request wait observed (starvation)
+    retired: jnp.ndarray    # [R] ops retired
+    occ_sum: jnp.ndarray    # [4] per-class channel occupancy, summed/step
+    occ_peak: jnp.ndarray   # [4] per-class peak occupancy
+    steps: jnp.ndarray      # [] steps folded (the full scan budget)
+    active_steps: jnp.ndarray  # [] steps with traffic in flight — the
+    #                            denominator for sustained rates (the
+    #                            post-drain idle tail must not dilute them)
+
+
+def make_counters(n_remotes: int) -> Counters:
+    return Counters(
+        lat_hist=jnp.zeros((n_remotes, N_LAT_BUCKETS), jnp.int32),
+        max_wait=jnp.zeros((n_remotes,), jnp.int32),
+        retired=jnp.zeros((n_remotes,), jnp.int32),
+        occ_sum=jnp.zeros((4,), jnp.int32),
+        occ_peak=jnp.zeros((4,), jnp.int32),
+        steps=jnp.zeros((), jnp.int32),
+        active_steps=jnp.zeros((), jnp.int32),
+    )
+
+
+def update_counters(ctr: Counters, st, *, retired: jnp.ndarray,
+                    lat: jnp.ndarray, outstanding: jnp.ndarray,
+                    head_wait: jnp.ndarray,
+                    step_active: jnp.ndarray) -> Counters:
+    """Fold one engine step's events into the counters (traced).
+
+    Args:
+      st: the post-step ``EngineMNState`` (for channel occupancy).
+      retired: [R, L] ops that retired this step.
+      lat: [R, L] their first-attempt-to-retirement latency in steps
+        (valid under ``retired``; also the current wait of in-flight ops).
+      outstanding: [R, L] transactions still in flight after this step.
+      head_wait: [R] wait of each remote's not-yet-accepted head op.
+      step_active: [] bool — stream unconsumed or engine non-quiescent.
+    """
+    bucket = jnp.searchsorted(jnp.asarray(LAT_EDGES), lat, side="right")
+    onehot = bucket[..., None] == jnp.arange(N_LAT_BUCKETS)
+    hist = ctr.lat_hist + (onehot & retired[..., None]).sum(axis=1)
+
+    # the starvation bound: worst of (retired latency, in-flight wait,
+    # head-of-stream wait) — a starved request never retires, so the live
+    # waits matter as much as the completed ones.
+    live = jnp.where(retired | outstanding, lat, 0).max(axis=1)
+    max_wait = jnp.maximum(ctr.max_wait, jnp.maximum(live, head_wait))
+
+    occ = jnp.stack([(ch.msg != int(MsgType.NOP)).sum()
+                     for ch in (st.ch_req, st.ch_resp, st.ch_hreq,
+                                st.ch_hresp)]).astype(jnp.int32)
+    return Counters(
+        lat_hist=hist,
+        max_wait=max_wait,
+        retired=ctr.retired + retired.sum(axis=1).astype(jnp.int32),
+        occ_sum=ctr.occ_sum + occ,
+        occ_peak=jnp.maximum(ctr.occ_peak, occ),
+        steps=ctr.steps + 1,
+        active_steps=ctr.active_steps + step_active.astype(jnp.int32),
+    )
+
+
+def summarize(ctr: Counters, msg_count: np.ndarray,
+              payload_msgs: int = 0) -> Dict[str, object]:
+    """Host-side digest of a run: the numbers a benchmark row reports.
+
+    Sustained rates divide by ``active_steps`` (steps with traffic in
+    flight), NOT the scan budget — a generous post-drain idle tail must
+    not dilute throughput or occupancy."""
+    steps = max(int(ctr.steps), 1)
+    active = max(int(ctr.active_steps), 1)
+    retired = np.asarray(ctr.retired)
+    mc = np.asarray(msg_count, np.int64)
+    # fan-out is per exclusive GRANT: NACKed upgrade attempts are counted
+    # as requests but fan out nothing, so subtract them.
+    nacks = int(mc[int(MsgType.RESP_NACK)])
+    excl = int(mc[int(MsgType.REQ_READ_EXCL)]
+               + mc[int(MsgType.REQ_UPGRADE)]) - nacks
+    inval = int(mc[int(MsgType.HOME_DOWNGRADE_I)])
+    return {
+        "steps": steps,
+        "active_steps": active,
+        "ops_retired": int(retired.sum()),
+        "ops_per_step": retired.sum() / active,
+        "retired_per_remote": retired.tolist(),
+        "max_wait": np.asarray(ctr.max_wait).tolist(),
+        "lat_hist": np.asarray(ctr.lat_hist).tolist(),
+        "invalidations": inval,
+        "inval_per_excl_grant": inval / max(excl, 1),
+        "nacks": nacks,
+        "mean_occupancy": {
+            ch: float(np.asarray(ctr.occ_sum)[i]) / active
+            for i, ch in enumerate(CHANNELS)},
+        "peak_occupancy": {
+            ch: int(np.asarray(ctr.occ_peak)[i])
+            for i, ch in enumerate(CHANNELS)},
+        "payload_msgs": int(payload_msgs),
+        "messages": {MsgType(i).name: int(mc[i]) for i in range(16)
+                     if mc[i]},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Oracle replay: the counter-validation path.
+# ---------------------------------------------------------------------------
+
+
+def replay_reference(trace: Tuple[np.ndarray, np.ndarray, np.ndarray],
+                     moesi: bool = True) -> Tuple[MultiNodeRef, np.ndarray]:
+    """Replay a streaming run's retirement linearization atomically.
+
+    ``trace`` is the driver's (retired [S,R,L], op [S,R,L], value [S,R,L])
+    — R and L come from its shape.  Per line the engine serializes
+    transactions, so retirement order IS a legal atomic order; same-step
+    retirements on one line can only be reads (an exclusive grant
+    excludes concurrent sharers), which commute.  Returns the oracle and
+    its per-message-type counts [16].
+    """
+    retired, ops, vals = (np.asarray(a) for a in trace)
+    _, n_remotes, n_lines = retired.shape
+    ref = MultiNodeRef(n_lines, n_remotes=n_remotes, moesi=moesi)
+    for t in range(retired.shape[0]):
+        rr, ll = np.nonzero(retired[t])
+        for r, l in zip(rr, ll):
+            op = int(ops[t, r, l])
+            if op == int(LocalOp.LOAD):
+                ref.load(int(r), int(l))
+            elif op == int(LocalOp.STORE):
+                ref.store(int(r), int(l), float(vals[t, r, l]))
+            elif op == int(LocalOp.EVICT):
+                ref.evict(int(r), int(l))
+    counts = np.zeros(16, np.int64)
+    for name, _, _ in ref.trace:
+        counts[int(MsgType[name])] += 1
+    return ref, counts
+
+
+def assert_counts_match(msg_count: np.ndarray, ref_counts: np.ndarray
+                        ) -> None:
+    """Engine counters must equal the oracle's EXACTLY, after the one
+    legal divergence: each upgrade race costs the engine one extra
+    ``REQ_UPGRADE`` + ``RESP_NACK`` before the retry the oracle sees."""
+    eng = np.asarray(msg_count, np.int64)
+    nacks = int(eng[int(MsgType.RESP_NACK)])
+    expect = np.asarray(ref_counts, np.int64).copy()
+    expect[int(MsgType.REQ_UPGRADE)] += nacks
+    expect[int(MsgType.RESP_NACK)] += nacks
+    mism = np.nonzero(eng != expect)[0]
+    assert mism.size == 0, (
+        "engine/oracle message-count mismatch: " + ", ".join(
+            f"{MsgType(i).name}: engine={eng[i]} oracle={expect[i]}"
+            for i in mism))
+
+
+def validate_run(run, moesi: bool = True) -> MultiNodeRef:
+    """Full validation of a traced ``StreamRun``: the run completed, and
+    its counters match the atomic oracle at quiescence.  Returns the
+    replayed oracle (callers can go on to compare final states)."""
+    assert run.completed, "stream did not drain within the step budget"
+    assert run.trace is not None, "run_stream(collect_trace=True) required"
+    ref, counts = replay_reference(run.trace, moesi)
+    ref.check_all()
+    assert_counts_match(run.msg_count, counts)
+    return ref

@@ -1,0 +1,190 @@
+"""Quiescence-free streaming driver for the N-remote coherency engine.
+
+Every in-repo driver before this one drained the engine to quiescence
+after each op round, so ``EngineMN.step`` never saw sustained, overlapping
+traffic — the ROADMAP's latent arbitration starvation was untestable and
+throughput unmeasurable.  This driver issues the next op of every remote's
+stream EVERY step, while prior transactions are still in flight:
+
+* **backpressure** comes from the engine itself: an op the engine cannot
+  take this step (line transaction in flight, channel slot busy, VC out of
+  credit) is simply not in the ``accepted`` mask and the remote's
+  head-of-stream op is retried next step;
+* each remote keeps ONE head op pending acceptance (its per-remote queue)
+  and up to L transactions in flight across lines — the overlap a real
+  initiator's MSHRs provide;
+* the whole run is ONE fused ``lax.scan`` over engine steps — python never
+  appears in the hot loop; issue, bookkeeping and the perf counters of
+  ``traffic.counters`` all fold through the scan carry.
+
+Retirement is detected uniformly: an accepted op is retired once the
+agent's MSHR for its line is clear again (hits clear it the same step;
+misses when the grant lands).  The optional retirement TRACE — which op
+retired when — is the linearization ``traffic.counters`` replays into the
+atomic ``MultiNodeRef`` to validate the message counters exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine_mn import EngineMN, EngineMNState, busy_flag_mn, step_mn
+from ..core.messages import MsgType
+from ..core.protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL, LocalOp)
+from .counters import Counters, make_counters, update_counters
+from .workloads import Workload
+
+
+class _Carry(NamedTuple):
+    st: EngineMNState
+    cursor: jnp.ndarray       # [R] int32: next stream index per remote
+    head_born: jnp.ndarray    # [R] int32: step the head op was first tried
+    outstanding: jnp.ndarray  # [R, L] bool: accepted, not yet retired
+    born: jnp.ndarray         # [R, L] int32: first-attempt step per txn
+    out_op: jnp.ndarray       # [R, L] int8: LocalOp of the in-flight txn
+    out_val: jnp.ndarray      # [R, L]: store value of the in-flight txn
+    ctr: Counters
+
+
+class StreamRun(NamedTuple):
+    """Result of one streaming run."""
+
+    state: EngineMNState
+    counters: Counters
+    msg_count: np.ndarray     # [16] int64: delivered messages, this run
+    payload_msgs: int         # messages that carried line data, this run
+    trace: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+    completed: bool           # stream fully consumed AND engine quiescent
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_stream(moesi: bool, collect_trace: bool):
+    """One fused streaming program per (mode, trace?) pair, shared across
+    engines; shapes (R, L, T, total steps) retrace inside jit's cache."""
+    tables = FULL if moesi else MINIMAL
+    tables_mn = MN_FULL if moesi else MN_MINIMAL
+    step_fn = functools.partial(step_mn, tables, tables_mn)
+    nop_op = jnp.int8(int(LocalOp.NOP))
+
+    def run(st, wl_op, wl_line, wl_value, tsteps, delays, credits):
+        R, L = st.hreq_pending.shape
+        B = st.dir.backing.shape[1]
+        T = wl_op.shape[0]
+        dt = st.dir.backing.dtype
+        ar = jnp.arange(R)
+        zb = jnp.zeros((L,), bool)
+        zwv = jnp.zeros((L, B), dt)
+
+        def body(c, t):
+            # ---- fetch each remote's head-of-stream op ------------------
+            cur = jnp.minimum(c.cursor, T - 1)
+            active = c.cursor < T
+            h_op = wl_op[cur, ar]
+            h_line = wl_line[cur, ar]
+            h_val = wl_value[cur, ar].astype(dt)
+            is_nop = h_op == nop_op
+            # one MSHR per (remote, line): hold the head op while the same
+            # remote still has a transaction in flight on its target line
+            # (also keeps retire/accept from colliding on one slot/step).
+            line_busy = c.outstanding[ar, h_line]
+            issue = active & ~is_nop & ~line_busy
+            opd = jnp.zeros((R, L), jnp.int8).at[ar, h_line].set(
+                jnp.where(issue, h_op, nop_op))
+            vald = jnp.zeros((R, L, B), dt).at[ar, h_line].set(
+                jnp.where(issue, h_val, 0)[:, None])
+
+            # ---- one engine step under sustained traffic ----------------
+            st2, out = step_fn(c.st, opd, vald, zb, zb, zwv, delays,
+                               credits)
+
+            # ---- adopt newly accepted ops, detect retirements -----------
+            newly = out.accepted                       # [R, L]
+            outstanding = c.outstanding | newly
+            born = jnp.where(newly, c.head_born[:, None], c.born)
+            out_op = jnp.where(newly, opd, c.out_op)
+            out_val = jnp.where(newly, vald[:, :, 0], c.out_val)
+            # retired once the MSHR is clear again: hits the same step,
+            # misses when the grant (or NACK-retry grant) lands.
+            mshr_free = (st2.agents.pending_op == int(LocalOp.NOP)) & \
+                        (st2.agents.pending_req == int(MsgType.NOP))
+            retired = outstanding & mshr_free
+            outstanding = outstanding & ~retired
+
+            # ---- advance the per-remote stream cursors ------------------
+            head_accept = newly[ar, h_line] & issue
+            advance = head_accept | (active & is_nop)
+            cursor = c.cursor + advance
+            head_born = jnp.where(advance, t + 1, c.head_born)
+
+            # ---- hardware-style counters fold through the carry ---------
+            lat = t - born
+            head_wait = jnp.where(active & ~advance, t - c.head_born, 0)
+            # active = stream unconsumed or engine non-quiescent: the
+            # denominator for sustained rates (the scan's generous drain
+            # tail runs idle steps that must not dilute throughput).
+            step_active = active.any() | busy_flag_mn(st2)
+            ctr = update_counters(c.ctr, st2, retired=retired, lat=lat,
+                                  outstanding=outstanding,
+                                  head_wait=head_wait,
+                                  step_active=step_active)
+
+            ys = None
+            if collect_trace:
+                ys = (retired,
+                      jnp.where(retired, out_op, nop_op),
+                      jnp.where(retired, out_val, 0))
+            c2 = _Carry(st=st2, cursor=cursor, head_born=head_born,
+                        outstanding=outstanding, born=born, out_op=out_op,
+                        out_val=out_val, ctr=ctr)
+            return c2, ys
+
+        carry0 = _Carry(
+            st=st,
+            cursor=jnp.zeros((R,), jnp.int32),
+            head_born=jnp.zeros((R,), jnp.int32),
+            outstanding=jnp.zeros((R, L), bool),
+            born=jnp.zeros((R, L), jnp.int32),
+            out_op=jnp.zeros((R, L), jnp.int8),
+            out_val=jnp.zeros((R, L), dt),
+            ctr=make_counters(R),
+        )
+        carry, trace = jax.lax.scan(body, carry0, tsteps)
+        completed = (carry.cursor >= T).all() & \
+            ~carry.outstanding.any() & ~busy_flag_mn(carry.st)
+        return carry, trace, completed
+
+    return jax.jit(run)
+
+
+def run_stream(engine: EngineMN, wl: Workload, steps: int,
+               st: Optional[EngineMNState] = None,
+               collect_trace: bool = False) -> StreamRun:
+    """Drive ``wl`` through ``engine`` for ``steps`` fused engine steps.
+
+    ``steps`` must cover the stream length PLUS the drain tail (steps on a
+    quiescent engine are no-ops, so a generous budget only costs device
+    time); ``completed`` reports whether everything retired.  With
+    ``collect_trace`` the per-step retirement linearization is returned
+    for oracle replay (tests/validation — leave it off in benchmarks).
+    """
+    st0 = engine.init() if st is None else st
+    base_msgs = np.asarray(st0.msg_count, np.int64)
+    base_payload = int(st0.payload_msgs)
+    fn = _jitted_stream(engine.moesi, collect_trace)
+    carry, trace, completed = fn(st0, wl.op, wl.line, wl.value,
+                                 jnp.arange(steps, dtype=jnp.int32),
+                                 engine.delays, engine.credits)
+    if collect_trace:
+        trace = tuple(np.asarray(a) for a in trace)
+    return StreamRun(
+        state=carry.st,
+        counters=jax.device_get(carry.ctr),
+        msg_count=np.asarray(carry.st.msg_count, np.int64) - base_msgs,
+        payload_msgs=int(carry.st.payload_msgs) - base_payload,
+        trace=trace if collect_trace else None,
+        completed=bool(completed),
+    )

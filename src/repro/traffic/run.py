@@ -1,0 +1,96 @@
+"""CLI for the streaming traffic subsystem.
+
+    PYTHONPATH=src python -m repro.traffic.run --workload zipfian \
+        --remotes 4 --lines 64 --ops 128 [--validate]
+    PYTHONPATH=src python -m repro.traffic.run --smoke
+
+``--smoke`` runs EVERY workload generator at a small size with full
+oracle validation (counter exactness + completion) — the CI keep-green
+path for the subsystem.  Without it, one workload is driven at the
+requested size and its counter summary printed as JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _build(n_lines: int, n_remotes: int, moesi: bool, block: int = 2):
+    from repro.core.engine_mn import EngineMN
+    return EngineMN(jnp.zeros((n_lines, block), jnp.float32),
+                    n_remotes=n_remotes, moesi=moesi)
+
+
+def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
+          steps: int, seed: int, moesi: bool, validate: bool):
+    from repro.traffic import (WORKLOADS, run_stream, summarize,
+                               validate_run)
+    eng = _build(n_lines, n_remotes, moesi)
+    wl = WORKLOADS[workload](jax.random.key(seed), ops, n_remotes, n_lines)
+    t0 = time.perf_counter()
+    run = run_stream(eng, wl, steps=steps, collect_trace=validate)
+    wall = time.perf_counter() - t0
+    if validate:
+        validate_run(run, moesi)
+    out = summarize(run.counters, run.msg_count, run.payload_msgs)
+    out.update(workload=workload, n_remotes=n_remotes, n_lines=n_lines,
+               completed=run.completed, wall_s=round(wall, 3),
+               validated=bool(validate))
+    return out
+
+
+def smoke() -> int:
+    """Small-size full-taxonomy run with oracle validation; exit status."""
+    from repro.traffic import WORKLOADS
+    failures = 0
+    for name in WORKLOADS:
+        try:
+            out = drive(name, n_remotes=2, n_lines=12, ops=20, steps=220,
+                        seed=7, moesi=True, validate=True)
+            print(f"smoke {name}: OK ops={out['ops_retired']} "
+                  f"max_wait={max(out['max_wait'])} "
+                  f"msgs={sum(out['messages'].values())}")
+        except AssertionError as e:
+            failures += 1
+            print(f"smoke {name}: FAIL {e}")
+    print("smoke:", "PASS" if not failures else f"{failures} FAILURES")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    from repro.traffic import WORKLOADS
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", default="zipfian",
+                    choices=sorted(WORKLOADS))
+    ap.add_argument("--remotes", type=int, default=4)
+    ap.add_argument("--lines", type=int, default=64)
+    ap.add_argument("--ops", type=int, default=128,
+                    help="stream length per remote")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="engine-step budget (default: 10*ops + 64)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesi", action="store_true",
+                    help="run the MESI subset instead of MOESI")
+    ap.add_argument("--validate", action="store_true",
+                    help="collect the retirement trace and replay it "
+                         "against the MultiNodeRef oracle")
+    ap.add_argument("--smoke", action="store_true",
+                    help="validated mini-run of every workload generator")
+    args = ap.parse_args()
+
+    if args.smoke:
+        raise SystemExit(smoke())
+    steps = args.steps or 10 * args.ops + 64
+    out = drive(args.workload, args.remotes, args.lines, args.ops, steps,
+                args.seed, not args.mesi, args.validate)
+    print(json.dumps(out, indent=1, default=str))
+    if not out["completed"]:
+        raise SystemExit("stream did not drain within --steps")
+
+
+if __name__ == "__main__":
+    main()

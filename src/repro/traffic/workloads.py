@@ -1,0 +1,159 @@
+"""Streaming workload generators: seeded op streams for the traffic engine.
+
+The paper's evaluation (§5) drives the stack with "extensive
+microbenchmarks" under diverse access patterns; trace/traffic-driven
+validation is how open coherence stacks prove themselves.  Each generator
+here produces one op stream per remote — ``[T, R]`` arrays of
+(op, line, value) — that ``traffic.driver`` feeds into the N-remote engine
+one op per remote per step, with backpressure.
+
+The taxonomy (see ``docs/traffic.md``):
+
+* ``sequential``        — each remote scans the array front-to-back,
+  staggered; the no-reuse streaming baseline.
+* ``strided``           — constant-stride scans, the classic DMA/column
+  access pattern.
+* ``zipfian``           — hot-line skew: lines drawn from a Zipf(alpha)
+  popularity law, every remote sharing the same hot set.  The contention
+  pattern that exposes arbitration starvation and invalidation fan-out.
+* ``producer_consumer`` — remote 0 writes a ring of lines, every other
+  remote reads it one slot behind; steady-state dirty forwarding.
+* ``migratory``         — read-modify-write ownership of a small working
+  set passing remote-to-remote (lock-protected data in the wild).
+* ``false_sharing``     — every remote stores to the SAME few lines
+  (independent data co-located on one line); worst-case upgrade ping-pong.
+
+Everything is generated with ``jax.random`` under one key — runs are
+seeded and reproducible — and returns plain arrays, so a generator can be
+called inside ``jit`` and its output fed straight to the fused driver.
+Generators emit only LOAD/STORE (no voluntary evictions): capacity is not
+modelled, and keeping streams eviction-free is what makes the counter
+validation against the atomic oracle exact (see ``traffic.counters``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.protocol import LocalOp
+
+
+class Workload(NamedTuple):
+    """One op per (step, remote): the head-of-stream arrays the driver
+    consumes cursor-wise (NOT step-wise — backpressure stretches time)."""
+
+    op: jnp.ndarray      # [T, R] int8 LocalOp (NOP = bubble, skipped free)
+    line: jnp.ndarray    # [T, R] int32 target line
+    value: jnp.ndarray   # [T, R] float32 store value (broadcast over block)
+
+
+def _values(steps: int, n_remotes: int) -> jnp.ndarray:
+    """Distinct per-(t, r) store values so replay mismatches are visible."""
+    t = jnp.arange(steps, dtype=jnp.float32)[:, None]
+    r = jnp.arange(n_remotes, dtype=jnp.float32)[None, :]
+    return t * n_remotes + r + 1.0
+
+
+def _mix(key, steps: int, n_remotes: int, store_frac: float) -> jnp.ndarray:
+    """LOAD/STORE mix with the given store fraction."""
+    u = jax.random.uniform(key, (steps, n_remotes))
+    return jnp.where(u < store_frac, jnp.int8(int(LocalOp.STORE)),
+                     jnp.int8(int(LocalOp.LOAD)))
+
+
+def sequential(key, steps: int, n_remotes: int, n_lines: int,
+               store_frac: float = 0.25) -> Workload:
+    """Staggered full-array scans: overlap without systematic collision."""
+    t = jnp.arange(steps)[:, None]
+    r = jnp.arange(n_remotes)[None, :]
+    line = (t + r * max(n_lines // n_remotes, 1)) % n_lines
+    return Workload(_mix(key, steps, n_remotes, store_frac),
+                    line.astype(jnp.int32), _values(steps, n_remotes))
+
+
+def strided(key, steps: int, n_remotes: int, n_lines: int,
+            stride: int = 7, store_frac: float = 0.25) -> Workload:
+    """Constant-stride scans, one lane per remote."""
+    t = jnp.arange(steps)[:, None]
+    r = jnp.arange(n_remotes)[None, :]
+    line = (t * stride + r) % n_lines
+    return Workload(_mix(key, steps, n_remotes, store_frac),
+                    line.astype(jnp.int32), _values(steps, n_remotes))
+
+
+def zipfian(key, steps: int, n_remotes: int, n_lines: int,
+            alpha: float = 1.2, store_frac: float = 0.3) -> Workload:
+    """Zipf(alpha)-popular lines shared by ALL remotes — the hot-line
+    contention pattern of the acceptance criterion."""
+    k_mix, k_zipf, k_perm = jax.random.split(key, 3)
+    ranks = jnp.arange(1, n_lines + 1, dtype=jnp.float32)
+    w = ranks ** -alpha
+    cdf = jnp.cumsum(w) / jnp.sum(w)
+    u = jax.random.uniform(k_zipf, (steps, n_remotes))
+    idx = jnp.searchsorted(cdf, u)
+    # decouple popularity rank from line id so "hot" isn't always line 0.
+    perm = jax.random.permutation(k_perm, n_lines)
+    line = perm[jnp.clip(idx, 0, n_lines - 1)]
+    return Workload(_mix(k_mix, steps, n_remotes, store_frac),
+                    line.astype(jnp.int32), _values(steps, n_remotes))
+
+
+def producer_consumer(key, steps: int, n_remotes: int, n_lines: int,
+                      ring: int = 0) -> Workload:
+    """Remote 0 stores a ring of lines; remotes 1.. read one slot behind
+    (per-consumer lag), the steady-state dirty-forwarding pattern."""
+    del key
+    ring = ring or min(n_lines, 8)
+    t = jnp.arange(steps)[:, None]
+    r = jnp.arange(n_remotes)[None, :]
+    line = (t - r) % ring
+    op = jnp.where(r == 0, jnp.int8(int(LocalOp.STORE)),
+                   jnp.int8(int(LocalOp.LOAD)))
+    op = jnp.broadcast_to(op, (steps, n_remotes))
+    return Workload(op.astype(jnp.int8), line.astype(jnp.int32),
+                    _values(steps, n_remotes))
+
+
+def migratory(key, steps: int, n_remotes: int, n_lines: int,
+              working: int = 4) -> Workload:
+    """Ownership of a small working set migrates remote-to-remote: each
+    epoch one remote LOADs then STOREs the line (read-modify-write), then
+    hands it to the next remote — every handoff is a recall + upgrade."""
+    del key
+    working = min(working, n_lines)
+    t = jnp.arange(steps)[:, None]
+    r = jnp.arange(n_remotes)[None, :]
+    epoch = t // 2
+    owner = epoch % n_remotes
+    line = jnp.broadcast_to((epoch // n_remotes) % working,
+                            (steps, n_remotes))
+    phase_op = jnp.where(t % 2 == 0, jnp.int8(int(LocalOp.LOAD)),
+                         jnp.int8(int(LocalOp.STORE)))
+    op = jnp.where(r == owner, phase_op, jnp.int8(int(LocalOp.NOP)))
+    return Workload(op.astype(jnp.int8), line.astype(jnp.int32),
+                    _values(steps, n_remotes))
+
+
+def false_sharing(key, steps: int, n_remotes: int, n_lines: int,
+                  hot: int = 2, store_frac: float = 0.75) -> Workload:
+    """Every remote hammers the SAME few lines, mostly stores — the
+    upgrade/invalidation ping-pong of co-located independent data."""
+    hot = min(hot, n_lines)
+    t = jnp.arange(steps)[:, None]
+    line = jnp.broadcast_to((t // 4) % hot, (steps, n_remotes))
+    return Workload(_mix(key, steps, n_remotes, store_frac),
+                    line.astype(jnp.int32), _values(steps, n_remotes))
+
+
+#: name -> generator, all with the uniform (key, steps, n_remotes, n_lines)
+#: prefix signature (pattern-specific knobs are keyword-defaulted).
+WORKLOADS: Dict[str, Callable[..., Workload]] = {
+    "sequential": sequential,
+    "strided": strided,
+    "zipfian": zipfian,
+    "producer_consumer": producer_consumer,
+    "migratory": migratory,
+    "false_sharing": false_sharing,
+}

@@ -93,6 +93,40 @@ def test_operator_results_cached():
     np.testing.assert_array_equal(v1[0], np.asarray(backing[2]) * 2.0)
 
 
+def test_operator_not_rematerialized_after_evict():
+    """Regression (ROADMAP): re-reading an EVICTED virtual block used to
+    re-apply the operator over its own previous output — harmless for
+    idempotent filters, wrong for anything else.  The materialized-
+    generation bit must keep a non-idempotent operator single-shot."""
+    calls = {"n": 0}
+
+    def accumulate(block):                 # deliberately non-idempotent
+        calls["n"] += 1
+        return block + 1.0
+
+    backing = jnp.zeros((4, 2), jnp.float32)
+    cs = CoherentStore(backing, STATELESS, operator=accumulate)
+    v1 = np.asarray(cs.read([1]))
+    np.testing.assert_array_equal(v1, [[1.0, 1.0]])
+    cs.evict([1])                          # drop the consumer's copy
+    v2 = np.asarray(cs.read([1]))          # was [[2., 2.]] before the fix
+    np.testing.assert_array_equal(v2, [[1.0, 1.0]])
+    assert calls["n"] == 1
+
+
+def test_operator_explicit_write_wins_over_operator():
+    """An explicit write defines the block's content: a later evict +
+    re-read must return the written value, not a re-run of the operator."""
+    def op(block):
+        return block + 1.0
+
+    cs = CoherentStore(jnp.zeros((4, 2), jnp.float32), FULL_MOESI,
+                       operator=op)
+    cs.write([2], jnp.asarray([[7.0, 7.0]]))
+    cs.evict([2])
+    np.testing.assert_array_equal(np.asarray(cs.read([2])), [[7.0, 7.0]])
+
+
 # ---------------------------------------------------------------------------
 # tracing / NFA checking over real executions (paper §4.1)
 # ---------------------------------------------------------------------------
