@@ -1,0 +1,190 @@
+"""CI benchmark smoke gate: tiny fan-out + streaming runs, machine-readable.
+
+    PYTHONPATH=src python -m benchmarks.bench_smoke \
+        --out BENCH_smoke.json --baseline benchmarks/BENCH_baseline.json
+
+Unlike ``benchmarks/run.py`` (which prints the paper-figure CSV), this
+writes a JSON record built from the SIMULATION's own deterministic
+metrics — sustained ops/step, invalidations per exclusive grant, max
+request wait, all measured in engine steps — so the gate is stable across
+runner hardware: only a semantic regression (scheduling, arbitration,
+fan-out, backpressure) moves the numbers.  Wall-clock and compile times
+ride along as informational fields and are never gated.
+
+Gate rules (exit 1 on violation):
+
+* every streaming run must COMPLETE within its step budget;
+* fan-out exactness: engine invalidations/store == oracle == R-1;
+* ops/step must not regress more than ``--tolerance`` (default 30%)
+  against the committed baseline, per configuration.
+
+``--write-baseline`` refreshes the committed baseline file instead of
+comparing (run it locally when a PR intentionally shifts throughput).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+#: (n_remotes, n_lines, ops) per streaming smoke config — small enough for
+#: a CI job, wide enough (R=8) to exercise the past-4-remotes flat layout.
+STREAM_CONFIGS = ((2, 16, 32), (8, 16, 32))
+FANOUT_REMOTES = (2, 8)
+
+
+def run_fanout() -> dict:
+    """Tiny fan-out exactness check: engine count == oracle == R-1."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import CoherentStore, FULL_MOESI, MultiNodeRef
+
+    out = {}
+    n_lines, block = 8, 2
+    for n_remotes in FANOUT_REMOTES:
+        cs = CoherentStore(jnp.zeros((n_lines, block), jnp.float32),
+                           FULL_MOESI, n_remotes=n_remotes, max_rounds=128)
+        ids = np.arange(n_lines)
+        for node in range(n_remotes):
+            cs.read(ids, node=node)
+        before = cs.interconnect_messages.get("HOME_DOWNGRADE_I", 0)
+        cs.write(ids, jnp.ones((n_lines, block), jnp.float32), node=0)
+        sent = cs.interconnect_messages.get("HOME_DOWNGRADE_I", 0) - before
+        ref = MultiNodeRef(1, n_remotes=n_remotes)
+        for node in range(n_remotes):
+            ref.load(node, 0)
+        rbefore = ref.invalidation_messages()
+        ref.store(0, 0, 1)
+        out[f"r{n_remotes}"] = {
+            "invals_per_store": sent / n_lines,
+            "oracle_invals_per_store": ref.invalidation_messages() - rbefore,
+            "model": n_remotes - 1,
+        }
+    return out
+
+
+def run_streaming() -> dict:
+    """Tiny zipfian streaming runs; deterministic throughput metrics."""
+    import jax
+    import jax.numpy as jnp
+    from repro.traffic import WORKLOADS, default_steps, run_stream, summarize
+    from repro.core.engine_mn import EngineMN
+
+    out = {}
+    for n_remotes, n_lines, ops in STREAM_CONFIGS:
+        eng = EngineMN(jnp.zeros((n_lines, 2), jnp.float32),
+                       n_remotes=n_remotes)
+        wl = WORKLOADS["zipfian"](jax.random.key(0), ops, n_remotes, n_lines)
+        steps = default_steps(ops, n_remotes)
+        t0 = time.perf_counter()
+        run = run_stream(eng, wl, steps=steps)     # compile + run
+        t_compile = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run = run_stream(eng, wl, steps=steps)
+        wall = time.perf_counter() - t0
+        s = summarize(run.counters, run.msg_count)
+        out[f"r{n_remotes}"] = {
+            "completed": bool(run.completed),
+            "ops_per_step": round(float(s["ops_per_step"]), 6),
+            "inval_per_excl_grant": round(
+                float(s["inval_per_excl_grant"]), 6),
+            "max_wait": int(max(s["max_wait"])),
+            "ops_retired": int(s["ops_retired"]),
+            "steps": steps,
+            # informational only — never gated:
+            "wall_s": round(wall, 3),
+            "compile_s": round(t_compile, 3),
+        }
+    return out
+
+
+def collect() -> dict:
+    import jax
+    return {
+        "schema": 1,
+        "jax_version": jax.__version__,
+        "generated_unix": int(time.time()),
+        "fanout": run_fanout(),
+        "streaming": run_streaming(),
+    }
+
+
+def gate(current: dict, baseline: dict, tolerance: float) -> list:
+    """Return the list of violation strings (empty = pass)."""
+    bad = []
+    for key, rec in current["fanout"].items():
+        if not (rec["invals_per_store"] == rec["oracle_invals_per_store"]
+                == rec["model"]):
+            bad.append(f"fanout {key}: engine {rec['invals_per_store']} != "
+                       f"oracle {rec['oracle_invals_per_store']} != model "
+                       f"{rec['model']}")
+    for key, rec in current["streaming"].items():
+        if not rec["completed"]:
+            bad.append(f"streaming {key}: did not complete within "
+                       f"{rec['steps']} steps")
+        base = baseline.get("streaming", {}).get(key) if baseline else None
+        if base is None:
+            continue
+        floor = (1.0 - tolerance) * base["ops_per_step"]
+        if rec["ops_per_step"] < floor:
+            bad.append(
+                f"streaming {key}: ops/step {rec['ops_per_step']:.4f} "
+                f"regressed >{tolerance:.0%} vs baseline "
+                f"{base['ops_per_step']:.4f} (floor {floor:.4f})")
+    return bad
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="where to write the machine-readable record")
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "BENCH_baseline.json"),
+                    help="committed baseline JSON to gate against")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max allowed ops/step regression (fraction)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the baseline file instead of gating")
+    args = ap.parse_args()
+
+    current = collect()
+    with open(args.out, "w") as f:
+        json.dump(current, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+    if args.write_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"refreshed baseline {args.baseline}")
+        return
+
+    baseline = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    else:
+        print(f"warning: no baseline at {args.baseline}; "
+              "gating exactness/completion only")
+
+    violations = gate(current, baseline, args.tolerance)
+    for key, rec in sorted(current["streaming"].items()):
+        base = (baseline or {}).get("streaming", {}).get(key, {})
+        print(f"streaming {key}: ops/step {rec['ops_per_step']:.4f} "
+              f"(baseline {base.get('ops_per_step', float('nan')):.4f}) "
+              f"max_wait {rec['max_wait']} wall {rec['wall_s']}s")
+    if violations:
+        for v in violations:
+            print("FAIL:", v)
+        raise SystemExit(1)
+    print("bench-smoke: PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,12 @@ a 4-state machine per line plus one MSHR (pending transaction) per line.
 Intermediate states are represented explicitly: ``pending_req != NOP`` marks
 a line with a request in flight (the paper's "additional intermediate states,
 invisible to the application").
+
+Every function is polymorphic over LEADING batch axes: ``[L]`` fields model
+one agent (the 2-node engine), ``[R, L]`` model the N-remote engine's R
+agents over one contiguous slab — the scalar counters (``illegal``,
+``hits``, ``misses``) reduce over the LINE axis only, so they stay scalars
+for one agent and ``[R]`` per-remote tallies for the batched layout.
 """
 from __future__ import annotations
 
@@ -78,7 +84,7 @@ def submit(tables: DenseTables, st: AgentState, op: jnp.ndarray,
     # hits: apply silent transition + store data now.
     remote_state = jnp.where(is_hit, new_state.astype(jnp.int8),
                              st.remote_state)
-    cache = jnp.where(is_store_hit[:, None], value, st.cache)
+    cache = jnp.where(is_store_hit[..., None], value, st.cache)
     # evictions/demotions may carry the dirty line as request payload; after
     # a voluntary downgrade the line content for S stays, for I is dead.
     req_payload = st.cache
@@ -87,7 +93,7 @@ def submit(tables: DenseTables, st: AgentState, op: jnp.ndarray,
     pending_req = jnp.where(is_miss, request.astype(jnp.int8),
                             st.pending_req)
     pending_op = jnp.where(is_miss, op.astype(jnp.int8), st.pending_op)
-    pending_val = jnp.where(is_miss[:, None], value, st.pending_val)
+    pending_val = jnp.where(is_miss[..., None], value, st.pending_val)
 
     emit = jnp.where(accepted & (request != int(MsgType.NOP)),
                      request.astype(jnp.int8),
@@ -102,8 +108,8 @@ def submit(tables: DenseTables, st: AgentState, op: jnp.ndarray,
         pending_op=pending_op,
         pending_val=pending_val,
         illegal=st.illegal,
-        hits=st.hits + (is_load & hit).sum().astype(jnp.int32),
-        misses=st.misses + (is_load & ~hit).sum().astype(jnp.int32),
+        hits=st.hits + (is_load & hit).sum(axis=-1).astype(jnp.int32),
+        misses=st.misses + (is_load & ~hit).sum(axis=-1).astype(jnp.int32),
     )
     return new, accepted, emit, req_dirty, req_payload
 
@@ -133,11 +139,11 @@ def on_response(tables: DenseTables, st: AgentState, active: jnp.ndarray,
                               new_state)
 
     carries = (rm == int(MsgType.RESP_DATA)) | (rm == int(MsgType.RESP_DATA_DIRTY))
-    cache = jnp.where((do & carries)[:, None], payload, st.cache)
+    cache = jnp.where((do & carries)[..., None], payload, st.cache)
 
     # complete the parked op: a parked STORE writes now and dirties the line.
     is_store = do & (st.pending_op == int(LocalOp.STORE)) & ~nack
-    cache = jnp.where(is_store[:, None], st.pending_val, cache)
+    cache = jnp.where(is_store[..., None], st.pending_val, cache)
     state_after = jnp.where(is_store, int(RemoteState.M), new_state)
 
     remote_state = jnp.where(do, state_after.astype(jnp.int8),
@@ -149,7 +155,7 @@ def on_response(tables: DenseTables, st: AgentState, active: jnp.ndarray,
                               st.pending_req),
         pending_op=jnp.where(do & ~nack, jnp.int8(int(LocalOp.NOP)),
                              st.pending_op),
-        illegal=st.illegal + (active & ~legal).sum().astype(jnp.int32),
+        illegal=st.illegal + (active & ~legal).sum(axis=-1).astype(jnp.int32),
     )
     return new, nack
 
@@ -172,7 +178,7 @@ def on_home_msg(tables: DenseTables, st: AgentState, active: jnp.ndarray,
     new = st._replace(
         remote_state=jnp.where(do, new_state.astype(jnp.int8),
                                st.remote_state),
-        illegal=st.illegal + (active & ~legal).sum().astype(jnp.int32),
+        illegal=st.illegal + (active & ~legal).sum(axis=-1).astype(jnp.int32),
     )
     resp = jnp.where(do, resp.astype(jnp.int8), jnp.int8(int(MsgType.NOP)))
     return new, resp, jnp.where(do, resp_dirty, False), st.cache
@@ -181,4 +187,4 @@ def on_home_msg(tables: DenseTables, st: AgentState, active: jnp.ndarray,
 def read_hit_values(st: AgentState, lines_mask: jnp.ndarray) -> jnp.ndarray:
     """[L, B] cache content for lines held in a readable state."""
     readable = st.remote_state != int(RemoteState.I)
-    return jnp.where((lines_mask & readable)[:, None], st.cache, 0)
+    return jnp.where((lines_mask & readable)[..., None], st.cache, 0)

@@ -41,9 +41,10 @@ class CoherentStore:
     subset: one consumer agent against the home, the specialized fast path
     (including the STATELESS home of §3.4).  With ``n_remotes > 1`` the
     store runs the vectorized N-remote engine (``core.engine_mn``): up to
-    4 consumer agents, each with its own cache, kept coherent by the
-    sharer-vector directory — ``read``/``write``/``evict`` then take a
-    ``node`` argument selecting the acting consumer.
+    64 consumer agents (``engine_mn.MAX_REMOTES``), each with its own
+    cache, kept coherent by the sharer-vector directory —
+    ``read``/``write``/``evict`` then take a ``node`` argument selecting
+    the acting consumer.
 
     This is the *semantic* model used by tests, benchmarks and the serving
     example; the multi-device data path is ``core.pushdown`` (shard_map), and

@@ -1,11 +1,18 @@
-"""The vectorized N-remote coherency engine (paper §4.1, N <= 4).
+"""The vectorized N-remote coherency engine (paper §4.1, R <= 64).
 
 One home (sharer-vector directory, ``core.directory_mn``) plus ``R``
-caching remotes, each a full 4-state agent (``core.agent``) batched over a
-leading remote axis with ``vmap`` — the per-remote virtual channels are the
-same single-slot-per-line ``transport.Channel`` arrays, stacked ``[R, L]``.
-The whole step is one fused ``jit`` program; python appears only in the
-drain loop, exactly as in the 2-node engine.
+caching remotes, each a full 4-state agent (``core.agent``) laid out over
+one contiguous ``[R, L]`` slab — the per-remote virtual channels and MSHRs
+are flat ``transport.Channel`` arrays with a leading remote axis, operated
+on directly by the batch-polymorphic transport/agent primitives (no
+``vmap`` wrappers: the traced program is one batched op per phase, so
+trace/compile cost does not grow with per-remote structure and the step is
+a fixed-op-count program whose arrays scale with R).  The whole step is
+one fused ``jit`` program; python appears only in the drain loop, exactly
+as in the 2-node engine.
+
+The remote-count ceiling is the EWF node-id field: 6 bits since EWF v2
+(``core.messages``), i.e. up to 64 caching remotes per home.
 
 Transaction discipline (the "intermediate states" of a real directory):
 
@@ -24,8 +31,8 @@ Transaction discipline (the "intermediate states" of a real directory):
   (``directory_mn.absorb``), NACK+retry for invalidated upgrades.
 
 ``tests/test_engine_mn.py`` bisimulates this engine against the atomic
-oracle ``core.multinode.MultiNodeRef`` for N in {2, 3, 4} in both MESI and
-MOESI modes.
+oracle ``core.multinode.MultiNodeRef`` for R in {2, 3, 4} (fast tier) and
+R in {8, 16} (slow tier) in both MESI and MOESI modes.
 
 The N-remote envelope excludes DEMOTE (transition 7) — the op set of the
 oracle — which is a sound subset under requirement 5: the workload
@@ -45,12 +52,14 @@ from . import agent as ag
 from . import directory_mn as dmn
 from . import transport as tp
 from .engine import _count, stall_unready_ops
-from .messages import MsgType
+from .messages import MAX_NODE, MsgType
 from .protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL, DenseTables,
                        DenseTablesMN, LocalOp, MnAbsorb)
 from .states import RemoteView
 
-MAX_REMOTES = 4   # EWF carries 2-bit node ids (paper §4.1)
+#: Remote-count ceiling, DERIVED from the EWF node-id field width — widening
+#: the wire format (core.messages) widens the engine with it.
+MAX_REMOTES = MAX_NODE + 1
 
 
 class EngineMNState(NamedTuple):
@@ -115,7 +124,7 @@ def _ready(ch: tp.Channel, msg_class: int, delays: jnp.ndarray
 
     The ``transport.deliver`` precondition, split out because request
     arbitration (step 4) must pop only the WINNING slot per line — every
-    other channel uses the vmapped ``deliver`` directly."""
+    other channel uses the batched ``deliver`` directly."""
     L = ch.msg.shape[-1]
     vcs = tp.vc_of(jnp.arange(L), msg_class)
     return (ch.msg != int(MsgType.NOP)) & (ch.age >= delays[vcs][None, :])
@@ -132,18 +141,15 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
             want_read: jnp.ndarray, want_write: jnp.ndarray,
             wval: jnp.ndarray, delays: jnp.ndarray, credits: jnp.ndarray
             ) -> Tuple[EngineMNState, StepMNOutput]:
-    """One fused engine step over all remotes and lines."""
+    """One fused engine step over all remotes and lines.
+
+    The transport/agent primitives are batch-polymorphic, so the ``[R, L]``
+    channel/MSHR slabs are operated on directly — one batched op per phase
+    regardless of R (the flat layout that lets this engine scale to
+    ``MAX_REMOTES`` without per-remote traced structure)."""
     nop = jnp.int8(int(MsgType.NOP))
     R, L = st.hreq_pending.shape
     msg_count, payload_msgs = st.msg_count, st.payload_msgs
-
-    v_tick = jax.vmap(tp.tick)
-    v_sub = jax.vmap(tp.submit, in_axes=(0, None, 0, 0, 0, 0, None))
-    v_deliver = jax.vmap(tp.deliver, in_axes=(0, None, None))
-    a_submit = jax.vmap(functools.partial(ag.submit, tables))
-    a_resp = jax.vmap(functools.partial(ag.on_response, tables,
-                                        nack_holds=True))
-    a_home = jax.vmap(functools.partial(ag.on_home_msg, tables))
     inf_credits = jnp.full_like(credits, 1 << 30)
 
     # accumulate new home-side wants.
@@ -153,12 +159,12 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
                    st.want_wval)
 
     # ---- 1. time advances on all channels --------------------------------
-    ch_req, ch_resp = v_tick(st.ch_req), v_tick(st.ch_resp)
-    ch_hreq, ch_hresp = v_tick(st.ch_hreq), v_tick(st.ch_hresp)
+    ch_req, ch_resp = tp.tick(st.ch_req), tp.tick(st.ch_resp)
+    ch_hreq, ch_hresp = tp.tick(st.ch_hreq), tp.tick(st.ch_hresp)
 
     # ---- 2. downgrade replies arrive at the home -------------------------
     ch_hresp_in = ch_hresp
-    ch_hresp, hr_arr = v_deliver(ch_hresp, tp.CLASS_REMOTE_RESP, delays)
+    ch_hresp, hr_arr = tp.deliver(ch_hresp, tp.CLASS_REMOTE_RESP, delays)
     rep_kind = jnp.where(
         st.hreq_pending == int(MsgType.HOME_DOWNGRADE_S),
         jnp.int8(int(MnAbsorb.REPLY_S)), jnp.int8(int(MnAbsorb.REPLY_I)))
@@ -224,9 +230,9 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     needed = dmn.needed_downgrades(dstate, active_txn & ~doomed,
                                    txn_msg, txn_node)
     send_h = (needed != nop) & (hreq_pending == nop)
-    ch_hreq, acc_h = v_sub(ch_hreq, tp.CLASS_HOME_REQ, send_h, needed,
-                           jnp.zeros((R, L), bool),
-                           jnp.zeros_like(st.ch_hreq.payload), credits)
+    ch_hreq, acc_h = tp.submit(ch_hreq, tp.CLASS_HOME_REQ, send_h, needed,
+                               jnp.zeros((R, L), bool),
+                               jnp.zeros_like(st.ch_hreq.payload), credits)
     hreq_pending = jnp.where(acc_h, needed, hreq_pending)
 
     # ---- 6. grant parked requests whose preconditions now hold -----------
@@ -247,11 +253,12 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     txn_msg = jnp.where(complete, nop, txn_msg)
     send_resp = (jnp.arange(R)[:, None] == txn_node[None, :]) & \
         (resp != nop)[None, :]
-    ch_resp, _ = v_sub(ch_resp, tp.CLASS_HOME_RESP, send_resp,
-                       jnp.broadcast_to(resp, (R, L)),
-                       jnp.zeros((R, L), bool),
-                       jnp.broadcast_to(resp_pay, (R, L) + resp_pay.shape[1:]),
-                       inf_credits)
+    ch_resp, _ = tp.submit(ch_resp, tp.CLASS_HOME_RESP, send_resp,
+                           jnp.broadcast_to(resp, (R, L)),
+                           jnp.zeros((R, L), bool),
+                           jnp.broadcast_to(resp_pay,
+                                            (R, L) + resp_pay.shape[1:]),
+                           inf_credits)
     carries = (resp == int(MsgType.RESP_DATA)) | \
               (resp == int(MsgType.RESP_DATA_DIRTY))
     msg_count, payload_msgs = _count(msg_count, payload_msgs,
@@ -259,23 +266,24 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
 
     # ---- 7. grant responses arrive at the remotes ------------------------
     ch_resp_in = ch_resp
-    ch_resp, r_arr = v_deliver(ch_resp, tp.CLASS_HOME_RESP, delays)
+    ch_resp, r_arr = tp.deliver(ch_resp, tp.CLASS_HOME_RESP, delays)
     was_load = st.agents.pending_op == int(LocalOp.LOAD)
-    agents, _nack = a_resp(st.agents, r_arr, ch_resp_in.msg,
-                           ch_resp_in.payload)
+    agents, _nack = ag.on_response(tables, st.agents, r_arr,
+                                   ch_resp_in.msg, ch_resp_in.payload,
+                                   nack_holds=True)
     load_done = r_arr & was_load & ~_nack
     load_val = jnp.where(load_done[:, :, None], agents.cache, 0)
 
     # ---- 8. home-initiated downgrades arrive at the remotes --------------
     ch_hreq_in = ch_hreq
-    ch_hreq, h_arr = v_deliver(ch_hreq, tp.CLASS_HOME_REQ, delays)
-    agents, hresp, hresp_dirty, hresp_pay = a_home(agents, h_arr,
-                                                   ch_hreq_in.msg)
+    ch_hreq, h_arr = tp.deliver(ch_hreq, tp.CLASS_HOME_REQ, delays)
+    agents, hresp, hresp_dirty, hresp_pay = ag.on_home_msg(
+        tables, agents, h_arr, ch_hreq_in.msg)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, h_arr,
                                      ch_hreq_in.msg,
                                      jnp.zeros((R, L), bool))
-    ch_hresp, _ = v_sub(ch_hresp, tp.CLASS_REMOTE_RESP, hresp != nop,
-                        hresp, hresp_dirty, hresp_pay, inf_credits)
+    ch_hresp, _ = tp.submit(ch_hresp, tp.CLASS_REMOTE_RESP, hresp != nop,
+                            hresp, hresp_dirty, hresp_pay, inf_credits)
 
     # ---- 9. remotes submit local ops (fresh + parked retries) ------------
     locked = (hreq_pending != nop) | (ch_hreq.msg != nop)
@@ -289,14 +297,13 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # An op that would emit a message stalls until the transport CAN take
     # it (slot + credit) — see engine.stall_unready_ops for the dirty-
     # eviction drop this prevents.
-    v_stall = jax.vmap(functools.partial(stall_unready_ops, tables),
-                       in_axes=(0, 0, 0, 0, None))
-    eff_op = v_stall(ch_req, eff_op, agents.remote_state, op_val, credits)
+    eff_op = stall_unready_ops(tables, ch_req, eff_op, agents.remote_state,
+                               op_val, credits)
     eff_val = jnp.where(parked[:, :, None], agents.pending_val, op_val)
-    agents2, accepted, emit, req_dirty, req_pay = a_submit(agents, eff_op,
-                                                           eff_val)
-    ch_req, acc_req = v_sub(ch_req, tp.CLASS_REMOTE_REQ, emit != nop, emit,
-                            req_dirty, req_pay, credits)
+    agents2, accepted, emit, req_dirty, req_pay = ag.submit(
+        tables, agents, eff_op, eff_val)
+    ch_req, acc_req = tp.submit(ch_req, tp.CLASS_REMOTE_REQ, emit != nop,
+                                emit, req_dirty, req_pay, credits)
     refused = (emit != nop) & ~acc_req
     agents2 = agents2._replace(
         pending_req=jnp.where(refused, nop, agents2.pending_req))
@@ -319,9 +326,9 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     needed_w = dmn.home_needed_downgrades(
         dstate, want_read & want_service, want_write & want_service)
     send_w = (needed_w != nop) & (hreq_pending == nop) & ~busy[None, :]
-    ch_hreq, acc_w = v_sub(ch_hreq, tp.CLASS_HOME_REQ, send_w, needed_w,
-                           jnp.zeros((R, L), bool),
-                           jnp.zeros_like(st.ch_hreq.payload), credits)
+    ch_hreq, acc_w = tp.submit(ch_hreq, tp.CLASS_HOME_REQ, send_w, needed_w,
+                               jnp.zeros((R, L), bool),
+                               jnp.zeros_like(st.ch_hreq.payload), credits)
     hreq_pending = jnp.where(acc_w, needed_w, hreq_pending)
     ready_w = want_service & ~(needed_w != nop).any(axis=0) & \
         ~(hreq_pending != nop).any(axis=0) & ~busy
@@ -410,7 +417,7 @@ class EngineMN:
                  delays: Optional[np.ndarray] = None,
                  credits: Optional[np.ndarray] = None):
         assert 1 <= n_remotes <= MAX_REMOTES, \
-            f"EWF carries 2-bit node ids (n_remotes={n_remotes})"
+            f"EWF v2 carries 6-bit node ids (n_remotes={n_remotes})"
         self.n_remotes = n_remotes
         self.moesi = moesi
         self.tables = FULL if moesi else MINIMAL

@@ -5,15 +5,23 @@ define a compact 64-bit packed record with the same role: a canonical binary
 form for traces, the transport layer, and the Wireshark-style decoder in
 ``core.tracing``.
 
-Layout (little-endian bit offsets within a uint64):
+Layout v2 (little-endian bit offsets within a uint64):
 
     [ 0: 4)  msg type            (MsgType, 4 bits)
     [ 4: 8)  virtual channel id  (4 bits)
     [ 8: 9)  has_payload flag
     [ 9:10)  dirty flag          (payload carries dirty data)
-    [10:12)  requester node id   (2 bits — up to 4-node NUMA per paper §4.1)
-    [12:44)  line / block id     (32 bits)
-    [44:64)  transaction id      (20 bits, for matching responses to requests)
+    [10:16)  requester node id   (6 bits — up to 64 caching remotes)
+    [16:48)  line / block id     (32 bits)
+    [48:64)  transaction id      (16 bits, for matching responses to requests)
+
+The original layout (v1) carried only a 2-bit node id — the paper's 4-node
+NUMA ceiling (§4.1) — with the line id at [12:44) and a 20-bit txn id at
+[44:64).  Widening the node field shifts the line field, so v1 words are
+NOT bit-compatible with v2; ``pack_v1``/``unpack_v1`` keep the 2-bit-era
+layout decodable (old traces decode through them exactly as they always
+did), and ``core.tracing.TraceBuffer`` accepts an ``ewf_version`` for
+replaying archived traces.
 
 Payloads (the cache-line data itself) travel out of band in a parallel data
 array — exactly as the real link separates header and data flits.
@@ -88,32 +96,43 @@ class Message(NamedTuple):
     txn: int
 
 
+#: Current EWF layout revision.  v1 packed a 2-bit node id; v2 widens it to
+#: 6 bits (64 remotes) by shifting the line field and narrowing the txn id.
+EWF_VERSION = 2
+
 _TYPE_SHIFT, _TYPE_BITS = 0, 4
 _VC_SHIFT, _VC_BITS = 4, 4
 _PAYLOAD_SHIFT = 8
 _DIRTY_SHIFT = 9
-_NODE_SHIFT, _NODE_BITS = 10, 2
-_LINE_SHIFT, _LINE_BITS = 12, 32
-_TXN_SHIFT, _TXN_BITS = 44, 20
+_NODE_SHIFT, _NODE_BITS = 10, 6
+_LINE_SHIFT, _LINE_BITS = 16, 32
+_TXN_SHIFT, _TXN_BITS = 48, 16
+
+#: Maximum node id a v2 word can carry (the engine's remote-count ceiling).
+MAX_NODE = (1 << _NODE_BITS) - 1
+
+# -- the retired v1 (2-bit-node) layout, kept for archived traces ----------
+_V1_NODE_SHIFT, _V1_NODE_BITS = 10, 2
+_V1_LINE_SHIFT, _V1_LINE_BITS = 12, 32
+_V1_TXN_SHIFT, _V1_TXN_BITS = 44, 20
 
 
-def pack(msg_type, vc, has_payload, dirty, node, line, txn):
-    """Pack message fields into uint64 words.  Works on scalars or arrays,
-    numpy or jax (EWF canonical binary form)."""
+def _pack(msg_type, vc, has_payload, dirty, node, line, txn,
+          node_shift, line_shift, txn_shift):
     xp = jnp if any(isinstance(a, jnp.ndarray) for a in
                     (msg_type, vc, line, txn)) else np
     w = xp.asarray(msg_type, dtype=xp.uint64) << _TYPE_SHIFT
     w = w | (xp.asarray(vc, dtype=xp.uint64) << _VC_SHIFT)
     w = w | (xp.asarray(has_payload, dtype=xp.uint64) << _PAYLOAD_SHIFT)
     w = w | (xp.asarray(dirty, dtype=xp.uint64) << _DIRTY_SHIFT)
-    w = w | (xp.asarray(node, dtype=xp.uint64) << _NODE_SHIFT)
-    w = w | (xp.asarray(line, dtype=xp.uint64) << _LINE_SHIFT)
-    w = w | (xp.asarray(txn, dtype=xp.uint64) << _TXN_SHIFT)
+    w = w | (xp.asarray(node, dtype=xp.uint64) << node_shift)
+    w = w | (xp.asarray(line, dtype=xp.uint64) << line_shift)
+    w = w | (xp.asarray(txn, dtype=xp.uint64) << txn_shift)
     return w
 
 
-def unpack(word) -> Message:
-    """Unpack uint64 word(s) into a Message of field arrays/scalars."""
+def _unpack(word, node_shift, node_bits, line_shift, line_bits,
+            txn_shift, txn_bits) -> Message:
     xp = jnp if isinstance(word, jnp.ndarray) else np
     w = xp.asarray(word, dtype=xp.uint64)
 
@@ -125,10 +144,37 @@ def unpack(word) -> Message:
         vc=_field(_VC_SHIFT, _VC_BITS).astype(xp.int32),
         has_payload=_field(_PAYLOAD_SHIFT, 1).astype(bool),
         dirty=_field(_DIRTY_SHIFT, 1).astype(bool),
-        node=_field(_NODE_SHIFT, _NODE_BITS).astype(xp.int32),
-        line=_field(_LINE_SHIFT, _LINE_BITS).astype(xp.int64),
-        txn=_field(_TXN_SHIFT, _TXN_BITS).astype(xp.int32),
+        node=_field(node_shift, node_bits).astype(xp.int32),
+        line=_field(line_shift, line_bits).astype(xp.int64),
+        txn=_field(txn_shift, txn_bits).astype(xp.int32),
     )
+
+
+def pack(msg_type, vc, has_payload, dirty, node, line, txn):
+    """Pack message fields into uint64 words (EWF v2: 6-bit node ids).
+    Works on scalars or arrays, numpy or jax."""
+    return _pack(msg_type, vc, has_payload, dirty, node, line, txn,
+                 _NODE_SHIFT, _LINE_SHIFT, _TXN_SHIFT)
+
+
+def unpack(word) -> Message:
+    """Unpack v2 uint64 word(s) into a Message of field arrays/scalars."""
+    return _unpack(word, _NODE_SHIFT, _NODE_BITS, _LINE_SHIFT, _LINE_BITS,
+                   _TXN_SHIFT, _TXN_BITS)
+
+
+def pack_v1(msg_type, vc, has_payload, dirty, node, line, txn):
+    """Pack in the retired 2-bit-node v1 layout (archived-trace format)."""
+    return _pack(msg_type, vc, has_payload, dirty, node, line, txn,
+                 _V1_NODE_SHIFT, _V1_LINE_SHIFT, _V1_TXN_SHIFT)
+
+
+def unpack_v1(word) -> Message:
+    """Decode a 2-bit-era (v1) word exactly as the original decoder did —
+    archived traces with node ids 0..3 keep decoding identically."""
+    return _unpack(word, _V1_NODE_SHIFT, _V1_NODE_BITS,
+                   _V1_LINE_SHIFT, _V1_LINE_BITS,
+                   _V1_TXN_SHIFT, _V1_TXN_BITS)
 
 
 def to_json(msg: Message) -> dict:

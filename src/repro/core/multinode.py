@@ -1,9 +1,10 @@
-"""4-node NUMA extension: home directory with a sharer VECTOR.
+"""N-node NUMA extension: home directory with a sharer VECTOR.
 
 The paper's formal specification "was a considerable superset of that
 required for [ACCI], and covered 4-node NUMA systems" (§4.1).  This module
-implements that superset as an atomic reference model: one home node plus up
-to R remote caching agents per line, with
+implements that superset as an atomic reference model — one home node plus
+up to R remote caching agents per line (R <= 64 since the EWF v2 node-id
+widening, matching ``engine_mn.MAX_REMOTES``) — with
 
 * a sharers bitmask in the directory (classic full-map directory a la
   Censier-Feautrier, which the paper cites as [10]);
@@ -22,7 +23,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-from .messages import MsgType
+from .messages import MAX_NODE, MsgType
 from .states import HomeState as H
 from .states import RemoteState as R
 
@@ -31,7 +32,8 @@ class MultiNodeRef:
     """Atomic reference model: 1 home + ``n_remotes`` caching agents."""
 
     def __init__(self, n_lines: int, n_remotes: int = 3, moesi: bool = True):
-        assert 1 <= n_remotes <= 4, "EWF carries 2-bit node ids"
+        assert 1 <= n_remotes <= MAX_NODE + 1, \
+            "EWF v2 carries 6-bit node ids"
         self.n = n_lines
         self.r = n_remotes
         self.moesi = moesi

@@ -497,7 +497,9 @@ def verify_envelope(tables: DenseTables) -> List[str]:
 # N-remote (sharer-vector) dense-table extensions (paper §4.1).
 #
 # The paper's formal specification "covered 4-node NUMA systems"; the tables
-# below are its executable superset for one home + up to 4 caching remotes.
+# below are its executable superset for one home + up to 64 caching remotes
+# (the EWF v2 node-id ceiling — every rule is per-(requester, other-remote),
+# so the tables themselves are independent of the remote count).
 # The DIRECTORY keeps a per-remote view vector (a full-map sharer directory a
 # la Censier-Feautrier, paper ref [10]); a request is granted only after the
 # home has fanned out and collected every needed downgrade, so the grant

@@ -27,19 +27,29 @@ from typing import Dict, FrozenSet, Iterable, List, Sequence, Set, Tuple
 
 import numpy as np
 
-from .messages import Message, MsgType, pack, to_json, unpack
+from .messages import (EWF_VERSION, Message, MsgType, pack, pack_v1,
+                       to_json, unpack, unpack_v1)
 
 
 class TraceBuffer:
-    """Ring buffer of packed EWF words (host-side)."""
+    """Ring buffer of packed EWF words (host-side).
 
-    def __init__(self, capacity: int = 1 << 16):
+    ``ewf_version`` selects the decode layout: new traces are recorded and
+    decoded in the current (v2, 6-bit-node) format; pass ``ewf_version=1``
+    to decode an archived 2-bit-era trace loaded into ``words``.
+    """
+
+    def __init__(self, capacity: int = 1 << 16,
+                 ewf_version: int = EWF_VERSION):
+        assert ewf_version in (1, 2), f"unknown EWF version {ewf_version}"
         self.capacity = capacity
+        self.ewf_version = ewf_version
         self.words: List[int] = []
 
     def record(self, msg_type: int, vc: int, has_payload: bool, dirty: bool,
                node: int, line: int, txn: int) -> None:
-        w = int(pack(msg_type, vc, has_payload, dirty, node, line, txn))
+        packer = pack if self.ewf_version == EWF_VERSION else pack_v1
+        w = int(packer(msg_type, vc, has_payload, dirty, node, line, txn))
         if len(self.words) >= self.capacity:
             self.words.pop(0)
         self.words.append(w)
@@ -49,7 +59,8 @@ class TraceBuffer:
         self.record(int(MsgType[name]), 0, False, False, 0, line, 0)
 
     def messages(self) -> List[Message]:
-        return [unpack(np.uint64(w)) for w in self.words]
+        decode = unpack if self.ewf_version == EWF_VERSION else unpack_v1
+        return [decode(np.uint64(w)) for w in self.words]
 
     def to_json(self) -> str:
         return json.dumps([to_json(m) for m in self.messages()])

@@ -18,6 +18,15 @@ Here the same semantics are modelled over JAX arrays:
   without credit stall (and are retried by the caller), never dropped.
 
 ``vc_of(line, msg_class)`` reproduces the odd/even interleaving.
+
+Every operation is polymorphic over LEADING batch axes: a channel whose
+fields are ``[L]`` models one initiator (the 2-node engine), ``[R, L]``
+models R initiators over one contiguous flat slab (the N-remote engine) —
+same code path, no ``vmap`` wrapper, so the traced program carries a
+single batched op per phase regardless of R.  Credits are accounted PER
+INITIATOR (each leading-axis row ranks its own candidates against the
+per-VC limit), which is exactly the semantics the old per-remote ``vmap``
+gave and what the N-remote bisimulation tests pin down.
 """
 from __future__ import annotations
 
@@ -55,12 +64,15 @@ def vc_of(line, msg_class):
 
 
 class Channel(NamedTuple):
-    """One direction of per-line in-flight messages (struct-of-arrays)."""
+    """One direction of per-line in-flight messages (struct-of-arrays).
 
-    msg: jnp.ndarray       # [L] int8, MsgType (NOP = empty slot)
-    dirty: jnp.ndarray     # [L] bool
-    payload: jnp.ndarray   # [L, B] line data
-    age: jnp.ndarray       # [L] int32
+    Fields may carry any leading batch shape: ``[L]``/``[L, B]`` for one
+    initiator, ``[R, L]``/``[R, L, B]`` for the N-remote flat layout."""
+
+    msg: jnp.ndarray       # [..., L] int8, MsgType (NOP = empty slot)
+    dirty: jnp.ndarray     # [..., L] bool
+    payload: jnp.ndarray   # [..., L, B] line data
+    age: jnp.ndarray       # [..., L] int32
 
 
 def make_channel(n_lines: int, block: int, dtype=jnp.float32) -> Channel:
@@ -73,11 +85,12 @@ def make_channel(n_lines: int, block: int, dtype=jnp.float32) -> Channel:
 
 
 def occupancy(ch: Channel, msg_class: int) -> jnp.ndarray:
-    """Per-VC occupancy [N_VCS] of a channel carrying ``msg_class``."""
-    lines = jnp.arange(ch.msg.shape[0])
-    vcs = vc_of(lines, msg_class)
-    active = ch.msg != int(MsgType.NOP)
-    return jnp.zeros((N_VCS,), jnp.int32).at[vcs].add(active.astype(jnp.int32))
+    """Per-VC occupancy ``[..., N_VCS]`` of a channel carrying
+    ``msg_class`` — one row per leading-axis initiator."""
+    vcs = vc_of(jnp.arange(ch.msg.shape[-1]), msg_class)
+    onehot = jax.nn.one_hot(vcs, N_VCS, dtype=jnp.int32)       # [L, V]
+    active = (ch.msg != int(MsgType.NOP)).astype(jnp.int32)
+    return jnp.einsum("...l,lv->...v", active, onehot)
 
 
 def submit(ch: Channel, msg_class: int, want: jnp.ndarray, msg: jnp.ndarray,
@@ -89,24 +102,27 @@ def submit(ch: Channel, msg_class: int, want: jnp.ndarray, msg: jnp.ndarray,
     refused when the slot is busy or the target VC is out of credit (credit
     exhaustion is resolved conservatively: if the VC's occupancy plus the
     number of earlier accepted lines on that VC reaches the credit, later
-    lines stall until a future step).
+    lines stall until a future step).  Credit ranking is per leading-axis
+    initiator (stable line order within each row).
     """
-    lines = jnp.arange(ch.msg.shape[0])
-    vcs = vc_of(lines, msg_class)
+    vcs = vc_of(jnp.arange(ch.msg.shape[-1]), msg_class)       # [L]
     free = ch.msg == int(MsgType.NOP)
-    cand = want & free
+    cand = want & free                                          # [..., L]
     # credit check: rank of each candidate within its VC (stable order).
-    occ = occupancy(ch, msg_class)
-    onehot = jax.nn.one_hot(vcs, N_VCS, dtype=jnp.int32) * cand[:, None]
-    rank = jnp.cumsum(onehot, axis=0) - onehot      # candidates before me
-    my_rank = jnp.take_along_axis(rank, vcs[:, None], axis=1)[:, 0]
-    has_credit = (occ[vcs] + my_rank) < credits[vcs]
+    occ = occupancy(ch, msg_class)                              # [..., V]
+    onehot = jax.nn.one_hot(vcs, N_VCS, dtype=jnp.int32)        # [L, V]
+    per_vc = cand[..., None] * onehot                           # [..., L, V]
+    rank = jnp.cumsum(per_vc, axis=-2) - per_vc    # candidates before me
+    my_rank = jnp.take_along_axis(
+        rank, jnp.broadcast_to(vcs[:, None], cand.shape + (1,)),
+        axis=-1)[..., 0]
+    has_credit = (occ[..., vcs] + my_rank) < credits[vcs]
     accept = cand & has_credit
 
     new = Channel(
         msg=jnp.where(accept, msg.astype(jnp.int8), ch.msg),
         dirty=jnp.where(accept, dirty, ch.dirty),
-        payload=jnp.where(accept[:, None], payload, ch.payload),
+        payload=jnp.where(accept[..., None], payload, ch.payload),
         age=jnp.where(accept, 0, ch.age),
     )
     return new, accept
@@ -126,8 +142,7 @@ def deliver(ch: Channel, msg_class: int,
     message fields for delivered lines should be read from ``ch`` (the input)
     under the returned mask.
     """
-    lines = jnp.arange(ch.msg.shape[0])
-    vcs = vc_of(lines, msg_class)
+    vcs = vc_of(jnp.arange(ch.msg.shape[-1]), msg_class)
     ready = (ch.msg != int(MsgType.NOP)) & (ch.age >= delays[vcs])
     freed = ch._replace(msg=jnp.where(ready, int(MsgType.NOP),
                                       ch.msg).astype(jnp.int8))

@@ -10,11 +10,11 @@ engine driver, and hardware-style perf counters (see docs/traffic.md).
 """
 from .counters import (Counters, assert_counts_match, replay_reference,
                        summarize, validate_run)
-from .driver import StreamRun, run_stream
+from .driver import StreamRun, default_steps, run_stream
 from .workloads import WORKLOADS, Workload
 
 __all__ = [
     "Counters", "StreamRun", "WORKLOADS", "Workload",
-    "assert_counts_match", "replay_reference", "run_stream", "summarize",
-    "validate_run",
+    "assert_counts_match", "default_steps", "replay_reference",
+    "run_stream", "summarize", "validate_run",
 ]

@@ -50,6 +50,17 @@ class _Carry(NamedTuple):
     ctr: Counters
 
 
+def default_steps(ops: int, n_remotes: int) -> int:
+    """Step budget covering an ``ops``-per-remote stream plus drain tail.
+
+    Sustained throughput saturates near 1 op/step under hot-line
+    contention, so the budget must scale with TOTAL ops (R * ops), not
+    per-remote ops — a fixed multiple of ``ops`` strands wide runs with
+    ``completed=False``.  Steps on a drained engine are no-ops, so the
+    generous tail only costs device time."""
+    return 2 * ops * n_remotes + 12 * ops + 64
+
+
 class StreamRun(NamedTuple):
     """Result of one streaming run."""
 

@@ -5,9 +5,11 @@
     PYTHONPATH=src python -m repro.traffic.run --smoke
 
 ``--smoke`` runs EVERY workload generator at a small size with full
-oracle validation (counter exactness + completion) — the CI keep-green
-path for the subsystem.  Without it, one workload is driven at the
-requested size and its counter summary printed as JSON.
+oracle validation (counter exactness + completion), plus one WIDE case
+(zipfian at 8 remotes) so the scaled flat-[R, L] engine path stays
+exercised — the CI keep-green path for the subsystem.  Without it, one
+workload is driven at the requested size and its counter summary printed
+as JSON.  ``--remotes`` accepts up to 64 (the EWF v2 node-id ceiling).
 """
 from __future__ import annotations
 
@@ -44,19 +46,24 @@ def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
 
 
 def smoke() -> int:
-    """Small-size full-taxonomy run with oracle validation; exit status."""
+    """Small-size full-taxonomy run with oracle validation; exit status.
+
+    Includes one WIDE case (zipfian, 8 remotes) so the flat-[R, L] engine
+    path past the old 4-remote ceiling stays covered by CI."""
     from repro.traffic import WORKLOADS
+    cases = [(name, 2, 220) for name in WORKLOADS]
+    cases.append(("zipfian", 8, 900))
     failures = 0
-    for name in WORKLOADS:
+    for name, n_remotes, steps in cases:
         try:
-            out = drive(name, n_remotes=2, n_lines=12, ops=20, steps=220,
-                        seed=7, moesi=True, validate=True)
-            print(f"smoke {name}: OK ops={out['ops_retired']} "
+            out = drive(name, n_remotes=n_remotes, n_lines=12, ops=20,
+                        steps=steps, seed=7, moesi=True, validate=True)
+            print(f"smoke {name} r{n_remotes}: OK ops={out['ops_retired']} "
                   f"max_wait={max(out['max_wait'])} "
                   f"msgs={sum(out['messages'].values())}")
         except AssertionError as e:
             failures += 1
-            print(f"smoke {name}: FAIL {e}")
+            print(f"smoke {name} r{n_remotes}: FAIL {e}")
     print("smoke:", "PASS" if not failures else f"{failures} FAILURES")
     return 1 if failures else 0
 
@@ -66,12 +73,14 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workload", default="zipfian",
                     choices=sorted(WORKLOADS))
-    ap.add_argument("--remotes", type=int, default=4)
+    ap.add_argument("--remotes", type=int, default=4,
+                    help="number of caching remotes, 1..64 (EWF v2)")
     ap.add_argument("--lines", type=int, default=64)
     ap.add_argument("--ops", type=int, default=128,
                     help="stream length per remote")
     ap.add_argument("--steps", type=int, default=0,
-                    help="engine-step budget (default: 10*ops + 64)")
+                    help="engine-step budget (default: scales with "
+                         "remotes*ops, see traffic.default_steps)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesi", action="store_true",
                     help="run the MESI subset instead of MOESI")
@@ -82,9 +91,14 @@ def main() -> None:
                     help="validated mini-run of every workload generator")
     args = ap.parse_args()
 
+    from repro.core.engine_mn import MAX_REMOTES
+    if not 1 <= args.remotes <= MAX_REMOTES:
+        ap.error(f"--remotes must be in 1..{MAX_REMOTES} "
+                 f"(EWF v2 node-id field)")
     if args.smoke:
         raise SystemExit(smoke())
-    steps = args.steps or 10 * args.ops + 64
+    from repro.traffic import default_steps
+    steps = args.steps or default_steps(args.ops, args.remotes)
     out = drive(args.workload, args.remotes, args.lines, args.ops, steps,
                 args.seed, not args.mesi, args.validate)
     print(json.dumps(out, indent=1, default=str))

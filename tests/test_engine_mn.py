@@ -1,7 +1,8 @@
 """N-remote engine tests: mechanical envelope checks for the sharer-vector
 tables, seeded differential bisimulation of the vectorized engine against
-the atomic ``MultiNodeRef`` oracle (N in {2,3,4}, MESI + MOESI), race
-stress under concurrent same-line traffic, and the fan-out cost law.
+the atomic ``MultiNodeRef`` oracle (R in {2,3,4} fast, {8,16} wide/slow,
+MESI + MOESI), race stress under concurrent same-line traffic, and the
+fan-out cost law.
 
 No ``hypothesis`` dependency: schedules come from ``random.Random(seed)``,
 so this module runs (and the envelope requirements stay checked) on
@@ -163,6 +164,26 @@ def test_engine_mn_bisimulates_oracle(n_remotes, moesi, warm_engines):
                      n_lines=16, rounds=6)
 
 
+def test_engine_mn_bisimulates_oracle_wide_fast():
+    """Fast wide-R smoke: the flat [R, L] layout past the old 4-remote
+    ceiling bisimulates at R=8 (tiny sizes; the R∈{8,16} depth lives in
+    the slow tier)."""
+    run_bisimulation(seed=88, n_remotes=8, moesi=True, n_lines=8, rounds=3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("moesi", [False, True], ids=["mesi", "moesi"])
+@pytest.mark.parametrize("n_remotes", [8, 16])
+def test_engine_mn_bisimulates_oracle_wide(n_remotes, moesi):
+    """Slow tier, wide R: the scaled engine (EWF v2 node ids, flat [R, L]
+    channel slab) holds state/value/sharer-mask equality against the
+    atomic oracle at R=8 and R=16."""
+    for seed in range(3):
+        run_bisimulation(seed=104729 * seed + 17 * n_remotes + int(moesi),
+                         n_remotes=n_remotes, moesi=moesi,
+                         n_lines=48, rounds=8)
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("moesi", [False, True], ids=["mesi", "moesi"])
 @pytest.mark.parametrize("n_remotes", [2, 3, 4])
@@ -239,7 +260,7 @@ def test_engine_mn_concurrent_races(moesi):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("n_remotes", [2, 3, 4])
+@pytest.mark.parametrize("n_remotes", [2, 3, 4, 8])
 def test_engine_mn_fanout_cost(n_remotes):
     """An exclusive grant costs exactly (sharers - 1) HOME_DOWNGRADE_I
     messages — the engine's count matches the oracle's count matches the
