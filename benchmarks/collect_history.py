@@ -1,0 +1,119 @@
+"""Merge downloaded ``BENCH_smoke.json`` artifacts into a trajectory table.
+
+Every CI run uploads its machine-readable benchmark record as the
+``BENCH_smoke`` artifact (see ``.github/workflows/ci.yml``).  Download a
+set of them (e.g. with ``gh run download -n BENCH_smoke -D artifacts/<id>``
+per run) and merge:
+
+    python -m benchmarks.collect_history artifacts/*/BENCH_smoke.json \
+        [--out history.md] [--csv history.csv]
+
+Records are sorted by their ``generated_unix`` stamp; one row per record,
+one column per streaming config's deterministic ops/step (the gated
+metric), with max_wait and wall-clock riding along.  Missing configs
+(older records predate r32/W=2) render as ``-`` — the table is the union,
+so the trajectory stays readable across config-set changes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List
+
+
+def load_records(paths: List[str]) -> List[dict]:
+    recs = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"skipping {path}: {e}", file=sys.stderr)
+            continue
+        if "streaming" not in rec:
+            print(f"skipping {path}: no streaming section", file=sys.stderr)
+            continue
+        rec["_path"] = path
+        recs.append(rec)
+    recs.sort(key=lambda r: r.get("generated_unix", 0))
+    return recs
+
+
+def config_keys(recs: List[dict]) -> List[str]:
+    """Union of streaming config keys, width-1 configs first."""
+    keys = {k for r in recs for k in r["streaming"]}
+    return sorted(keys, key=lambda k: ("_w" in k, k))
+
+
+def _stamp(rec: dict) -> str:
+    t = rec.get("generated_unix")
+    return time.strftime("%Y-%m-%d %H:%M", time.gmtime(t)) if t else "?"
+
+
+def to_markdown(recs: List[dict]) -> str:
+    keys = config_keys(recs)
+    head = (["date (UTC)", "jax"]
+            + [f"{k} ops/step" for k in keys]
+            + [f"{k} max_wait" for k in keys])
+    lines = ["| " + " | ".join(head) + " |",
+             "|" + "---|" * len(head)]
+    for rec in recs:
+        row = [_stamp(rec), rec.get("jax_version", "?")]
+        for field, fmt in (("ops_per_step", "{:.4f}"), ("max_wait", "{}")):
+            for k in keys:
+                cfg = rec["streaming"].get(k)
+                row.append(fmt.format(cfg[field]) if cfg and field in cfg
+                           else "-")
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def to_csv(recs: List[dict]) -> str:
+    keys = config_keys(recs)
+    head = (["generated_unix", "jax_version"]
+            + [f"{k}_ops_per_step" for k in keys]
+            + [f"{k}_max_wait" for k in keys]
+            + [f"{k}_wall_s" for k in keys])
+    rows = [",".join(head)]
+    for rec in recs:
+        row = [str(rec.get("generated_unix", "")),
+               rec.get("jax_version", "")]
+        for field in ("ops_per_step", "max_wait", "wall_s"):
+            for k in keys:
+                cfg = rec["streaming"].get(k)
+                row.append(str(cfg[field]) if cfg and field in cfg else "")
+        rows.append(",".join(row))
+    return "\n".join(rows) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("records", nargs="+",
+                    help="BENCH_smoke.json files (downloaded artifacts "
+                         "and/or the committed baseline)")
+    ap.add_argument("--out", default=None,
+                    help="write the markdown table here (default: stdout)")
+    ap.add_argument("--csv", default=None,
+                    help="also write a machine-readable CSV here")
+    args = ap.parse_args()
+
+    recs = load_records(args.records)
+    if not recs:
+        raise SystemExit("no readable benchmark records")
+    md = to_markdown(recs)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+        print(f"wrote {args.out} ({len(recs)} records)")
+    else:
+        print(md, end="")
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(to_csv(recs))
+        print(f"wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -314,6 +314,61 @@ def bench_streaming(remotes=FANOUT_REMOTES, n_lines: int = 32,
 
 
 # ---------------------------------------------------------------------------
+# Issue width: MSHR occupancy vs sustained throughput (hot-path overhaul)
+# ---------------------------------------------------------------------------
+
+#: the issue-width ladder of the multi-op streaming driver.
+ISSUE_WIDTHS = (1, 2, 4)
+ISSUE_WIDTH_REMOTES = (8, 32, 64)
+
+
+def bench_issue_width(remotes=ISSUE_WIDTH_REMOTES, widths=ISSUE_WIDTHS,
+                      n_lines: int = 32, block: int = 4) -> List[Row]:
+    """The MSHR-occupancy vs throughput curve over issue width W — the
+    figure of merit open coherence systems report (BlackParrot-BedRock,
+    arXiv:2505.00962): each remote may put up to W new ops in flight per
+    step (one MSHR per (remote, line), same-line window slots serialized
+    in-queue), and the curve shows how far extra occupancy buys sustained
+    ops/step before per-line serialization at the home saturates it.
+    Wall-clock us/step rides along (warmed, best-of-2) — the single-pass
+    step + donated in-place buffers keep it ~flat in W."""
+    from repro.core.engine_mn import EngineMN
+    from repro.traffic import WORKLOADS, default_steps, run_stream, summarize
+    rows: List[Row] = []
+    for n_remotes in remotes:
+        n_ops = 96 if n_remotes <= 16 else 48
+        wl = WORKLOADS["zipfian"](jax.random.key(0), n_ops, n_remotes,
+                                  n_lines)
+        steps = default_steps(n_ops, n_remotes)
+        for width in widths:
+            eng = EngineMN(jnp.zeros((n_lines, block), jnp.float32),
+                           n_remotes=n_remotes)
+            run_stream(eng, wl, steps=steps, width=width)   # compile+warm
+            best = float("inf")
+            for _ in range(2):
+                t0 = time.perf_counter()
+                run = run_stream(eng, wl, steps=steps, width=width)
+                best = min(best, time.perf_counter() - t0)
+            assert run.completed
+            s = summarize(run.counters, run.msg_count)
+            sustained = s["ops_per_step"] * steps / best
+            rows.append((
+                f"mshr/zipf_r{n_remotes}_w{width}", best * 1e6 / steps,
+                f"{s['ops_per_step']:.3f} ops/step sustained; MSHR occ "
+                f"mean {s['mean_mshr_occupancy']:.1f} peak "
+                f"{s['peak_mshr_occupancy']}; {sustained:.0f} ops/s "
+                f"wall-clock; max_wait {max(s['max_wait'])}"))
+    rows.append(("mshr/model", 0.0,
+                 "occupancy rises with W (more overlap per remote) but "
+                 "sustained ops/step saturates once per-line serialization "
+                 "at the home caps the retire rate — the occupancy/"
+                 "throughput knee the issue-width curve exposes; W>1 pays "
+                 "off most at moderate R where MSHRs, not the hot line, "
+                 "were the limit"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # §3.4 specialization: protocol-size table
 # ---------------------------------------------------------------------------
 
@@ -332,5 +387,5 @@ def bench_protocol_size() -> List[Row]:
 
 
 ALL = [bench_protocol_size, bench_interconnect, bench_fanout,
-       bench_streaming, bench_select, bench_pointer_chase, bench_regex,
-       bench_locality]
+       bench_streaming, bench_issue_width, bench_select,
+       bench_pointer_chase, bench_regex, bench_locality]

@@ -64,6 +64,16 @@ def submit(tables: DenseTables, st: AgentState, op: jnp.ndarray,
     ``accepted`` mask) — one MSHR per line.  Hits complete immediately
     (silent transitions applied); misses emit a request.
 
+    MULTI-OP ISSUE: the op vector is dense over lines, so one agent (one
+    leading-axis row) may issue SEVERAL new ops in a single call — one per
+    distinct line, each allocating its own line MSHR.  This is the agent
+    half of the streaming driver's issue width W (``traffic.driver``): the
+    driver guarantees at most one op per (agent, line) per step by
+    serializing same-line window slots in-queue, and this function
+    guarantees per-line MSHR exclusivity; nothing here assumes a single op
+    per agent per step.  The hit/miss counters reduce over the line axis,
+    so they stay exact under multi-op issue.
+
     Returns (state, accepted[L], request_msg[L], req_dirty[L], req_payload).
     """
     o = op.astype(jnp.int32)

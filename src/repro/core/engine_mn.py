@@ -17,9 +17,11 @@ The remote-count ceiling is the EWF node-id field: 6 bits since EWF v2
 Transaction discipline (the "intermediate states" of a real directory):
 
 * the home parks ONE request per line (``txn_msg``/``txn_node``), chosen
-  among competing ready requests by a per-line ROTATING priority pointer
-  (``arb_rr``, advanced past each winner — starvation-free under the
-  sustained same-line traffic of ``repro.traffic``), fans out one
+  among competing ready requests AND the home's own pending accesses
+  (arbitration participant R, parked as the ``HOME_TXN`` sentinel) by a
+  per-line ROTATING priority pointer (``arb_rr``, advanced past each
+  winner — starvation-free under the sustained same-line traffic of
+  ``repro.traffic``, for remotes and home alike), fans out one
   ``HOME_DOWNGRADE_*`` per conflicting sharer (the N-node message cost
   the paper's 2-node subsetting avoids), and grants once every reply has
   arrived and no voluntary downgrade is still in flight on the line;
@@ -51,7 +53,7 @@ import numpy as np
 from . import agent as ag
 from . import directory_mn as dmn
 from . import transport as tp
-from .engine import _count, stall_unready_ops
+from .engine import _count
 from .messages import MAX_NODE, MsgType
 from .protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL, DenseTables,
                        DenseTablesMN, LocalOp, MnAbsorb)
@@ -60,6 +62,15 @@ from .states import RemoteView
 #: Remote-count ceiling, DERIVED from the EWF node-id field width — widening
 #: the wire format (core.messages) widens the engine with it.
 MAX_REMOTES = MAX_NODE + 1
+
+#: ``txn_msg`` sentinel marking a line whose transaction slot is held by the
+#: HOME itself: home-side accesses (``want_read``/``want_write``) compete in
+#: the same rotating ``arb_rr`` arbitration as remote requests (participant
+#: id R), so a home access bounded-waits under sustained streaming instead
+#: of waiting for the line to drain — the ROADMAP starvation open item.
+#: Outside the MsgType value range, so it can never collide with a parked
+#: request.
+HOME_TXN = 100
 
 
 class EngineMNState(NamedTuple):
@@ -118,16 +129,14 @@ def make_engine_mn_state(backing: jnp.ndarray, n_remotes: int
     )
 
 
-def _ready(ch: tp.Channel, msg_class: int, delays: jnp.ndarray
-           ) -> jnp.ndarray:
+def _ready(ch: tp.Channel, delay_l: jnp.ndarray) -> jnp.ndarray:
     """[R, L] mask of in-flight messages whose VC delay has elapsed.
 
     The ``transport.deliver`` precondition, split out because request
     arbitration (step 4) must pop only the WINNING slot per line — every
-    other channel uses the batched ``deliver`` directly."""
-    L = ch.msg.shape[-1]
-    vcs = tp.vc_of(jnp.arange(L), msg_class)
-    return (ch.msg != int(MsgType.NOP)) & (ch.age >= delays[vcs][None, :])
+    other channel uses the batched ``deliver`` directly.  ``delay_l`` is
+    the caller's hoisted per-line delay gather for the channel's class."""
+    return (ch.msg != int(MsgType.NOP)) & (ch.age >= delay_l[None, :])
 
 
 def _pop(ch: tp.Channel, mask: jnp.ndarray) -> tp.Channel:
@@ -146,11 +155,25 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     The transport/agent primitives are batch-polymorphic, so the ``[R, L]``
     channel/MSHR slabs are operated on directly — one batched op per phase
     regardless of R (the flat layout that lets this engine scale to
-    ``MAX_REMOTES`` without per-remote traced structure)."""
+    ``MAX_REMOTES`` without per-remote traced structure).
+
+    Single-pass discipline (the hot-path overhaul): per-VC delay gathers
+    are hoisted once per class, response-class submits skip the credit
+    ranking (they always sink), and the request path ranks credits exactly
+    ONCE — the stall dry-run's acceptance is reused as the channel write
+    mask, since the surviving emission set can only shrink between the
+    dry-run and the write (same occupancy, smaller ranks)."""
     nop = jnp.int8(int(MsgType.NOP))
     R, L = st.hreq_pending.shape
     msg_count, payload_msgs = st.msg_count, st.payload_msgs
-    inf_credits = jnp.full_like(credits, 1 << 30)
+    lines = jnp.arange(L)
+    rids = jnp.arange(R)
+    # hoisted loop-invariant lookups: one delay gather per VC pair, shared
+    # by every ready/deliver site on that class.
+    dly_req = delays[tp.vc_of(lines, tp.CLASS_REMOTE_REQ)]
+    dly_resp = delays[tp.vc_of(lines, tp.CLASS_HOME_RESP)]
+    dly_hreq = delays[tp.vc_of(lines, tp.CLASS_HOME_REQ)]
+    dly_hresp = delays[tp.vc_of(lines, tp.CLASS_REMOTE_RESP)]
 
     # accumulate new home-side wants.
     want_read = st.want_read | want_read
@@ -164,7 +187,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
 
     # ---- 2. downgrade replies arrive at the home -------------------------
     ch_hresp_in = ch_hresp
-    ch_hresp, hr_arr = tp.deliver(ch_hresp, tp.CLASS_REMOTE_RESP, delays)
+    ch_hresp, hr_arr = tp.deliver(ch_hresp, tp.CLASS_REMOTE_RESP, delays,
+                                  delay_l=dly_hresp)
     rep_kind = jnp.where(
         st.hreq_pending == int(MsgType.HOME_DOWNGRADE_S),
         jnp.int8(int(MnAbsorb.REPLY_S)), jnp.int8(int(MnAbsorb.REPLY_I)))
@@ -175,7 +199,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
                                      ch_hresp_in.msg, ch_hresp_in.dirty)
 
     # ---- 3. voluntary downgrades arrive at the home ----------------------
-    ready_req = _ready(ch_req, tp.CLASS_REMOTE_REQ, delays)
+    ready_req = _ready(ch_req, dly_req)
     is_vol = (ch_req.msg == int(MsgType.VOL_DOWNGRADE_I)) | \
              (ch_req.msg == int(MsgType.VOL_DOWNGRADE_S))
     pop_vol = ready_req & is_vol
@@ -186,7 +210,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     msg_count, payload_msgs = _count(msg_count, payload_msgs, pop_vol,
                                      ch_req.msg, ch_req.dirty)
 
-    # ---- 4. request arbitration: ONE request per free line ---------------
+    # ---- 4. arbitration: remotes AND the home compete per free line ------
     req_ready = ready_req & ~is_vol
     # a line is free for a new transaction only when no downgrade round-trip
     # is outstanding AND no grant response is still in flight — otherwise a
@@ -196,39 +220,59 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     resp_in_flight = (ch_resp.msg != nop).any(axis=0)
     line_free = (st.txn_msg == nop) & ~(hreq_pending != nop).any(axis=0) & \
         ~resp_in_flight
-    any_req = req_ready.any(axis=0)
+    # The home is arbitration participant R: an outstanding want competes
+    # for the line's transaction slot like any remote request, so it
+    # bounded-waits under sustained streaming instead of waiting for the
+    # line to drain (the pre-fix unbounded starvation).
+    home_ready = want_read | want_write
+    any_req = req_ready.any(axis=0) | home_ready
     # Rotating priority (the ROADMAP starvation fix): the per-line pointer
-    # ``arb_rr`` names the highest-priority remote; each accepted request
-    # advances it PAST the winner, so a persistently-ready remote climbs
-    # one rank per transaction and wins within R-1 grants — a bounded wait
-    # no fixed argmax order gives.  (Rotating by raw ``step_no`` is NOT
-    # enough: contended-line transaction latencies can align with the
-    # rotation period and park the same priority order at every free
-    # instant — the pointer rotates per GRANT, which cannot alias.)
-    prio = (jnp.arange(R)[:, None] - st.arb_rr[None, :]) % R
-    winner = jnp.argmin(jnp.where(req_ready, prio, R), axis=0)
+    # ``arb_rr`` names the highest-priority participant; each accepted
+    # request advances it PAST the winner, so a persistently-ready
+    # participant climbs one rank per transaction and wins within R grants
+    # — a bounded wait no fixed argmax order gives.  (Rotating by raw
+    # ``step_no`` is NOT enough: contended-line transaction latencies can
+    # align with the rotation period and park the same priority order at
+    # every free instant — the pointer rotates per GRANT, which cannot
+    # alias.)
+    prio = (jnp.arange(R + 1)[:, None] - st.arb_rr[None, :]) % (R + 1)
+    ready_all = jnp.concatenate([req_ready, home_ready[None, :]], axis=0)
+    winner = jnp.argmin(jnp.where(ready_all, prio, R + 1), axis=0)
     accept_line = any_req & line_free
-    arb_rr = jnp.where(accept_line, (winner + 1) % R, st.arb_rr)
-    lines = jnp.arange(L)
-    win_msg = ch_req.msg[winner, lines]
-    pop_req = accept_line[None, :] & \
-        (jnp.arange(R)[:, None] == winner[None, :])
+    home_win = accept_line & (winner == R)
+    arb_rr = jnp.where(accept_line, (winner + 1) % (R + 1), st.arb_rr)
+    win_node = jnp.minimum(winner, R - 1)
+    win_msg = jnp.where(home_win, jnp.int8(HOME_TXN),
+                        ch_req.msg[win_node, lines])
+    pop_req = (accept_line & ~home_win)[None, :] & \
+        (rids[:, None] == winner[None, :])
     ch_req = _pop(ch_req, pop_vol | (pop_req & req_ready))
     txn_msg = jnp.where(accept_line, win_msg, st.txn_msg)
     txn_node = jnp.where(accept_line, winner, st.txn_node)
     msg_count, payload_msgs = _count(
-        msg_count, payload_msgs, accept_line, win_msg,
+        msg_count, payload_msgs, accept_line & ~home_win, win_msg,
         jnp.zeros((L,), bool))
 
     # ---- 5. fan-out: emit one HOME_DOWNGRADE_* per conflicting sharer ----
     active_txn = txn_msg != nop
+    is_home_txn = txn_msg == HOME_TXN
+    # the home's participant id R is clamped for view/table gathers; every
+    # use is masked by ~is_home_txn (or by resp == NOP, which home
+    # transactions never produce).
+    node_c = jnp.minimum(txn_node, R - 1)
     # an UPGRADE whose requester was concurrently invalidated is doomed to
     # a NACK — suppress its fan-out so the new owner keeps the line.
-    req_view_now = dstate.view[txn_node, lines].astype(jnp.int32)
+    req_view_now = dstate.view[node_c, lines].astype(jnp.int32)
     doomed = active_txn & (txn_msg == int(MsgType.REQ_UPGRADE)) & \
         (req_view_now != int(RemoteView.S))
-    needed = dmn.needed_downgrades(dstate, active_txn & ~doomed,
-                                   txn_msg, txn_node)
+    needed_r = dmn.needed_downgrades(dstate,
+                                     active_txn & ~doomed & ~is_home_txn,
+                                     txn_msg, node_c)
+    # a parked HOME transaction fans out through the SAME machinery: reads
+    # recall a dirty owner to S, writes invalidate every sharer.
+    needed_h = dmn.home_needed_downgrades(dstate, want_read & is_home_txn,
+                                          want_write & is_home_txn)
+    needed = jnp.where(is_home_txn[None, :], needed_h, needed_r)
     send_h = (needed != nop) & (hreq_pending == nop)
     ch_hreq, acc_h = tp.submit(ch_hreq, tp.CLASS_HOME_REQ, send_h, needed,
                                jnp.zeros((R, L), bool),
@@ -244,21 +288,31 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # `needed` must be EMPTY, not merely pending-free: a fan-out submission
     # refused for credit leaves hreq_pending == NOP with the sharer's view
     # intact — granting then would hand out exclusivity while the line is
-    # still shared.  (Step 10's ready_w carries the same guard.)
+    # still shared.  (Home transactions complete under the same guard.)
     complete = active_txn & ~(needed != nop).any(axis=0) & \
         ~(hreq_pending != nop).any(axis=0) & \
         ~in_flight_vol & ~in_flight_h
-    dstate, resp, resp_pay = dmn.grant(tables_mn, dstate, complete,
-                                       txn_msg, txn_node)
+    complete_r = complete & ~is_home_txn
+    dstate, resp, resp_pay = dmn.grant(tables_mn, dstate, complete_r,
+                                       txn_msg, node_c)
+    # a completed HOME transaction services the access in place: the read
+    # serves the coherent line value, the write lands through the home
+    # tables — no message leaves the home.
+    complete_h = complete & is_home_txn
+    hread_done = complete_h & want_read
+    hread_val = jnp.where(hread_done[:, None], dmn.home_value(dstate), 0)
+    dstate = dmn.home_apply_write(dstate, complete_h & want_write, wv)
+    want_read2 = want_read & ~complete_h
+    want_write2 = want_write & ~complete_h
     txn_msg = jnp.where(complete, nop, txn_msg)
-    send_resp = (jnp.arange(R)[:, None] == txn_node[None, :]) & \
+    send_resp = (rids[:, None] == txn_node[None, :]) & \
         (resp != nop)[None, :]
     ch_resp, _ = tp.submit(ch_resp, tp.CLASS_HOME_RESP, send_resp,
                            jnp.broadcast_to(resp, (R, L)),
                            jnp.zeros((R, L), bool),
                            jnp.broadcast_to(resp_pay,
                                             (R, L) + resp_pay.shape[1:]),
-                           inf_credits)
+                           credits, unbounded=True)
     carries = (resp == int(MsgType.RESP_DATA)) | \
               (resp == int(MsgType.RESP_DATA_DIRTY))
     msg_count, payload_msgs = _count(msg_count, payload_msgs,
@@ -266,7 +320,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
 
     # ---- 7. grant responses arrive at the remotes ------------------------
     ch_resp_in = ch_resp
-    ch_resp, r_arr = tp.deliver(ch_resp, tp.CLASS_HOME_RESP, delays)
+    ch_resp, r_arr = tp.deliver(ch_resp, tp.CLASS_HOME_RESP, delays,
+                                delay_l=dly_resp)
     was_load = st.agents.pending_op == int(LocalOp.LOAD)
     agents, _nack = ag.on_response(tables, st.agents, r_arr,
                                    ch_resp_in.msg, ch_resp_in.payload,
@@ -276,14 +331,16 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
 
     # ---- 8. home-initiated downgrades arrive at the remotes --------------
     ch_hreq_in = ch_hreq
-    ch_hreq, h_arr = tp.deliver(ch_hreq, tp.CLASS_HOME_REQ, delays)
+    ch_hreq, h_arr = tp.deliver(ch_hreq, tp.CLASS_HOME_REQ, delays,
+                                delay_l=dly_hreq)
     agents, hresp, hresp_dirty, hresp_pay = ag.on_home_msg(
         tables, agents, h_arr, ch_hreq_in.msg)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, h_arr,
                                      ch_hreq_in.msg,
                                      jnp.zeros((R, L), bool))
     ch_hresp, _ = tp.submit(ch_hresp, tp.CLASS_REMOTE_RESP, hresp != nop,
-                            hresp, hresp_dirty, hresp_pay, inf_credits)
+                            hresp, hresp_dirty, hresp_pay, credits,
+                            unbounded=True)
 
     # ---- 9. remotes submit local ops (fresh + parked retries) ------------
     locked = (hreq_pending != nop) | (ch_hreq.msg != nop)
@@ -295,48 +352,29 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     eff_op = jnp.where(eff_op == int(LocalOp.DEMOTE),
                        jnp.int8(int(LocalOp.NOP)), eff_op)
     # An op that would emit a message stalls until the transport CAN take
-    # it (slot + credit) — see engine.stall_unready_ops for the dirty-
-    # eviction drop this prevents.
-    eff_op = stall_unready_ops(tables, ch_req, eff_op, agents.remote_state,
-                               op_val, credits)
+    # it (slot + credit) — the dirty-eviction drop guard of
+    # engine.stall_unready_ops, with the credit ranking computed ONCE: the
+    # real emission set below is a subset of these candidates on unchanged
+    # occupancy (ranks only shrink), so the dry-run verdict IS the final
+    # acceptance and the channel write needs no second ranking.
+    o = eff_op.astype(jnp.int32)
+    rs = agents.remote_state.astype(jnp.int32)
+    req_of = jnp.asarray(tables.loc_request)[o, rs].astype(jnp.int8)
+    would_emit = req_of != nop
+    acc_pre = tp.credit_accept(ch_req, tp.CLASS_REMOTE_REQ,
+                               would_emit & (ch_req.msg == nop), credits)
+    eff_op = jnp.where(would_emit & ~acc_pre, jnp.int8(int(LocalOp.NOP)),
+                       eff_op)
     eff_val = jnp.where(parked[:, :, None], agents.pending_val, op_val)
     agents2, accepted, emit, req_dirty, req_pay = ag.submit(
         tables, agents, eff_op, eff_val)
-    ch_req, acc_req = tp.submit(ch_req, tp.CLASS_REMOTE_REQ, emit != nop,
-                                emit, req_dirty, req_pay, credits)
-    refused = (emit != nop) & ~acc_req
-    agents2 = agents2._replace(
-        pending_req=jnp.where(refused, nop, agents2.pending_req))
+    ch_req = tp.place(ch_req, emit != nop, emit, req_dirty, req_pay)
     # load hits retire immediately.
     o = eff_op.astype(jnp.int32)
-    rs = agents.remote_state.astype(jnp.int32)
     hit = jnp.asarray(tables.loc_hit)[o, rs]
     load_hit = accepted & hit & (o == int(LocalOp.LOAD))
     load_done = load_done | load_hit
     load_val = jnp.where(load_hit[:, :, None], agents2.cache, load_val)
-
-    # ---- 10. home-side accesses ------------------------------------------
-    busy = ((ch_req.msg != nop).any(axis=0)
-            | (ch_resp.msg != nop).any(axis=0)
-            | (ch_hreq.msg != nop).any(axis=0)
-            | (ch_hresp.msg != nop).any(axis=0)
-            | (agents2.pending_req != nop).any(axis=0)
-            | (agents2.pending_op != int(LocalOp.NOP)).any(axis=0))
-    want_service = (want_read | want_write) & (txn_msg == nop)
-    needed_w = dmn.home_needed_downgrades(
-        dstate, want_read & want_service, want_write & want_service)
-    send_w = (needed_w != nop) & (hreq_pending == nop) & ~busy[None, :]
-    ch_hreq, acc_w = tp.submit(ch_hreq, tp.CLASS_HOME_REQ, send_w, needed_w,
-                               jnp.zeros((R, L), bool),
-                               jnp.zeros_like(st.ch_hreq.payload), credits)
-    hreq_pending = jnp.where(acc_w, needed_w, hreq_pending)
-    ready_w = want_service & ~(needed_w != nop).any(axis=0) & \
-        ~(hreq_pending != nop).any(axis=0) & ~busy
-    hread_done = ready_w & want_read
-    hread_val = jnp.where(hread_done[:, None], dmn.home_value(dstate), 0)
-    dstate = dmn.home_apply_write(dstate, ready_w & want_write, wv)
-    want_read2 = want_read & ~ready_w
-    want_write2 = want_write & ~ready_w
 
     new = EngineMNState(
         dir=dstate, agents=agents2,
@@ -355,10 +393,15 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
 @functools.lru_cache(maxsize=None)
 def _jitted_step_mn(moesi: bool):
     """One compiled step per protocol mode, shared across engine instances
-    (shape changes retrace inside jax.jit's own cache)."""
+    (shape changes retrace inside jax.jit's own cache).
+
+    The incoming state is DONATED: the ``[R, L]`` channel/MSHR/directory
+    slabs update in place instead of reallocating every step.  Callers must
+    treat a stepped state as consumed (every in-repo driver rebinds)."""
     tables = FULL if moesi else MINIMAL
     tables_mn = MN_FULL if moesi else MN_MINIMAL
-    return jax.jit(functools.partial(step_mn, tables, tables_mn))
+    return jax.jit(functools.partial(step_mn, tables, tables_mn),
+                   donate_argnums=0)
 
 
 def busy_flag_mn(st: EngineMNState) -> jnp.ndarray:
@@ -406,7 +449,8 @@ def _jitted_run_ops_mn(moesi: bool):
         st, opv, done, vals, rounds = jax.lax.while_loop(cond, body, init)
         return st, done, vals, rounds, opv.any() | busy_flag_mn(st)
 
-    return jax.jit(run)
+    # the state is donated (in-place slab updates); CoherentStore rebinds.
+    return jax.jit(run, donate_argnums=0)
 
 
 class EngineMN:
@@ -431,7 +475,11 @@ class EngineMN:
         self._backing = backing
 
     def init(self) -> EngineMNState:
-        return make_engine_mn_state(self._backing, self.n_remotes)
+        # fresh copy of the backing: the jitted hot paths DONATE the state,
+        # so the first state's buffers must not alias the caller's array
+        # (donation would delete it out from under a later init()).
+        return make_engine_mn_state(jnp.array(self._backing),
+                                    self.n_remotes)
 
     def step(self, st: EngineMNState, op=None, op_val=None,
              want_read=None, want_write=None, wval=None

@@ -93,9 +93,52 @@ def occupancy(ch: Channel, msg_class: int) -> jnp.ndarray:
     return jnp.einsum("...l,lv->...v", active, onehot)
 
 
+def credit_accept(ch: Channel, msg_class: int, cand: jnp.ndarray,
+                  credits: jnp.ndarray) -> jnp.ndarray:
+    """[..., L] mask of candidates within their VC's credit.
+
+    A candidate is in credit iff its VC's current occupancy plus the number
+    of earlier candidates on the same VC stays below the credit (stable
+    line order within each leading-axis initiator row).  A message class
+    only ever touches its own odd/even VC pair, so the ranking reduces to
+    two parity-split running sums over the line axis — bit-identical to
+    (and much cheaper than) ranking against a dense ``[..., L, N_VCS]``
+    one-hot expansion.
+    """
+    L = ch.msg.shape[-1]
+    odd = (jnp.arange(L) & 1).astype(bool)                      # [L]
+    active = ch.msg != int(MsgType.NOP)
+    occ_o = jnp.where(odd, active, False).sum(-1, keepdims=True)
+    occ_e = jnp.where(odd, False, active).sum(-1, keepdims=True)
+    c_o = jnp.where(odd, cand, False).astype(jnp.int32)
+    c_e = jnp.where(odd, False, cand).astype(jnp.int32)
+    rank_o = jnp.cumsum(c_o, axis=-1) - c_o        # candidates before me
+    rank_e = jnp.cumsum(c_e, axis=-1) - c_e
+    occ_rank = jnp.where(odd, occ_o + rank_o, occ_e + rank_e)
+    vc_credit = credits[vc_of(jnp.arange(L), msg_class)]        # [L]
+    return cand & (occ_rank < vc_credit)
+
+
+def place(ch: Channel, accept: jnp.ndarray, msg: jnp.ndarray,
+          dirty: jnp.ndarray, payload: jnp.ndarray) -> Channel:
+    """Write messages into slots for an acceptance mask ALREADY decided.
+
+    The single-ranking fast path: a caller that dry-ran ``credit_accept``
+    earlier in the step (and whose final emission set can only have SHRUNK
+    since — fewer candidates means smaller ranks on unchanged occupancy)
+    reuses that verdict instead of ranking a second time."""
+    return Channel(
+        msg=jnp.where(accept, msg.astype(jnp.int8), ch.msg),
+        dirty=jnp.where(accept, dirty, ch.dirty),
+        payload=jnp.where(accept[..., None], payload, ch.payload),
+        age=jnp.where(accept, 0, ch.age),
+    )
+
+
 def submit(ch: Channel, msg_class: int, want: jnp.ndarray, msg: jnp.ndarray,
            dirty: jnp.ndarray, payload: jnp.ndarray,
-           credits: jnp.ndarray) -> tuple[Channel, jnp.ndarray]:
+           credits: jnp.ndarray, *,
+           unbounded: bool = False) -> tuple[Channel, jnp.ndarray]:
     """Try to enqueue messages for lines where ``want`` is set.
 
     Returns the updated channel and the mask of ACCEPTED lines.  A submit is
@@ -104,28 +147,17 @@ def submit(ch: Channel, msg_class: int, want: jnp.ndarray, msg: jnp.ndarray,
     number of earlier accepted lines on that VC reaches the credit, later
     lines stall until a future step).  Credit ranking is per leading-axis
     initiator (stable line order within each row).
+
+    ``unbounded=True`` skips the credit ranking entirely — the response-
+    class fast path (responses always sink: the deadlock-freedom argument),
+    identical to passing effectively-infinite credits but without paying
+    the occupancy/rank computation every step.
     """
-    vcs = vc_of(jnp.arange(ch.msg.shape[-1]), msg_class)       # [L]
     free = ch.msg == int(MsgType.NOP)
     cand = want & free                                          # [..., L]
-    # credit check: rank of each candidate within its VC (stable order).
-    occ = occupancy(ch, msg_class)                              # [..., V]
-    onehot = jax.nn.one_hot(vcs, N_VCS, dtype=jnp.int32)        # [L, V]
-    per_vc = cand[..., None] * onehot                           # [..., L, V]
-    rank = jnp.cumsum(per_vc, axis=-2) - per_vc    # candidates before me
-    my_rank = jnp.take_along_axis(
-        rank, jnp.broadcast_to(vcs[:, None], cand.shape + (1,)),
-        axis=-1)[..., 0]
-    has_credit = (occ[..., vcs] + my_rank) < credits[vcs]
-    accept = cand & has_credit
-
-    new = Channel(
-        msg=jnp.where(accept, msg.astype(jnp.int8), ch.msg),
-        dirty=jnp.where(accept, dirty, ch.dirty),
-        payload=jnp.where(accept[..., None], payload, ch.payload),
-        age=jnp.where(accept, 0, ch.age),
-    )
-    return new, accept
+    accept = cand if unbounded else credit_accept(ch, msg_class, cand,
+                                                  credits)
+    return place(ch, accept, msg, dirty, payload), accept
 
 
 def tick(ch: Channel) -> Channel:
@@ -134,16 +166,20 @@ def tick(ch: Channel) -> Channel:
     return ch._replace(age=jnp.where(active, ch.age + 1, ch.age))
 
 
-def deliver(ch: Channel, msg_class: int,
-            delays: jnp.ndarray) -> tuple[Channel, jnp.ndarray]:
+def deliver(ch: Channel, msg_class: int, delays: jnp.ndarray,
+            delay_l: jnp.ndarray = None) -> tuple[Channel, jnp.ndarray]:
     """Pop messages whose age has reached their VC's delay.
 
     Returns (channel with delivered slots freed, delivered mask).  The
     message fields for delivered lines should be read from ``ch`` (the input)
-    under the returned mask.
+    under the returned mask.  ``delay_l`` optionally supplies the per-line
+    delay vector ``delays[vc_of(lines, msg_class)]`` precomputed once by the
+    caller — the engines hoist one gather per VC pair out of the per-site
+    bodies of their fused steps.
     """
-    vcs = vc_of(jnp.arange(ch.msg.shape[-1]), msg_class)
-    ready = (ch.msg != int(MsgType.NOP)) & (ch.age >= delays[vcs])
+    if delay_l is None:
+        delay_l = delays[vc_of(jnp.arange(ch.msg.shape[-1]), msg_class)]
+    ready = (ch.msg != int(MsgType.NOP)) & (ch.age >= delay_l)
     freed = ch._replace(msg=jnp.where(ready, int(MsgType.NOP),
                                       ch.msg).astype(jnp.int8))
     return freed, ready

@@ -5,7 +5,7 @@ engine driver, and hardware-style perf counters (see docs/traffic.md).
 
     eng = EngineMN(jnp.zeros((64, 4), jnp.float32), n_remotes=4)
     wl = WORKLOADS["zipfian"](jax.random.key(0), 128, 4, 64)
-    run = run_stream(eng, wl, steps=1024)
+    run = run_stream(eng, wl, steps=1024, width=2)   # issue width W=2
     print(summarize(run.counters, run.msg_count))
 """
 from .counters import (Counters, assert_counts_match, replay_reference,

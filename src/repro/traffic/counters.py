@@ -51,6 +51,8 @@ class Counters(NamedTuple):
     retired: jnp.ndarray    # [R] ops retired
     occ_sum: jnp.ndarray    # [4] per-class channel occupancy, summed/step
     occ_peak: jnp.ndarray   # [4] per-class peak occupancy
+    mshr_sum: jnp.ndarray   # [] in-flight transactions (MSHRs), summed/step
+    mshr_peak: jnp.ndarray  # [] peak in-flight transactions
     steps: jnp.ndarray      # [] steps folded (the full scan budget)
     active_steps: jnp.ndarray  # [] steps with traffic in flight — the
     #                            denominator for sustained rates (the
@@ -64,6 +66,8 @@ def make_counters(n_remotes: int) -> Counters:
         retired=jnp.zeros((n_remotes,), jnp.int32),
         occ_sum=jnp.zeros((4,), jnp.int32),
         occ_peak=jnp.zeros((4,), jnp.int32),
+        mshr_sum=jnp.zeros((), jnp.int32),
+        mshr_peak=jnp.zeros((), jnp.int32),
         steps=jnp.zeros((), jnp.int32),
         active_steps=jnp.zeros((), jnp.int32),
     )
@@ -97,12 +101,17 @@ def update_counters(ctr: Counters, st, *, retired: jnp.ndarray,
     occ = jnp.stack([(ch.msg != int(MsgType.NOP)).sum()
                      for ch in (st.ch_req, st.ch_resp, st.ch_hreq,
                                 st.ch_hresp)]).astype(jnp.int32)
+    # MSHR occupancy: transactions in flight across all remotes — the
+    # x-axis of the issue-width occupancy/throughput curve.
+    mshr = outstanding.sum().astype(jnp.int32)
     return Counters(
         lat_hist=hist,
         max_wait=max_wait,
         retired=ctr.retired + retired.sum(axis=1).astype(jnp.int32),
         occ_sum=ctr.occ_sum + occ,
         occ_peak=jnp.maximum(ctr.occ_peak, occ),
+        mshr_sum=ctr.mshr_sum + mshr,
+        mshr_peak=jnp.maximum(ctr.mshr_peak, mshr),
         steps=ctr.steps + 1,
         active_steps=ctr.active_steps + step_active.astype(jnp.int32),
     )
@@ -142,6 +151,8 @@ def summarize(ctr: Counters, msg_count: np.ndarray,
         "peak_occupancy": {
             ch: int(np.asarray(ctr.occ_peak)[i])
             for i, ch in enumerate(CHANNELS)},
+        "mean_mshr_occupancy": float(ctr.mshr_sum) / active,
+        "peak_mshr_occupancy": int(ctr.mshr_peak),
         "payload_msgs": int(payload_msgs),
         "messages": {MsgType(i).name: int(mc[i]) for i in range(16)
                      if mc[i]},

@@ -3,25 +3,35 @@
 Every in-repo driver before this one drained the engine to quiescence
 after each op round, so ``EngineMN.step`` never saw sustained, overlapping
 traffic — the ROADMAP's latent arbitration starvation was untestable and
-throughput unmeasurable.  This driver issues the next op of every remote's
+throughput unmeasurable.  This driver issues new ops from every remote's
 stream EVERY step, while prior transactions are still in flight:
 
 * **backpressure** comes from the engine itself: an op the engine cannot
   take this step (line transaction in flight, channel slot busy, VC out of
-  credit) is simply not in the ``accepted`` mask and the remote's
-  head-of-stream op is retried next step;
-* each remote keeps ONE head op pending acceptance (its per-remote queue)
-  and up to L transactions in flight across lines — the overlap a real
-  initiator's MSHRs provide;
+  credit) is simply not in the ``accepted`` mask and the slot's op is
+  retried next step;
+* each remote keeps a WINDOW of up to ``width`` head-of-stream ops pending
+  acceptance (its per-remote ``[R, W]`` issue queue) and up to L
+  transactions in flight across lines — the overlap a real initiator's
+  MSHRs provide.  MSHR allocation stays ONE per (remote, line): window
+  slots targeting the line of an earlier un-issued slot (or of an
+  in-flight transaction) are serialized in-queue, so per-line program
+  order is preserved while independent lines issue out of order, exactly
+  like a real non-blocking cache;
 * the whole run is ONE fused ``lax.scan`` over engine steps — python never
   appears in the hot loop; issue, bookkeeping and the perf counters of
-  ``traffic.counters`` all fold through the scan carry.
+  ``traffic.counters`` all fold through the scan carry, and the engine
+  state is DONATED into the program so the ``[R, L]`` slabs update in
+  place.
 
 Retirement is detected uniformly: an accepted op is retired once the
 agent's MSHR for its line is clear again (hits clear it the same step;
 misses when the grant lands).  The optional retirement TRACE — which op
 retired when — is the linearization ``traffic.counters`` replays into the
-atomic ``MultiNodeRef`` to validate the message counters exactly.
+atomic ``MultiNodeRef`` to validate the message counters exactly; the
+replay argument is per-line retirement order, which multi-op issue leaves
+untouched (same-line ops stay in program order, cross-line ops commute in
+the atomic oracle), so counter exactness holds at every width.
 """
 from __future__ import annotations
 
@@ -38,11 +48,17 @@ from ..core.protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL, LocalOp)
 from .counters import Counters, make_counters, update_counters
 from .workloads import Workload
 
+# the issue window scatters ops/values ADDITIVELY into the dense [R, L]
+# planes (at most one contributing slot per (remote, line), the rest add
+# the identity) — which requires NOP to be the zero code.
+assert int(LocalOp.NOP) == 0 and int(MsgType.NOP) == 0
+
 
 class _Carry(NamedTuple):
     st: EngineMNState
-    cursor: jnp.ndarray       # [R] int32: next stream index per remote
-    head_born: jnp.ndarray    # [R] int32: step the head op was first tried
+    cursor: jnp.ndarray       # [R] int32: stream index of window slot 0
+    issued: jnp.ndarray       # [R, W] bool: slot accepted (or NOP-skipped)
+    slot_born: jnp.ndarray    # [R, W] int32: step the slot entered the window
     outstanding: jnp.ndarray  # [R, L] bool: accepted, not yet retired
     born: jnp.ndarray         # [R, L] int32: first-attempt step per txn
     out_op: jnp.ndarray       # [R, L] int8: LocalOp of the in-flight txn
@@ -56,8 +72,9 @@ def default_steps(ops: int, n_remotes: int) -> int:
     Sustained throughput saturates near 1 op/step under hot-line
     contention, so the budget must scale with TOTAL ops (R * ops), not
     per-remote ops — a fixed multiple of ``ops`` strands wide runs with
-    ``completed=False``.  Steps on a drained engine are no-ops, so the
-    generous tail only costs device time."""
+    ``completed=False``.  (Issue width can only bring retirement EARLIER,
+    so the width-1 budget is safe at every width; steps on a drained
+    engine are no-ops, so the generous tail only costs device time.)"""
     return 2 * ops * n_remotes + 12 * ops + 64
 
 
@@ -73,13 +90,17 @@ class StreamRun(NamedTuple):
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_stream(moesi: bool, collect_trace: bool):
-    """One fused streaming program per (mode, trace?) pair, shared across
-    engines; shapes (R, L, T, total steps) retrace inside jit's cache."""
+def _jitted_stream(moesi: bool, collect_trace: bool, width: int):
+    """One fused streaming program per (mode, trace?, width) triple, shared
+    across engines; shapes (R, L, T, total steps) retrace inside jit's
+    cache.  The engine state is donated — the streaming scan is the hot
+    path, and per-step reallocation of the ``[R, L]`` slabs is pure
+    overhead."""
     tables = FULL if moesi else MINIMAL
     tables_mn = MN_FULL if moesi else MN_MINIMAL
     step_fn = functools.partial(step_mn, tables, tables_mn)
     nop_op = jnp.int8(int(LocalOp.NOP))
+    W = width
 
     def run(st, wl_op, wl_line, wl_value, tsteps, delays, credits):
         R, L = st.hreq_pending.shape
@@ -87,26 +108,39 @@ def _jitted_stream(moesi: bool, collect_trace: bool):
         T = wl_op.shape[0]
         dt = st.dir.backing.dtype
         ar = jnp.arange(R)
+        wr = jnp.arange(W)
         zb = jnp.zeros((L,), bool)
         zwv = jnp.zeros((L, B), dt)
 
         def body(c, t):
-            # ---- fetch each remote's head-of-stream op ------------------
-            cur = jnp.minimum(c.cursor, T - 1)
-            active = c.cursor < T
-            h_op = wl_op[cur, ar]
-            h_line = wl_line[cur, ar]
-            h_val = wl_value[cur, ar].astype(dt)
-            is_nop = h_op == nop_op
-            # one MSHR per (remote, line): hold the head op while the same
-            # remote still has a transaction in flight on its target line
-            # (also keeps retire/accept from colliding on one slot/step).
-            line_busy = c.outstanding[ar, h_line]
-            issue = active & ~is_nop & ~line_busy
-            opd = jnp.zeros((R, L), jnp.int8).at[ar, h_line].set(
-                jnp.where(issue, h_op, nop_op))
-            vald = jnp.zeros((R, L, B), dt).at[ar, h_line].set(
-                jnp.where(issue, h_val, 0)[:, None])
+            # ---- fetch each remote's issue window -----------------------
+            idx = c.cursor[:, None] + wr[None, :]            # [R, W]
+            active = idx < T
+            idxc = jnp.minimum(idx, T - 1)
+            s_op = wl_op[idxc, ar[:, None]]                  # [R, W]
+            s_line = wl_line[idxc, ar[:, None]]
+            s_val = wl_value[idxc, ar[:, None]].astype(dt)
+            is_nop = s_op == nop_op
+            pending = active & ~c.issued
+            real = pending & ~is_nop
+            # one MSHR per (remote, line): a slot is serialized in-queue
+            # behind an EARLIER un-issued slot on the same line, and held
+            # while the remote still has a transaction in flight there.
+            same = s_line[:, :, None] == s_line[:, None, :]  # [R, Wk, Wj]
+            earlier = wr[None, :] < wr[:, None]              # [Wk, Wj] j<k
+            conflict = (real[:, None, :] & same &
+                        earlier[None]).any(-1)               # [R, W]
+            line_busy = c.outstanding[ar[:, None], s_line]
+            can = real & ~conflict & ~line_busy
+            # scatter the issuable slots into the dense [R, L] op plane —
+            # additive scatter: at most one slot per (remote, line)
+            # contributes a non-zero, the rest add NOP/zero.
+            opd = jnp.zeros((R, L), jnp.int8).at[ar[:, None], s_line].add(
+                jnp.where(can, s_op, nop_op))
+            vald = jnp.zeros((R, L, B), dt).at[ar[:, None], s_line].add(
+                jnp.where(can, s_val, 0)[:, :, None])
+            born_d = jnp.zeros((R, L), jnp.int32).at[
+                ar[:, None], s_line].add(jnp.where(can, c.slot_born, 0))
 
             # ---- one engine step under sustained traffic ----------------
             st2, out = step_fn(c.st, opd, vald, zb, zb, zwv, delays,
@@ -115,7 +149,7 @@ def _jitted_stream(moesi: bool, collect_trace: bool):
             # ---- adopt newly accepted ops, detect retirements -----------
             newly = out.accepted                       # [R, L]
             outstanding = c.outstanding | newly
-            born = jnp.where(newly, c.head_born[:, None], c.born)
+            born = jnp.where(newly, born_d, c.born)
             out_op = jnp.where(newly, opd, c.out_op)
             out_val = jnp.where(newly, vald[:, :, 0], c.out_val)
             # retired once the MSHR is clear again: hits the same step,
@@ -125,15 +159,24 @@ def _jitted_stream(moesi: bool, collect_trace: bool):
             retired = outstanding & mshr_free
             outstanding = outstanding & ~retired
 
-            # ---- advance the per-remote stream cursors ------------------
-            head_accept = newly[ar, h_line] & issue
-            advance = head_accept | (active & is_nop)
-            cursor = c.cursor + advance
-            head_born = jnp.where(advance, t + 1, c.head_born)
+            # ---- slide each window past its issued prefix ---------------
+            slot_acc = can & newly[ar[:, None], s_line]      # [R, W]
+            issued = c.issued | slot_acc | (pending & is_nop)
+            shift = jnp.cumprod(issued.astype(jnp.int32), axis=1).sum(1)
+            cursor = c.cursor + shift
+            k2 = wr[None, :] + shift[:, None]                # [R, W]
+            in_w = k2 < W
+            k2c = jnp.minimum(k2, W - 1)
+            issued2 = jnp.where(in_w,
+                                jnp.take_along_axis(issued, k2c, axis=1),
+                                False)
+            slot_born = jnp.where(
+                in_w, jnp.take_along_axis(c.slot_born, k2c, axis=1), t + 1)
 
             # ---- hardware-style counters fold through the carry ---------
             lat = t - born
-            head_wait = jnp.where(active & ~advance, t - c.head_born, 0)
+            waiting = active & ~issued                       # [R, W]
+            head_wait = jnp.where(waiting, t - c.slot_born, 0).max(axis=1)
             # active = stream unconsumed or engine non-quiescent: the
             # denominator for sustained rates (the scan's generous drain
             # tail runs idle steps that must not dilute throughput).
@@ -148,7 +191,8 @@ def _jitted_stream(moesi: bool, collect_trace: bool):
                 ys = (retired,
                       jnp.where(retired, out_op, nop_op),
                       jnp.where(retired, out_val, 0))
-            c2 = _Carry(st=st2, cursor=cursor, head_born=head_born,
+            c2 = _Carry(st=st2, cursor=cursor, issued=issued2,
+                        slot_born=slot_born,
                         outstanding=outstanding, born=born, out_op=out_op,
                         out_val=out_val, ctr=ctr)
             return c2, ys
@@ -156,7 +200,8 @@ def _jitted_stream(moesi: bool, collect_trace: bool):
         carry0 = _Carry(
             st=st,
             cursor=jnp.zeros((R,), jnp.int32),
-            head_born=jnp.zeros((R,), jnp.int32),
+            issued=jnp.zeros((R, W), bool),
+            slot_born=jnp.zeros((R, W), jnp.int32),
             outstanding=jnp.zeros((R, L), bool),
             born=jnp.zeros((R, L), jnp.int32),
             out_op=jnp.zeros((R, L), jnp.int8),
@@ -168,12 +213,12 @@ def _jitted_stream(moesi: bool, collect_trace: bool):
             ~carry.outstanding.any() & ~busy_flag_mn(carry.st)
         return carry, trace, completed
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=0)
 
 
 def run_stream(engine: EngineMN, wl: Workload, steps: int,
                st: Optional[EngineMNState] = None,
-               collect_trace: bool = False) -> StreamRun:
+               collect_trace: bool = False, width: int = 1) -> StreamRun:
     """Drive ``wl`` through ``engine`` for ``steps`` fused engine steps.
 
     ``steps`` must cover the stream length PLUS the drain tail (steps on a
@@ -181,11 +226,17 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
     time); ``completed`` reports whether everything retired.  With
     ``collect_trace`` the per-step retirement linearization is returned
     for oracle replay (tests/validation — leave it off in benchmarks).
+
+    ``width`` is the per-remote ISSUE WIDTH: up to ``width`` new ops may
+    enter flight per remote per step (same-line window slots serialize
+    in-queue; see the module docstring).  The passed-in state is consumed
+    (donated to the fused program) — use the returned ``state``.
     """
+    assert width >= 1, width
     st0 = engine.init() if st is None else st
     base_msgs = np.asarray(st0.msg_count, np.int64)
     base_payload = int(st0.payload_msgs)
-    fn = _jitted_stream(engine.moesi, collect_trace)
+    fn = _jitted_stream(engine.moesi, collect_trace, int(width))
     carry, trace, completed = fn(st0, wl.op, wl.line, wl.value,
                                  jnp.arange(steps, dtype=jnp.int32),
                                  engine.delays, engine.credits)

@@ -7,9 +7,11 @@
 ``--smoke`` runs EVERY workload generator at a small size with full
 oracle validation (counter exactness + completion), plus one WIDE case
 (zipfian at 8 remotes) so the scaled flat-[R, L] engine path stays
-exercised — the CI keep-green path for the subsystem.  Without it, one
-workload is driven at the requested size and its counter summary printed
-as JSON.  ``--remotes`` accepts up to 64 (the EWF v2 node-id ceiling).
+exercised and one W=2 case covering the multi-op issue window — the CI
+keep-green path for the subsystem.  Without it, one workload is driven at
+the requested size and its counter summary printed as JSON.  ``--remotes``
+accepts up to 64 (the EWF v2 node-id ceiling); ``--width`` sets the
+per-remote issue width.
 """
 from __future__ import annotations
 
@@ -28,20 +30,22 @@ def _build(n_lines: int, n_remotes: int, moesi: bool, block: int = 2):
 
 
 def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
-          steps: int, seed: int, moesi: bool, validate: bool):
+          steps: int, seed: int, moesi: bool, validate: bool,
+          width: int = 1):
     from repro.traffic import (WORKLOADS, run_stream, summarize,
                                validate_run)
     eng = _build(n_lines, n_remotes, moesi)
     wl = WORKLOADS[workload](jax.random.key(seed), ops, n_remotes, n_lines)
     t0 = time.perf_counter()
-    run = run_stream(eng, wl, steps=steps, collect_trace=validate)
+    run = run_stream(eng, wl, steps=steps, collect_trace=validate,
+                     width=width)
     wall = time.perf_counter() - t0
     if validate:
         validate_run(run, moesi)
     out = summarize(run.counters, run.msg_count, run.payload_msgs)
     out.update(workload=workload, n_remotes=n_remotes, n_lines=n_lines,
                completed=run.completed, wall_s=round(wall, 3),
-               validated=bool(validate))
+               validated=bool(validate), width=width)
     return out
 
 
@@ -49,21 +53,25 @@ def smoke() -> int:
     """Small-size full-taxonomy run with oracle validation; exit status.
 
     Includes one WIDE case (zipfian, 8 remotes) so the flat-[R, L] engine
-    path past the old 4-remote ceiling stays covered by CI."""
+    path past the old 4-remote ceiling stays covered by CI, and one W=2
+    case keeping the multi-op issue window on the keep-green path."""
     from repro.traffic import WORKLOADS
-    cases = [(name, 2, 220) for name in WORKLOADS]
-    cases.append(("zipfian", 8, 900))
+    cases = [(name, 2, 220, 1) for name in WORKLOADS]
+    cases.append(("zipfian", 8, 900, 1))
+    cases.append(("zipfian", 4, 500, 2))
     failures = 0
-    for name, n_remotes, steps in cases:
+    for name, n_remotes, steps, width in cases:
         try:
             out = drive(name, n_remotes=n_remotes, n_lines=12, ops=20,
-                        steps=steps, seed=7, moesi=True, validate=True)
-            print(f"smoke {name} r{n_remotes}: OK ops={out['ops_retired']} "
+                        steps=steps, seed=7, moesi=True, validate=True,
+                        width=width)
+            print(f"smoke {name} r{n_remotes} w{width}: OK "
+                  f"ops={out['ops_retired']} "
                   f"max_wait={max(out['max_wait'])} "
                   f"msgs={sum(out['messages'].values())}")
         except AssertionError as e:
             failures += 1
-            print(f"smoke {name} r{n_remotes}: FAIL {e}")
+            print(f"smoke {name} r{n_remotes} w{width}: FAIL {e}")
     print("smoke:", "PASS" if not failures else f"{failures} FAILURES")
     return 1 if failures else 0
 
@@ -81,6 +89,9 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=0,
                     help="engine-step budget (default: scales with "
                          "remotes*ops, see traffic.default_steps)")
+    ap.add_argument("--width", type=int, default=1,
+                    help="per-remote issue width: up to W new ops in "
+                         "flight per remote per step (default 1)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesi", action="store_true",
                     help="run the MESI subset instead of MOESI")
@@ -95,12 +106,14 @@ def main() -> None:
     if not 1 <= args.remotes <= MAX_REMOTES:
         ap.error(f"--remotes must be in 1..{MAX_REMOTES} "
                  f"(EWF v2 node-id field)")
+    if args.width < 1:
+        ap.error("--width must be >= 1")
     if args.smoke:
         raise SystemExit(smoke())
     from repro.traffic import default_steps
     steps = args.steps or default_steps(args.ops, args.remotes)
     out = drive(args.workload, args.remotes, args.lines, args.ops, steps,
-                args.seed, not args.mesi, args.validate)
+                args.seed, not args.mesi, args.validate, width=args.width)
     print(json.dumps(out, indent=1, default=str))
     if not out["completed"]:
         raise SystemExit("stream did not drain within --steps")

@@ -14,7 +14,8 @@ import pytest
 from repro.core.engine_mn import EngineMN
 from repro.core.protocol import LocalOp
 from repro.core.states import HomeState as H
-from repro.traffic import (WORKLOADS, run_stream, summarize, validate_run)
+from repro.traffic import (WORKLOADS, Workload, run_stream, summarize,
+                           validate_run)
 
 BLOCK = 2
 R, L, T, STEPS = 3, 12, 24, 360
@@ -186,3 +187,139 @@ def test_streaming_counters_match_oracle_n4_long(name):
     run = run_stream(eng, wl, steps=2400, collect_trace=True)
     ref = validate_run(run, moesi=True)
     _assert_state_bisimilar(run.state, ref, 4, 24)
+
+
+# ---------------------------------------------------------------------------
+# Issue width W > 1: multi-op issue with one MSHR per (remote, line).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("width", [2, 4])
+def test_stream_width_matches_oracle(width):
+    """THE width acceptance criterion: retirement-order replay against
+    ``MultiNodeRef`` stays EXACT at W in {2, 4} — multi-op issue reorders
+    only independent lines, never per-line program order."""
+    eng = _engine()
+    wl = WORKLOADS["zipfian"](jax.random.key(11), T, R, L)
+    run = run_stream(eng, wl, steps=STEPS, collect_trace=True, width=width)
+    ref = validate_run(run, moesi=True)
+    _assert_state_bisimilar(run.state, ref, R, L)
+    assert int(run.state.dir.illegal) == 0
+    assert int(np.asarray(run.state.agents.illegal).sum()) == 0
+
+
+def test_stream_width_same_line_slots_serialized():
+    """Two consecutive same-line ops from one remote in one W=2 window:
+    the second slot must wait for the first's MSHR (one per (remote,
+    line)), preserving per-line program order — the final line value is
+    the SECOND store's."""
+    n_remotes, n_lines, t = 2, 4, 6
+    op = np.zeros((t, n_remotes), np.int8)
+    line = np.zeros((t, n_remotes), np.int32)
+    val = np.zeros((t, n_remotes), np.float32)
+    # remote 0: back-to-back stores to line 1, then a load of it.
+    op[0, 0], line[0, 0], val[0, 0] = int(LocalOp.STORE), 1, 10.0
+    op[1, 0], line[1, 0], val[1, 0] = int(LocalOp.STORE), 1, 20.0
+    op[2, 0], line[2, 0] = int(LocalOp.LOAD), 1
+    # remote 1 streams an independent line so the run is not trivially
+    # serial.
+    for i in range(t):
+        op[i, 1], line[i, 1], val[i, 1] = int(LocalOp.STORE), 3, 30.0 + i
+    wl = Workload(jnp.asarray(op), jnp.asarray(line), jnp.asarray(val))
+    eng = _engine(n_remotes=n_remotes, n_lines=n_lines)
+    run = run_stream(eng, wl, steps=200, collect_trace=True, width=2)
+    ref = validate_run(run, moesi=True)
+    _assert_state_bisimilar(run.state, ref, n_remotes, n_lines)
+    assert float(np.asarray(run.state.agents.cache)[0, 1, 0]) == 20.0
+
+
+def test_stream_width_backpressure_credit_exhaustion():
+    """W=4 against single-credit VCs: every window slot beyond the credit
+    stalls (never drops) and the run still completes and validates."""
+    eng = EngineMN(jnp.zeros((L, BLOCK), jnp.float32), n_remotes=R,
+                   credits=np.asarray([1] * 10, np.int32))
+    wl = WORKLOADS["zipfian"](jax.random.key(5), T, R, L)
+    run = run_stream(eng, wl, steps=4 * STEPS, collect_trace=True, width=4)
+    ref = validate_run(run, moesi=True)
+    _assert_state_bisimilar(run.state, ref, R, L)
+
+
+def test_stream_width_counter_exactness_under_races_w4():
+    """Counter exactness (validate_run) at W=4 where it is hardest:
+    contended same-line stores exercising the NACK-retry identity."""
+    eng = _engine(n_remotes=4, n_lines=16)
+    wl = WORKLOADS["false_sharing"](jax.random.key(3), 60, 4, 16)
+    run = run_stream(eng, wl, steps=1400, collect_trace=True, width=4)
+    validate_run(run, moesi=True)
+    assert int(run.msg_count[11]) > 0      # RESP_NACK: races happened
+
+
+def test_stream_width_increases_overlap():
+    """The point of issue width: W=4 must sustain strictly more MSHR
+    occupancy (transactions in flight) than W=1 on an overlap-friendly
+    stream, with every op still retiring."""
+    runs = {}
+    for width in (1, 4):
+        eng = _engine(n_remotes=2, n_lines=16)
+        wl = WORKLOADS["strided"](jax.random.key(7), 48, 2, 16)
+        run = run_stream(eng, wl, steps=1200, width=width)
+        assert run.completed
+        runs[width] = summarize(run.counters, run.msg_count)
+    assert runs[4]["peak_mshr_occupancy"] > runs[1]["peak_mshr_occupancy"], \
+        {w: s["peak_mshr_occupancy"] for w, s in runs.items()}
+    assert runs[4]["ops_retired"] == runs[1]["ops_retired"]
+
+
+# ---------------------------------------------------------------------------
+# Home-side arbitration: bounded wait for want_read/want_write under
+# sustained streaming (pre-fix: the home waited for the line to drain,
+# which under a continuous stream is NEVER — unbounded starvation).
+# ---------------------------------------------------------------------------
+
+#: generous bound: a home access wins the rotating arbitration within R
+#: grants of becoming ready (~R x txn latency steps); measured ~30 at R=4.
+HOME_WAIT_BOUND = 150
+
+
+def _stream_with_home_access(want_kind: str, n_remotes=4, inject_at=30,
+                             budget=300):
+    """Python-driven sustained same-line stores from every remote, with a
+    home access injected mid-stream; returns the step it retired (or
+    None).  The engine keeps the line perpetually busy — the pre-fix
+    ``~busy`` gate never opened."""
+    n_lines = 2
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes)
+    st = eng.init()
+    op = jnp.zeros((n_remotes, n_lines), jnp.int8).at[:, 0].set(
+        int(LocalOp.STORE))
+    val = jnp.ones((n_remotes, n_lines, BLOCK), jnp.float32)
+    wv = jnp.full((n_lines, BLOCK), 99.0, jnp.float32)
+    for t in range(budget):
+        wr = jnp.zeros((n_lines,), bool)
+        ww = jnp.zeros((n_lines,), bool)
+        if t == inject_at:
+            if want_kind == "read":
+                wr = wr.at[0].set(True)
+            else:
+                ww = ww.at[0].set(True)
+        st, out = eng.step(st, op=op, op_val=val, want_read=wr,
+                           want_write=ww, wval=wv)
+        if want_kind == "read" and bool(out.hread_done[0]):
+            return t
+        if want_kind == "write" and not bool(st.want_write[0]) \
+                and t >= inject_at:
+            return t
+    return None
+
+
+def test_home_read_bounded_wait_under_streaming():
+    done_at = _stream_with_home_access("read")
+    assert done_at is not None, "home read starved under sustained stores"
+    assert done_at - 30 <= HOME_WAIT_BOUND, done_at
+
+
+def test_home_write_bounded_wait_under_streaming():
+    done_at = _stream_with_home_access("write")
+    assert done_at is not None, "home write starved under sustained stores"
+    assert done_at - 30 <= HOME_WAIT_BOUND, done_at
