@@ -37,12 +37,14 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-#: (n_remotes, n_lines, ops, width) per streaming smoke config — small
-#: enough for a CI job, wide enough (R=8, R=32) to exercise the
-#: past-4-remotes flat layout, and one W=2 config covering the multi-op
-#: issue window.
-STREAM_CONFIGS = ((2, 16, 32, 1), (8, 16, 32, 1), (32, 16, 32, 1),
-                  (8, 16, 32, 2))
+#: (workload, n_remotes, n_lines, ops, width) per streaming smoke config —
+#: small enough for a CI job, wide enough (R=8, R=32) to exercise the
+#: past-4-remotes flat layout, one W=2 config covering the multi-op issue
+#: window, and one NON-zipfian traffic shape (producer_consumer: steady-
+#: state dirty forwarding) so the gate covers more than hot-line skew.
+STREAM_CONFIGS = (("zipfian", 2, 16, 32, 1), ("zipfian", 8, 16, 32, 1),
+                  ("zipfian", 32, 16, 32, 1), ("zipfian", 8, 16, 32, 2),
+                  ("producer_consumer", 8, 16, 32, 1))
 FANOUT_REMOTES = (2, 8)
 
 #: the wall-clock harness config: THE acceptance stream of the hot-path
@@ -89,10 +91,10 @@ def run_streaming() -> dict:
     from repro.core.engine_mn import EngineMN
 
     out = {}
-    for n_remotes, n_lines, ops, width in STREAM_CONFIGS:
+    for workload, n_remotes, n_lines, ops, width in STREAM_CONFIGS:
         eng = EngineMN(jnp.zeros((n_lines, 2), jnp.float32),
                        n_remotes=n_remotes)
-        wl = WORKLOADS["zipfian"](jax.random.key(0), ops, n_remotes, n_lines)
+        wl = WORKLOADS[workload](jax.random.key(0), ops, n_remotes, n_lines)
         steps = default_steps(ops, n_remotes)
         t0 = time.perf_counter()
         run = run_stream(eng, wl, steps=steps, width=width)  # compile + run
@@ -101,7 +103,11 @@ def run_streaming() -> dict:
         run = run_stream(eng, wl, steps=steps, width=width)
         wall = time.perf_counter() - t0
         s = summarize(run.counters, run.msg_count)
+        # zipfian keys keep their historical names so the committed
+        # baseline and the cross-PR trajectory stay comparable.
         key = f"r{n_remotes}" if width == 1 else f"r{n_remotes}_w{width}"
+        if workload != "zipfian":
+            key = f"{workload}_{key}"
         out[key] = {
             "completed": bool(run.completed),
             "ops_per_step": round(float(s["ops_per_step"]), 6),

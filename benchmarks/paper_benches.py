@@ -369,12 +369,13 @@ def bench_issue_width(remotes=ISSUE_WIDTH_REMOTES, widths=ISSUE_WIDTHS,
 
 
 # ---------------------------------------------------------------------------
-# §3.4 specialization: protocol-size table
+# §3.4 specialization: protocol-size table (2-node + N-remote)
 # ---------------------------------------------------------------------------
 
 
 def bench_protocol_size() -> List[Row]:
     from repro.core import SUBSETS, subset_metrics
+    from repro.core.specialize import subset_metrics_mn
     rows: List[Row] = []
     for name, s in SUBSETS.items():
         m = subset_metrics(s)
@@ -383,9 +384,148 @@ def bench_protocol_size() -> List[Row]:
                      f"remote_msgs={m['remote_msg_types']} "
                      f"home_msgs={m['home_msg_types']} "
                      f"home_state={m['home_tracks_state']}"))
+    # the N-remote port of the table: quiescent joint states of the atomic
+    # N-node semantics up to remote permutation symmetry (explicit-state
+    # model checking under the subset's guarantee).  READ_ONLY's sharer
+    # vector is a presence bitmap -> n+1 states; STATELESS stays at ONE
+    # for any N — the §3.4 collapse survives scaling.
+    for name, s in SUBSETS.items():
+        counts = {n: subset_metrics_mn(s, n)["joint_states_mn"]
+                  for n in (2, 4, 8, 64)}
+        rows.append((f"spec_mn/{name}", 0.0,
+                     " ".join(f"n{n}={c}" for n, c in counts.items())
+                     + (" (presence bitmap)" if name == "read_only" else
+                        " (no home state)" if name == "stateless" else
+                        " (full sharer vector)")))
     return rows
 
 
-ALL = [bench_protocol_size, bench_interconnect, bench_fanout,
-       bench_streaming, bench_issue_width, bench_select,
+# ---------------------------------------------------------------------------
+# §3.4 subsetting payoff: messages/op across the lattice (decode fleet)
+# ---------------------------------------------------------------------------
+
+#: the wide-R ladder of the subset messages/op curve.
+SUBSET_BENCH_REMOTES = (8, 32, 64)
+
+
+def bench_subsets(remotes=SUBSET_BENCH_REMOTES, n_lines: int = 16,
+                  block: int = 4, rounds: int = 36,
+                  publish_every: int = 3) -> List[Row]:
+    """Messages per retired op across the §3.4 lattice on the read-mostly
+    decode-fleet workload: a fleet of decode replicas re-reads zipfian-hot
+    records while a publisher refreshes the hottest record every
+    ``publish_every`` rounds.
+
+    The SAME application trace maps differently per subset — which is the
+    paper's customization argument verbatim: under FULL_MOESI (and
+    ENHANCED_MESI) the publisher is a dedicated writer REMOTE (the
+    general-purpose path: the replica slot R-1 becomes the updater),
+    while READ_ONLY moves publishing to the HOME — the smart-memory-
+    controller model of §5, and exactly what the subset's guarantee
+    makes sound.  The fleet of R-1 READERS issues the identical zipfian
+    read schedule in every leg, and accounting starts after a warm-up
+    read round, so the steady-state publish/invalidate/re-read cycle is
+    what is measured.  Per cycle the home publisher saves the upgrade
+    request/response pair AND leaves the republished line CLEAN at home,
+    so no dirty-owner recall precedes the first re-read — a fixed
+    ~4-message saving per publish on top of the (subset-independent)
+    invalidation fan-out.  The assert at the bottom is the acceptance
+    criterion: READ_ONLY cuts messages/op vs FULL at every R."""
+    import numpy as np
+    from repro.core.engine_mn import EngineMN
+    from repro.core.protocol import (ENHANCED_MESI, FULL_MOESI, LocalOp,
+                                     READ_ONLY)
+    from repro.traffic import WORKLOADS
+
+    def drain(eng, st, opv, vv):
+        st, _, _, _, busy = eng.run_ops(st, jnp.asarray(opv), vv, 512)
+        assert not bool(busy), "subset bench round did not retire"
+        return st
+
+    def home_publish(eng, st, line, value):
+        L, B = eng.n_lines, eng.block
+        want = jnp.zeros((L,), bool).at[line].set(True)
+        wv = jnp.zeros((L, B), jnp.float32).at[line].set(float(value))
+        st, _ = eng.step(st, want_write=want, wval=wv)
+        for _ in range(256):
+            if eng.quiescent(st):
+                return st
+            st, _ = eng.step(st)
+        raise AssertionError("home publish did not retire")
+
+    rows: List[Row] = []
+    for n_remotes in remotes:
+        n_readers = n_remotes - 1          # slot R-1 is the FULL-leg writer
+        wl = WORKLOADS["zipfian"](jax.random.key(3), rounds, n_readers,
+                                  n_lines, store_frac=0.0)
+        lines = np.asarray(wl.line)                      # [rounds, R-1]
+        hot = int(np.bincount(lines.ravel(), minlength=n_lines).argmax())
+        ar = np.arange(n_readers)
+        per_subset = {}
+        for subset in (FULL_MOESI, ENHANCED_MESI, READ_ONLY):
+            eng = EngineMN(jnp.zeros((n_lines, block), jnp.float32),
+                           n_remotes=n_remotes, subset=subset)
+            st = eng.init()
+            zvv = jnp.zeros((n_remotes, n_lines, block), jnp.float32)
+
+            def read_round(st, t):
+                opv = np.zeros((n_remotes, n_lines), np.int8)
+                opv[ar, lines[t]] = int(LocalOp.LOAD)
+                return drain(eng, st, opv, zvv)
+
+            def publish(st, value):
+                if subset is READ_ONLY:
+                    return home_publish(eng, st, hot, value)
+                opv = np.zeros((n_remotes, n_lines), np.int8)
+                opv[n_remotes - 1, hot] = int(LocalOp.STORE)
+                return drain(eng, st, opv,
+                             zvv.at[n_remotes - 1, hot].set(float(value)))
+
+            # warm-up: every reader touches its whole schedule's line set
+            # once, and one publish primes the writer/home — cold compulsory
+            # misses are identical across subsets and must not dilute the
+            # steady-state comparison.
+            for t in range(rounds):
+                st = read_round(st, t)
+            st = publish(st, 1)
+            base_msgs = int(np.asarray(st.msg_count).sum())
+
+            ops = 0
+            t0 = time.perf_counter()
+            for t in range(rounds):
+                if t % publish_every == 0:
+                    st = publish(st, t + 2)
+                    ops += 1
+                st = read_round(st, t)
+                ops += n_readers
+            dt = time.perf_counter() - t0
+            msgs = int(np.asarray(st.msg_count).sum()) - base_msgs
+            per_subset[subset.name] = msgs / ops
+            rows.append((f"subsets/{subset.name}_r{n_remotes}",
+                         dt * 1e6 / ops,
+                         f"{msgs / ops:.3f} msgs/op over {ops} ops "
+                         f"({msgs} msgs steady-state); publisher="
+                         f"{'home' if subset is READ_ONLY else 'remote'}"))
+        # the acceptance criterion IS the figure — check it.
+        assert per_subset["read_only"] < per_subset["full_moesi"], \
+            per_subset
+        rows.append((f"subsets/reduction_r{n_remotes}", 0.0,
+                     f"READ_ONLY {per_subset['read_only']:.3f} vs FULL "
+                     f"{per_subset['full_moesi']:.3f} msgs/op = "
+                     f"{per_subset['full_moesi'] / per_subset['read_only']:.2f}x"
+                     " cut on the same decode-fleet trace"))
+    rows.append(("subsets/model", 0.0,
+                 "READ_ONLY saves the upgrade REQ/RESP pair per publish "
+                 "plus the dirty-owner recall before the first re-read "
+                 "(~4 msgs/publish); the invalidation fan-out itself is "
+                 "subset-independent and grows with the sharer count, so "
+                 "the RELATIVE cut is largest at moderate R and the "
+                 "ABSOLUTE saving is constant per publish — the deeper "
+                 "§3.4 payoff at scale is the state collapse "
+                 "(spec_mn rows: full vector -> presence bitmap -> none)"))
+    return rows
+
+
+ALL = [bench_protocol_size, bench_subsets, bench_interconnect,
+       bench_fanout, bench_streaming, bench_issue_width, bench_select,
        bench_pointer_chase, bench_regex, bench_locality]

@@ -62,12 +62,12 @@ class CoherentStore:
             self.engine = Engine(backing, moesi=subset.tables.moesi,
                                  stateless=subset.stateless_home)
         else:
-            if subset.stateless_home:
-                raise ValueError(
-                    "the stateless home tracks no sharers, so it cannot "
-                    "keep multiple remotes coherent (use n_remotes=1)")
-            self.engine = EngineMN(backing, n_remotes,
-                                   moesi=subset.tables.moesi)
+            # the protocol-parametric N-remote engine runs EVERY lattice
+            # member, stateless included: the home then keeps no sharer
+            # vector, which is sound because the subset's guarantee (no
+            # stores, and home writes only to uncached lines — see
+            # ``home_write``) means there is never anything to invalidate.
+            self.engine = EngineMN(backing, n_remotes, subset=subset)
         self.state = self.engine.init()
         self.n_blocks, self.block = backing.shape
         self.operator = operator
@@ -132,7 +132,11 @@ class CoherentStore:
         remote acts per line per call through the public API)."""
         B = self.block
         opv = jnp.asarray(opv, jnp.int8)
-        if not self.subset.check_workload(np.asarray(opv).ravel()):
+        # one vectorized pass over the whole ([L] or [R, L]) op plane; with
+        # several remotes the check also rejects ops outside the N-remote
+        # envelope (DEMOTE) instead of letting the engine drop them.
+        if not self.subset.check_workload(np.asarray(opv),
+                                          n_remotes=self.n_remotes):
             raise ValueError(
                 f"op program outside subset '{self.subset.name}' guarantee")
         vv = val if val is not None else jnp.zeros(
@@ -207,8 +211,18 @@ class CoherentStore:
         return vals[jnp.asarray(block_ids)]
 
     def home_write(self, block_ids, values: jnp.ndarray) -> None:
-        """Home-side write (invalidates consumer copies first)."""
+        """Home-side write (invalidates consumer copies first).
+
+        A STATELESS home tracks no sharers and therefore cannot
+        invalidate: writing a line some consumer caches would be silent
+        incoherence, so it is rejected here (the operator path never
+        trips this — ``_materialize`` only writes uncached lines)."""
         block_ids = np.atleast_1d(np.asarray(block_ids))
+        if self.subset.stateless_home and \
+                self._cached_lines()[block_ids].any():
+            raise ValueError(
+                "stateless home cannot invalidate consumer-cached "
+                "lines; evict them first or use a stateful subset")
         want = jnp.zeros((self.n_blocks,), bool)
         want = want.at[jnp.asarray(block_ids)].set(True)
         vv = jnp.zeros((self.n_blocks, self.block),
@@ -237,9 +251,7 @@ class CoherentStore:
         ``home_read`` recalls a dirty home copy invisibly, ``home_write``
         installs the result — so a stale ``backing`` is never read or
         clobbered."""
-        from .states import RemoteState
-        agent = np.asarray(self._agent_states()) != int(RemoteState.I)
-        cached = agent if self.n_remotes == 1 else agent.any(axis=0)
+        cached = self._cached_lines()
         todo = [int(b) for b in block_ids
                 if not cached[b] and not self._materialized[b]]
         if not todo:
@@ -252,6 +264,12 @@ class CoherentStore:
     def _agent_states(self):
         return (self.state.agent.remote_state if self.n_remotes == 1
                 else self.state.agents.remote_state)
+
+    def _cached_lines(self) -> np.ndarray:
+        """[L] bool — lines held (in any state above I) by ANY consumer."""
+        from .states import RemoteState
+        agent = np.asarray(self._agent_states()) != int(RemoteState.I)
+        return agent if self.n_remotes == 1 else agent.any(axis=0)
 
     @property
     def hits(self) -> int:

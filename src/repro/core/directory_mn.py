@@ -73,7 +73,14 @@ def absorb(tables: DenseTablesMN, st: DirectoryMNState,
     View updates commute across remotes; at most one absorb per line can be
     dirty (single-writer invariant), so home-state/data effects reduce over
     R by selecting the unique dirty source.
+
+    A STATELESS home (``tables.stateless_home``) tracks no per-line state:
+    voluntary downgrades are absorbed by doing nothing at all (the subset's
+    workload guarantee — no STOREs — means the payload can never be dirty,
+    so there is nothing to write back either).
     """
+    if tables.stateless_home:
+        return st
     vol_i = int(MnAbsorb.VOL_I)
     rep_s = int(MnAbsorb.REPLY_S)
     rep_i = int(MnAbsorb.REPLY_I)
@@ -167,6 +174,11 @@ def grant(tables: DenseTablesMN, st: DirectoryMNState, active: jnp.ndarray,
     An UPGRADE whose requester view was concurrently invalidated is NACKed
     (the agent falls back to I and reissues READ_EXCL) — the transaction-
     layer race of §3.3, kept rare by per-line serialization.
+
+    A STATELESS home answers READ_SHARED from the at-rest data and records
+    NOTHING: no view write, no home-state transition (the single joint
+    state ``I*`` of §3.4).  Requests outside the subset still count as
+    illegal (the baked ``grant_legal`` mask).
     """
     R, L = st.view.shape
     lines = jnp.arange(L)
@@ -186,12 +198,17 @@ def grant(tables: DenseTablesMN, st: DirectoryMNState, active: jnp.ndarray,
     resp = _jt(tables.grant_resp, m, hs)
     wb = _jt(tables.grant_wb, m, hs)
 
-    backing = jnp.where((do & wb)[:, None], st.home_buf, st.backing)
-    home_state = jnp.where(do, new_home.astype(jnp.int8), st.home_state)
-    new_view = _jt(tables.grant_view, m)
-    onehot = jnp.arange(R)[:, None] == node[None, :]      # [R, L]
-    view = jnp.where(onehot & do[None, :], new_view[None, :].astype(jnp.int8),
-                     st.view)
+    if tables.stateless_home:
+        # single joint state I*: serve the data, record nothing.
+        backing, home_state, view = st.backing, st.home_state, st.view
+    else:
+        backing = jnp.where((do & wb)[:, None], st.home_buf, st.backing)
+        home_state = jnp.where(do, new_home.astype(jnp.int8),
+                               st.home_state)
+        new_view = _jt(tables.grant_view, m)
+        onehot = jnp.arange(R)[:, None] == node[None, :]  # [R, L]
+        view = jnp.where(onehot & do[None, :],
+                         new_view[None, :].astype(jnp.int8), st.view)
 
     resp = jnp.where(do, resp.astype(jnp.int8), jnp.int8(int(MsgType.NOP)))
     resp = jnp.where(is_upgrade_race, jnp.int8(int(MsgType.RESP_NACK)), resp)

@@ -55,8 +55,9 @@ from . import directory_mn as dmn
 from . import transport as tp
 from .engine import _count
 from .messages import MAX_NODE, MsgType
-from .protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL, DenseTables,
-                       DenseTablesMN, LocalOp, MnAbsorb)
+from .protocol import (ENHANCED_MESI, FULL_MOESI, DenseTables,
+                       DenseTablesMN, LocalOp, MnAbsorb, ProtocolSubset,
+                       bake_mn, mn_tables)
 from .states import RemoteView
 
 #: Remote-count ceiling, DERIVED from the EWF node-id field width — widening
@@ -148,9 +149,19 @@ def _pop(ch: tp.Channel, mask: jnp.ndarray) -> tp.Channel:
 def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
             st: EngineMNState, op: jnp.ndarray, op_val: jnp.ndarray,
             want_read: jnp.ndarray, want_write: jnp.ndarray,
-            wval: jnp.ndarray, delays: jnp.ndarray, credits: jnp.ndarray
+            wval: jnp.ndarray, delays: jnp.ndarray, credits: jnp.ndarray,
+            hreq_shared: bool = False
             ) -> Tuple[EngineMNState, StepMNOutput]:
     """One fused engine step over all remotes and lines.
+
+    PROTOCOL-PARAMETRIC: ``tables_mn`` is baked from a ``ProtocolSubset``
+    (``protocol.bake_mn``) — local ops outside the subset are masked to
+    NOP (defense in depth; the public APIs reject them loudly via
+    ``check_workload`` first), requests outside ``remote_may_send`` are
+    illegal at the directory, and a ``stateless_home`` subset's directory
+    records nothing per line.  ``hreq_shared`` switches the home's fan-out
+    submission to SHARED credit accounting (one budget across all R rows
+    instead of per-row pools — the ROADMAP shared-credit link model).
 
     The transport/agent primitives are batch-polymorphic, so the ``[R, L]``
     channel/MSHR slabs are operated on directly — one batched op per phase
@@ -276,7 +287,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     send_h = (needed != nop) & (hreq_pending == nop)
     ch_hreq, acc_h = tp.submit(ch_hreq, tp.CLASS_HOME_REQ, send_h, needed,
                                jnp.zeros((R, L), bool),
-                               jnp.zeros_like(st.ch_hreq.payload), credits)
+                               jnp.zeros_like(st.ch_hreq.payload), credits,
+                               shared=hreq_shared)
     hreq_pending = jnp.where(acc_h, needed, hreq_pending)
 
     # ---- 6. grant parked requests whose preconditions now hold -----------
@@ -348,9 +360,11 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
              (agents.pending_req == nop)
     eff_op = jnp.where(parked, agents.pending_op, op)
     eff_op = jnp.where(locked, jnp.int8(int(LocalOp.NOP)), eff_op)
-    # the N-remote envelope excludes DEMOTE (see module docstring).
-    eff_op = jnp.where(eff_op == int(LocalOp.DEMOTE),
-                       jnp.int8(int(LocalOp.NOP)), eff_op)
+    # mask ops outside the subset's MN envelope (DEMOTE always — see the
+    # module docstring — plus whatever the subset's guarantee excludes;
+    # the public APIs reject such programs loudly BEFORE they get here).
+    op_ok = jnp.asarray(tables_mn.op_ok)[eff_op.astype(jnp.int32)]
+    eff_op = jnp.where(op_ok, eff_op, jnp.int8(int(LocalOp.NOP)))
     # An op that would emit a message stalls until the transport CAN take
     # it (slot + credit) — the dirty-eviction drop guard of
     # engine.stall_unready_ops, with the credit ranking computed ONCE: the
@@ -391,16 +405,16 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_step_mn(moesi: bool):
-    """One compiled step per protocol mode, shared across engine instances
-    (shape changes retrace inside jax.jit's own cache).
+def _jitted_step_mn(subset_name: str, hreq_shared: bool = False):
+    """One compiled step per (protocol subset, credit model), shared across
+    engine instances (shape changes retrace inside jax.jit's own cache).
 
     The incoming state is DONATED: the ``[R, L]`` channel/MSHR/directory
     slabs update in place instead of reallocating every step.  Callers must
     treat a stepped state as consumed (every in-repo driver rebinds)."""
-    tables = FULL if moesi else MINIMAL
-    tables_mn = MN_FULL if moesi else MN_MINIMAL
-    return jax.jit(functools.partial(step_mn, tables, tables_mn),
+    tables_mn = mn_tables(subset_name)
+    return jax.jit(functools.partial(step_mn, tables_mn.base, tables_mn,
+                                     hreq_shared=hreq_shared),
                    donate_argnums=0)
 
 
@@ -418,12 +432,12 @@ def busy_flag_mn(st: EngineMNState) -> jnp.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_run_ops_mn(moesi: bool):
-    """One fused submit-and-drain program per protocol mode, shared across
-    EngineMN instances exactly like ``_jitted_step_mn``."""
-    tables = FULL if moesi else MINIMAL
-    tables_mn = MN_FULL if moesi else MN_MINIMAL
-    step_fn = functools.partial(step_mn, tables, tables_mn)
+def _jitted_run_ops_mn(subset_name: str, hreq_shared: bool = False):
+    """One fused submit-and-drain program per (subset, credit model),
+    shared across EngineMN instances exactly like ``_jitted_step_mn``."""
+    tables_mn = mn_tables(subset_name)
+    step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
+                                hreq_shared=hreq_shared)
 
     def run(st, opv, vv, delays, credits, max_rounds):
         L, B = st.dir.backing.shape
@@ -454,24 +468,42 @@ def _jitted_run_ops_mn(moesi: bool):
 
 
 class EngineMN:
-    """Convenience wrapper binding mode/config and jitting the step."""
+    """Convenience wrapper binding subset/config and jitting the step.
+
+    PROTOCOL-PARAMETRIC (§3.4): pass any ``ProtocolSubset`` — the engine
+    runs the subset's baked tables, masks, and (for STATELESS) the
+    no-per-line-state home.  ``moesi`` is kept as a convenience alias for
+    the two full-protocol members (``moesi=True`` → FULL_MOESI, ``False``
+    → ENHANCED_MESI); an explicit ``subset`` wins.
+
+    ``shared_credits=True`` switches the home-request VC to a shared
+    credit pool across all R rows — the link model under which the R-1
+    invalidation fan-out on one line's VC pair can actually stall (see
+    docs/traffic.md, "Shared-credit link model").
+    """
 
     def __init__(self, backing: jnp.ndarray, n_remotes: int,
                  moesi: bool = True,
                  delays: Optional[np.ndarray] = None,
-                 credits: Optional[np.ndarray] = None):
+                 credits: Optional[np.ndarray] = None,
+                 subset: Optional[ProtocolSubset] = None,
+                 shared_credits: bool = False):
         assert 1 <= n_remotes <= MAX_REMOTES, \
             f"EWF v2 carries 6-bit node ids (n_remotes={n_remotes})"
         self.n_remotes = n_remotes
-        self.moesi = moesi
-        self.tables = FULL if moesi else MINIMAL
-        self.tables_mn = MN_FULL if moesi else MN_MINIMAL
+        if subset is None:
+            subset = FULL_MOESI if moesi else ENHANCED_MESI
+        self.subset = subset
+        self.moesi = subset.tables.moesi
+        self.tables = subset.tables
+        self.tables_mn = bake_mn(subset)
+        self.shared_credits = shared_credits
         self.n_lines, self.block = backing.shape
         self.delays = jnp.asarray(
             delays if delays is not None else tp.DEFAULT_DELAYS)
         self.credits = jnp.asarray(
             credits if credits is not None else tp.DEFAULT_CREDITS)
-        self._step = _jitted_step_mn(moesi)
+        self._step = _jitted_step_mn(subset.name, shared_credits)
         self._backing = backing
 
     def init(self) -> EngineMNState:
@@ -519,6 +551,6 @@ class EngineMN:
         while_loop — see ``Engine.run_ops``.  Returns (state, done[L],
         vals[L,B], rounds, still_busy) with done/vals reduced over the
         remote axis (at most one remote acts per line per call)."""
-        return _jitted_run_ops_mn(self.moesi)(
+        return _jitted_run_ops_mn(self.subset.name, self.shared_credits)(
             st, opv, op_val, self.delays, self.credits,
             jnp.asarray(max_rounds, jnp.int32))

@@ -21,21 +21,38 @@ subset avoids.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from .messages import MAX_NODE, MsgType
+from .protocol import SUBSETS, LocalOp, ProtocolSubset
 from .states import HomeState as H
 from .states import RemoteState as R
 
 
 class MultiNodeRef:
-    """Atomic reference model: 1 home + ``n_remotes`` caching agents."""
+    """Atomic reference model: 1 home + ``n_remotes`` caching agents.
 
-    def __init__(self, n_lines: int, n_remotes: int = 3, moesi: bool = True):
+    SUBSET-AWARE: pass ``subset`` (a ``ProtocolSubset`` or its name) to
+    run the oracle under a §3.4 lattice member.  The oracle then ENFORCES
+    the workload guarantee (ops outside the subset raise — the guarantee
+    is the application's obligation, and a replayed trace that violates it
+    must fail loudly, not silently diverge) and models the specialized
+    home: a ``stateless_home`` subset keeps no per-line state, so
+    home-side writes are only legal while no remote caches the line.
+    The protocol mode (MESI/MOESI) follows the subset's base tables.
+    """
+
+    def __init__(self, n_lines: int, n_remotes: int = 3, moesi: bool = True,
+                 subset: Optional[Union[str, ProtocolSubset]] = None):
         assert 1 <= n_remotes <= MAX_NODE + 1, \
             "EWF v2 carries 6-bit node ids"
         self.n = n_lines
         self.r = n_remotes
+        if subset is not None and isinstance(subset, str):
+            subset = SUBSETS[subset]
+        self.subset = subset
+        if subset is not None:
+            moesi = subset.tables.moesi
         self.moesi = moesi
         self.backing = [0] * n_lines
         self.home_state = [H.I] * n_lines
@@ -110,9 +127,18 @@ class MultiNodeRef:
             sent += 1
         return sent
 
+    def _guard_op(self, op: int) -> None:
+        """Enforce the subset's workload guarantee (requirement 5's other
+        half: the home may drop machinery only because THIS never fires)."""
+        if self.subset is not None and \
+                op not in self.subset.allowed_ops(self.r):
+            raise AssertionError(
+                f"op {op} outside subset '{self.subset.name}' guarantee")
+
     # -- remote-initiated transactions ---------------------------------------
 
     def load(self, node: int, line: int) -> int:
+        self._guard_op(int(LocalOp.LOAD))
         rs = self.remote_state[node][line]
         if rs != R.I:
             return self.remote_cache[node][line]
@@ -136,6 +162,7 @@ class MultiNodeRef:
         return val
 
     def store(self, node: int, line: int, value: int) -> None:
+        self._guard_op(int(LocalOp.STORE))
         rs = self.remote_state[node][line]
         if rs in (R.E, R.M):
             self.remote_state[node][line] = R.M       # silent E->M
@@ -161,6 +188,7 @@ class MultiNodeRef:
         self._check(line)
 
     def evict(self, node: int, line: int) -> None:
+        self._guard_op(int(LocalOp.EVICT))
         rs = self.remote_state[node][line]
         if rs == R.I:
             return
@@ -190,6 +218,16 @@ class MultiNodeRef:
         return val
 
     def home_write(self, line: int, value: int) -> None:
+        if self.subset is not None and self.subset.stateless_home:
+            # a stateless home tracks no sharers, so it cannot invalidate
+            # them — writing while a remote caches the line would be
+            # silent incoherence.  Legal only on uncached lines.
+            assert not self.sharers(line), \
+                "stateless home cannot invalidate cached lines"
+            self.backing[line] = value
+            self._truth[line] = value
+            self._check(line)
+            return
         self._recall_owner(line, to_shared=False)
         self._invalidate_sharers(line, keep=None)
         if self.home_state[line] != H.I:

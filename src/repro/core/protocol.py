@@ -26,7 +26,7 @@ Two concrete instantiations are built:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
@@ -386,6 +386,144 @@ FULL = bake(moesi=True)
 
 
 # ---------------------------------------------------------------------------
+# Protocol subsets (paper §3.4): the customization lattice.
+#
+# ECI's headline feature is that the protocol is *meant to be subsetted* per
+# application.  A subset is a mask over message types and local ops;
+# legality is governed by requirement 5 ("an implementation must support all
+# transitions the partner may signal, unless it can be guaranteed these
+# won't be generated") — so a subset is only sound relative to a *workload
+# guarantee* (e.g. read-only).  The lattice members live HERE (next to the
+# tables they mask) so that ``bake_mn`` below can bake per-subset N-remote
+# tables without a circular import; ``core.specialize`` re-exports them and
+# keeps the model-checking/metrics front-end.
+# ---------------------------------------------------------------------------
+
+
+#: Local ops admitted by the N-remote envelope: DEMOTE (transition 7) is
+#: excluded — the op set of the ``MultiNodeRef`` oracle, a sound subset
+#: under requirement 5 (the workload guarantees no VOL_DOWNGRADE_S is ever
+#: generated, so the MN home need not support it).
+MN_LOCAL_OPS = frozenset({LocalOp.NOP, LocalOp.LOAD, LocalOp.STORE,
+                          LocalOp.EVICT})
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolSubset:
+    """A named subset of the ECI envelope.
+
+    ``name`` doubles as the key of the baked-table / compiled-program
+    caches (``bake_mn``, the engines' jitted steps), so custom subsets must
+    use a name distinct from the built-in lattice members'.
+    """
+
+    name: str
+    tables: DenseTables
+    #: messages the REMOTE may send (requirement 5 for the home side)
+    remote_may_send: FrozenSet[int]
+    #: messages the HOME may send
+    home_may_send: FrozenSet[int]
+    #: local ops the application may issue
+    local_ops: FrozenSet[int]
+    #: the home tracks no per-line state (§3.4 final simplification)
+    stateless_home: bool = False
+
+    def allowed_ops(self, n_remotes: int = 1) -> FrozenSet[int]:
+        """The op codes this subset admits on an ``n_remotes`` engine —
+        one LocalOp encoding feeds both engines; the N-remote envelope
+        additionally excludes DEMOTE (``MN_LOCAL_OPS``)."""
+        ops = frozenset(self.local_ops) | {int(LocalOp.NOP)}
+        if n_remotes > 1:
+            ops = ops & frozenset(int(o) for o in MN_LOCAL_OPS)
+        return ops
+
+    def check_workload(self, ops, n_remotes: int = 1) -> bool:
+        """True iff an op program stays within the subset's guarantee.
+
+        Vectorized — this runs on every public store op and on the traffic
+        driver's whole ``[T, R]`` stream / ``[R, W]`` issue window, so a
+        python per-element loop would tax the very path the benchmarks
+        time.  With ``n_remotes > 1`` the check uses the N-remote op set
+        (DEMOTE programs are REJECTED rather than silently dropped by the
+        engine — the op encoding is shared, the envelopes are not).
+        """
+        allowed = self.allowed_ops(n_remotes)
+        return bool(np.isin(np.asarray(ops),
+                            np.fromiter(allowed, np.int64, len(allowed))
+                            ).all())
+
+
+FULL_MOESI = ProtocolSubset(
+    name="full_moesi",
+    tables=FULL,
+    remote_may_send=frozenset(map(int, (
+        M.REQ_READ_SHARED, M.REQ_READ_EXCL, M.REQ_UPGRADE,
+        M.VOL_DOWNGRADE_S, M.VOL_DOWNGRADE_I,
+        M.RESP_ACK, M.RESP_DATA_DIRTY))),
+    home_may_send=frozenset(map(int, (
+        M.HOME_DOWNGRADE_S, M.HOME_DOWNGRADE_I,
+        M.RESP_DATA, M.RESP_DATA_DIRTY, M.RESP_ACK, M.RESP_NACK))),
+    local_ops=frozenset((LocalOp.LOAD, LocalOp.STORE, LocalOp.EVICT,
+                         LocalOp.DEMOTE)),
+)
+
+ENHANCED_MESI = dataclasses.replace(
+    FULL_MOESI, name="enhanced_mesi", tables=MINIMAL)
+
+READ_ONLY = ProtocolSubset(
+    name="read_only",
+    tables=MINIMAL,
+    # Fig. 1(b) read-only: only transitions 1 (upgrade to shared) and 6
+    # (voluntary downgrade to invalid) remain.
+    remote_may_send=frozenset(map(int, (M.REQ_READ_SHARED,
+                                        M.VOL_DOWNGRADE_I, M.RESP_ACK))),
+    # home keeps only 'downgrade remote to invalid' (evict clean data).
+    home_may_send=frozenset(map(int, (M.HOME_DOWNGRADE_I, M.RESP_DATA,
+                                      M.RESP_NACK))),
+    local_ops=frozenset((LocalOp.LOAD, LocalOp.EVICT)),
+)
+
+STATELESS = ProtocolSubset(
+    name="stateless",
+    tables=MINIMAL,
+    remote_may_send=frozenset(map(int, (M.REQ_READ_SHARED,
+                                        M.VOL_DOWNGRADE_I))),
+    home_may_send=frozenset(map(int, (M.RESP_DATA,))),
+    local_ops=frozenset((LocalOp.LOAD, LocalOp.EVICT)),
+    stateless_home=True,
+)
+
+SUBSETS: Dict[str, ProtocolSubset] = {
+    s.name: s for s in (FULL_MOESI, ENHANCED_MESI, READ_ONLY, STATELESS)
+}
+
+
+def subset_reachable_views(subset: ProtocolSubset) -> FrozenSet[int]:
+    """Remote views reachable under the subset's workload guarantee: S
+    needs LOAD, EM needs STORE.  READ_ONLY/STATELESS collapse the sharer
+    VECTOR to a presence BITMAP (views ∈ {I, S} only) — the §3.4 state
+    reduction, checked per lattice member by ``verify_envelope_mn``."""
+    views = {int(RemoteView.I)}
+    if int(LocalOp.LOAD) in subset.local_ops:
+        views.add(int(RemoteView.S))
+    if int(LocalOp.STORE) in subset.local_ops:
+        views.add(int(RemoteView.S))      # downgrade-to-shared outcomes
+        views.add(int(RemoteView.EM))
+    return frozenset(views)
+
+
+def subset_reachable_remote_states(subset: ProtocolSubset) -> FrozenSet[int]:
+    """Remote stable states reachable under the subset's guarantee."""
+    states = {int(RemoteState.I)}
+    if int(LocalOp.LOAD) in subset.local_ops:
+        states.add(int(RemoteState.S))
+    if int(LocalOp.STORE) in subset.local_ops:
+        states.update((int(RemoteState.S), int(RemoteState.E),
+                       int(RemoteState.M)))
+    return frozenset(states)
+
+
+# ---------------------------------------------------------------------------
 # Envelope verification (§3.3 requirements) — run mechanically over a table.
 # ---------------------------------------------------------------------------
 
@@ -523,10 +661,6 @@ class MnAbsorb:
     N = 3
 
 
-#: Local ops admitted by the N-remote envelope (DEMOTE excluded, see above).
-MN_LOCAL_OPS = frozenset({LocalOp.NOP, LocalOp.LOAD, LocalOp.STORE,
-                          LocalOp.EVICT})
-
 #: Requests the MN remote may send and the requester view each requires.
 MN_REQUEST_VIEW = {
     int(M.REQ_READ_SHARED): int(V.I),
@@ -538,6 +672,12 @@ MN_REQUEST_VIEW = {
 @dataclasses.dataclass(frozen=True)
 class DenseTablesMN:
     """Sharer-vector home tables (gather-friendly), layered on DenseTables.
+
+    Since the protocol-parametric refactor the bake is per-SUBSET, not
+    per-mode: the grant tables are masked to the messages the subset's
+    remote may send, and the subset's op/message masks plus the
+    ``stateless_home`` flag ride along for the engine (``core.engine_mn``
+    keys its compiled programs on ``name``).
 
     grant_*: [N_MSG, N_HOME] — effect of granting a request once its
       downgrade preconditions hold (post-fan-out).
@@ -555,15 +695,48 @@ class DenseTablesMN:
     absorb_to_homebuf: np.ndarray  # [kind, dirty, home] -> payload->home_buf
     base: DenseTables
     moesi: bool
+    # -- subset parametrization (the §3.4 lattice, baked) ------------------
+    name: str                     # subset name (compiled-program cache key)
+    op_ok: np.ndarray             # [LocalOp.N] local op admitted by subset
+    remote_send_ok: np.ndarray    # [N_MSG] remote may send
+    home_send_ok: np.ndarray      # [N_MSG] home may send
+    stateless_home: bool          # home tracks NO per-line state
 
 
-def bake_mn(moesi: bool) -> DenseTablesMN:
-    """Bake the N-remote grant/absorb tables for MESI or MOESI mode.
+#: subset name -> baked MN tables (and the subset that produced them).
+#: The engines' jitted-step caches key on the NAME, so a name must map to
+#: exactly one ProtocolSubset for the life of the process.
+_MN_BAKED: Dict[str, DenseTablesMN] = {}
+_MN_BAKED_FROM: Dict[str, ProtocolSubset] = {}
 
-    Semantics mirror the atomic oracle ``core.multinode.MultiNodeRef``
-    transition for transition — the bisimulation tests in
-    ``tests/test_engine_mn.py`` hold the two to state/value equality.
+
+def mn_tables(name: str) -> DenseTablesMN:
+    """Look up baked MN tables by subset name (for the jit builders)."""
+    return _MN_BAKED[name]
+
+
+def bake_mn(subset: ProtocolSubset) -> DenseTablesMN:
+    """Bake the N-remote grant/absorb tables from a ``ProtocolSubset``.
+
+    The mode (MESI/MOESI) comes from the subset's base tables; the grant
+    tables are additionally masked to ``subset.remote_may_send`` so a
+    request outside the subset is ILLEGAL at the home (counted in
+    ``DirectoryMNState.illegal``) rather than silently granted.  Semantics
+    mirror the atomic oracle ``core.multinode.MultiNodeRef`` transition
+    for transition — the bisimulation tests in ``tests/test_engine_mn.py``
+    and ``tests/test_specialize_mn.py`` hold the two to state/value
+    equality per lattice member.  Bakes are memoized by ``subset.name``.
     """
+    hit = _MN_BAKED.get(subset.name)
+    if hit is not None:
+        if _MN_BAKED_FROM[subset.name] is not subset:
+            raise ValueError(
+                f"subset name {subset.name!r} is already baked for a "
+                "different ProtocolSubset — names key the engines' "
+                "compiled-program caches; give a custom subset a unique "
+                "name")
+        return hit
+    moesi = subset.tables.moesi
     g_nh = np.zeros((N_MSG, N_HOME), np.int8)
     g_rp = np.full((N_MSG, N_HOME), int(M.RESP_NACK), np.int8)
     g_wb = np.zeros((N_MSG, N_HOME), bool)
@@ -632,12 +805,37 @@ def bake_mn(moesi: bool) -> DenseTablesMN:
         # line is about to be granted exclusively; nothing stays at home).
         a_bk[MnAbsorb.REPLY_I, 1, hs] = True
 
-    return DenseTablesMN(g_nh, g_rp, g_wb, g_lg, g_vw, a_nh, a_bk, a_hb,
-                         FULL if moesi else MINIMAL, moesi)
+    # -- subset masks -------------------------------------------------------
+    # requests outside the subset's remote_may_send are illegal at the home
+    # (requirement 5 is checked the OTHER way by verify_envelope_mn: every
+    # message the remote MAY send must be grantable).
+    r_ok = np.zeros((N_MSG,), bool)
+    for m_ in subset.remote_may_send:
+        r_ok[int(m_)] = True
+    h_ok = np.zeros((N_MSG,), bool)
+    for m_ in subset.home_may_send:
+        h_ok[int(m_)] = True
+    for m_ in MN_REQUEST_VIEW:
+        if not r_ok[m_]:
+            g_lg[m_, :] = False
+    o_ok = np.zeros((LocalOp.N,), bool)
+    for o_ in subset.allowed_ops(n_remotes=2):
+        o_ok[int(o_)] = True
+
+    t = DenseTablesMN(g_nh, g_rp, g_wb, g_lg, g_vw, a_nh, a_bk, a_hb,
+                      subset.tables, moesi,
+                      name=subset.name, op_ok=o_ok,
+                      remote_send_ok=r_ok, home_send_ok=h_ok,
+                      stateless_home=subset.stateless_home)
+    _MN_BAKED[subset.name] = t
+    _MN_BAKED_FROM[subset.name] = subset
+    return t
 
 
-MN_MINIMAL = bake_mn(moesi=False)
-MN_FULL = bake_mn(moesi=True)
+MN_MINIMAL = bake_mn(ENHANCED_MESI)
+MN_FULL = bake_mn(FULL_MOESI)
+MN_READ_ONLY = bake_mn(READ_ONLY)
+MN_STATELESS = bake_mn(STATELESS)
 
 
 def mn_needed_mask(msg: int, requester_view: int, other_view: int) -> int:
@@ -665,9 +863,26 @@ def verify_envelope_mn(tables: DenseTablesMN) -> List[str]:
     grant/absorb tables plus the fan-out rule, mechanically.  The checks
     are independent of the remote count — every rule is per-(requester,
     other-remote), N only scales message counts.
+
+    Since the protocol-parametric refactor the tables are baked PER
+    SUBSET, and the checks honor the subset's masks the way requirement 5
+    intends: every message the remote MAY send must be handled, every
+    downgrade/response the rules demand must be one the home MAY send,
+    and only states reachable under the workload guarantee are in scope
+    (e.g. READ_ONLY never reaches an EM view, so the recall-to-shared
+    machinery is legitimately absent).  ``tests/test_specialize_mn.py``
+    runs this for every lattice member.
     """
     violations: List[str] = []
     t = tables
+    subset = _MN_BAKED_FROM[t.name]
+    views_ok = subset_reachable_views(subset)
+    rstates_ok = subset_reachable_remote_states(subset)
+    allowed_reqs = {m for m in MN_REQUEST_VIEW if t.remote_send_ok[m]}
+    # a stateless home never leaves I (even home-side writes land directly
+    # in the backing store), so I is the only home state in scope.
+    home_states = tuple(range(N_HOME)) if not t.stateless_home \
+        else (int(H.I),)
 
     # Distance-from-rest of (home state, REQUESTER view) in the N-remote
     # setting.  Unlike the pairwise JOINT_RANK, (O, I) and (M, I) with OTHER
@@ -704,10 +919,13 @@ def verify_envelope_mn(tables: DenseTablesMN) -> List[str]:
 
     # requirements 2 and 7 over the remote table (shared with the 2-node
     # engine; fan-out multiplies messages, not message types): the remote
-    # must be PREPARED for every home-initiated downgrade in every state
-    # (req 7), and the reply is mandatory (req 2).
+    # must be PREPARED for every home-initiated downgrade the home may
+    # send, in every remote state reachable under the guarantee (req 7),
+    # and the reply is mandatory (req 2).
     for msg in (int(M.HOME_DOWNGRADE_S), int(M.HOME_DOWNGRADE_I)):
-        for rstate in range(N_REMOTE):
+        if not t.home_send_ok[msg]:
+            continue                    # the subset's home never sends it
+        for rstate in sorted(rstates_ok):
             if not t.base.rem_legal[msg, rstate]:
                 violations.append(
                     f"req7: MN remote unprepared for {MsgType(msg).name} in "
@@ -715,30 +933,49 @@ def verify_envelope_mn(tables: DenseTablesMN) -> List[str]:
             elif t.base.rem_resp[msg, rstate] == int(M.NOP):
                 violations.append(
                     "req2: MN home-initiated downgrade without reply")
+            elif not t.remote_send_ok[int(t.base.rem_resp[msg, rstate])]:
+                violations.append(
+                    f"req2: mandatory reply "
+                    f"{MsgType(int(t.base.rem_resp[msg, rstate])).name} "
+                    f"is outside the subset's remote_may_send")
 
     # requirement 3: no silent dirty->clean local transition (shared local
-    # table, restricted to the MN op set).
-    for op in MN_LOCAL_OPS:
+    # table, restricted to the subset's op set).
+    for op in range(LocalOp.N):
+        if not t.op_ok[op]:
+            continue
         row_ns = int(t.base.loc_new_state[int(op), int(RemoteState.M)])
         row_rq = int(t.base.loc_request[int(op), int(RemoteState.M)])
         if row_ns != int(RemoteState.M) and row_rq == int(M.NOP):
             violations.append(f"req3: silent dirty->clean MN local op {op}")
 
     # requirement 4: the response to a given request must not depend on the
-    # home's hidden state (S vs E vs M vs O all answer identically).
-    for msg in MN_REQUEST_VIEW:
+    # home's hidden state (S vs E vs M vs O all answer identically), and
+    # every response a grant emits must be one the home MAY send.
+    for msg in allowed_reqs:
         resps = {int(t.grant_resp[msg, hs])
-                 for hs in range(N_HOME) if t.grant_legal[msg, hs]}
+                 for hs in home_states if t.grant_legal[msg, hs]}
         if len(resps) > 1:
             violations.append(
                 f"req4: MN remote can distinguish home states via "
                 f"{MsgType(msg).name} responses: {resps}")
+        for resp in resps:
+            if not t.home_send_ok[resp]:
+                violations.append(
+                    f"req4: grant response {MsgType(resp).name} to "
+                    f"{MsgType(msg).name} is outside the subset's "
+                    f"home_may_send")
 
     # requirement 5: the home handles everything the MN remote may send —
-    # every request in every legal home state, every absorb kind in every
-    # (dirty, home state) combination.
-    for msg, req_view in MN_REQUEST_VIEW.items():
-        for hs in range(N_HOME):
+    # every allowed request in every reachable (home, requester-view)
+    # source, every reachable absorb kind in every (dirty, home state)
+    # combination.  Local-op closure rides along: every message a subset-
+    # legal local op can emit must be in remote_may_send.
+    for msg in allowed_reqs:
+        req_view = MN_REQUEST_VIEW[msg]
+        if req_view not in views_ok:
+            continue                    # requester can never hold the view
+        for hs in home_states:
             if hs == int(H.O) and not t.moesi:
                 continue                    # O unreachable in MESI mode
             if (hs, req_view) not in {(h, v) for (h, v) in (
@@ -751,14 +988,32 @@ def verify_envelope_mn(tables: DenseTablesMN) -> List[str]:
                 violations.append(
                     f"req5: MN home cannot grant {MsgType(msg).name} @ "
                     f"home={HomeState(hs).name}")
+    dirty_domain = (0, 1) if int(RemoteState.M) in rstates_ok else (0,)
+    kind_reachable = {
+        MnAbsorb.VOL_I: t.remote_send_ok[int(M.VOL_DOWNGRADE_I)],
+        MnAbsorb.REPLY_S: t.home_send_ok[int(M.HOME_DOWNGRADE_S)],
+        MnAbsorb.REPLY_I: t.home_send_ok[int(M.HOME_DOWNGRADE_I)],
+    }
     for kind in range(MnAbsorb.N):
-        for dirty in (0, 1):
-            for hs in range(N_HOME):
+        if not kind_reachable[kind]:
+            continue
+        for dirty in dirty_domain:
+            for hs in home_states:
                 nh = int(t.absorb_new_home[kind, dirty, hs])
                 if not (0 <= nh < N_HOME):
                     violations.append(
                         f"req5: MN absorb {kind} dirty={dirty} "
                         f"home={HomeState(hs).name} has no outcome")
+    for op in range(LocalOp.N):
+        if not t.op_ok[op]:
+            continue
+        for rstate in sorted(rstates_ok):
+            req = int(t.base.loc_request[op, rstate])
+            if req != int(M.NOP) and not t.remote_send_ok[req]:
+                violations.append(
+                    f"req5: local op {op} in state "
+                    f"{RemoteState(rstate).name} emits "
+                    f"{MsgType(req).name}, outside remote_may_send")
 
     # requirement 6: exclusivity — before an exclusive grant the fan-out
     # rule must demand an invalidation for EVERY other non-I view, and
@@ -766,16 +1021,24 @@ def verify_envelope_mn(tables: DenseTablesMN) -> List[str]:
     # is per-other-remote (the fan-out is a map over the sharer vector),
     # so enumerating the single other-view domain covers all 3^(R-1)
     # view-vector combinations — n_remotes scales message COUNT, not the
-    # rule's domain.
-    for msg in MN_REQUEST_VIEW:
-        for v in range(N_VIEW):
+    # rule's domain.  Only views reachable under the guarantee are in
+    # scope, and every downgrade the rule demands must be one the home
+    # MAY send (the subset-soundness closure: READ_ONLY may drop the
+    # recall-to-shared machinery precisely because EM is unreachable).
+    for msg in allowed_reqs:
+        for v in sorted(views_ok):
             need = mn_needed_mask(msg, MN_REQUEST_VIEW[msg], v)
+            if need != int(M.NOP) and not t.home_send_ok[need]:
+                violations.append(
+                    f"req6: grant of {MsgType(msg).name} against view "
+                    f"{RemoteView(v).name} needs {MsgType(need).name}, "
+                    f"outside the subset's home_may_send")
             if msg in (int(M.REQ_READ_EXCL), int(M.REQ_UPGRADE)):
                 if v != int(V.I) and need != int(M.HOME_DOWNGRADE_I):
                     violations.append(
                         f"req6: exclusive grant {MsgType(msg).name} "
                         f"leaves a sharer with view {RemoteView(v).name}")
-            else:
+            elif msg == int(M.REQ_READ_SHARED):
                 if v == int(V.EM) and need != int(M.HOME_DOWNGRADE_S):
                     violations.append(
                         "req6: shared grant leaves an exclusive owner")
@@ -785,8 +1048,8 @@ def verify_envelope_mn(tables: DenseTablesMN) -> List[str]:
 
     # requirement 7 (converse of 2): replies/grants the remote must accept —
     # every grant response type must complete the pending request.
-    for msg in MN_REQUEST_VIEW:
-        for hs in range(N_HOME):
+    for msg in allowed_reqs:
+        for hs in home_states:
             if not t.grant_legal[msg, hs]:
                 continue
             resp = int(t.grant_resp[msg, hs])

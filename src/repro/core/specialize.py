@@ -1,4 +1,4 @@
-"""Protocol specialization / subsetting (paper §3.4).
+"""Protocol specialization / subsetting (paper §3.4): the metrics layer.
 
 ECI's headline feature: the protocol is *meant to be subsetted* per
 application.  A subset is a mask over message types and local ops; legality
@@ -7,117 +7,51 @@ transitions the partner may signal, unless it can be guaranteed these won't
 be generated") — so a subset is only sound relative to a *workload
 guarantee* (e.g. read-only).
 
-The lattice implemented here, from the paper:
+Since the protocol-parametric refactor the ``ProtocolSubset`` dataclass and
+the lattice members live in ``core.protocol`` (next to the tables they mask,
+so ``bake_mn`` can bake per-subset N-remote tables without a circular
+import); this module re-exports them and keeps the model-checking /
+metrics front-end:
 
 * ``FULL_MOESI``      — everything, hidden-O forwarding (the ThunderX-1).
 * ``ENHANCED_MESI``   — the minimal mandatory protocol (no O; write-through).
 * ``READ_ONLY``       — CPU-initiator read-only workload: remote uses only
   LOAD/EVICT; joint states collapse to {IS, II}; home-initiated downgrade-
-  to-invalid retained for eviction of clean data.
+  to-invalid retained for eviction of clean data.  On the N-remote engine
+  the sharer vector collapses to a presence bitmap (views ∈ {I, S}).
 * ``STATELESS``       — the paper's extreme: drop the last home transition;
-  a single combined state ``I*``; the home tracks NO per-line state and
-  still interoperates flawlessly with a full remote agent
-  (proved in tests/test_specialize.py by bisimulation with FULL).
+  a single combined state ``I*``; the home tracks NO per-line sharer state
+  and still interoperates flawlessly with full remote agents (proved by
+  bisimulation against ``MultiNodeRef`` in tests/test_specialize_mn.py).
 
-``subset_metrics`` emits the state/transition counts used by the
+``subset_metrics`` emits the 2-node state/transition counts used by the
 protocol-size benchmark (paper's "not unusual ... more than 100 states" vs
-one state here).
+one state here); ``reachable_joint_states_mn`` / ``subset_metrics_mn`` are
+the N-remote port: explicit-state model checking of the atomic N-node
+semantics under the subset's guarantee, counting quiescent joint states
+``(home, sorted remote states)`` up to remote permutation symmetry.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, FrozenSet, List
-
-import numpy as np
+from typing import Dict, FrozenSet, List, Tuple
 
 from .messages import MsgType
-from .protocol import (FULL, MINIMAL, DenseTables, LocalOp, build_home_table,
-                       build_local_table)
+from .protocol import (ENHANCED_MESI, FULL_MOESI, MN_LOCAL_OPS,  # noqa: F401
+                       READ_ONLY, STATELESS, SUBSETS, LocalOp,
+                       ProtocolSubset, bake_mn, build_home_table,
+                       build_local_table, subset_reachable_views)
+from .states import HomeState as H
+from .states import RemoteState as R
 
 M = MsgType
 
 
-@dataclasses.dataclass(frozen=True)
-class ProtocolSubset:
-    """A named subset of the ECI envelope."""
-
-    name: str
-    tables: DenseTables
-    #: messages the REMOTE may send (requirement 5 for the home side)
-    remote_may_send: FrozenSet[int]
-    #: messages the HOME may send
-    home_may_send: FrozenSet[int]
-    #: local ops the application may issue
-    local_ops: FrozenSet[int]
-    #: the home tracks no per-line state (§3.4 final simplification)
-    stateless_home: bool = False
-
-    def check_workload(self, ops) -> bool:
-        """True iff an op program stays within the subset's guarantee.
-
-        Vectorized — this runs on every public store op, over R*L entries
-        for the N-remote engine, so a python per-element loop would tax
-        the very path the benchmarks time.
-        """
-        allowed = np.fromiter(self.local_ops, np.int64, len(self.local_ops))
-        return bool(np.isin(np.asarray(ops),
-                            np.append(allowed, int(LocalOp.NOP))).all())
-
-
-FULL_MOESI = ProtocolSubset(
-    name="full_moesi",
-    tables=FULL,
-    remote_may_send=frozenset(map(int, (
-        M.REQ_READ_SHARED, M.REQ_READ_EXCL, M.REQ_UPGRADE,
-        M.VOL_DOWNGRADE_S, M.VOL_DOWNGRADE_I,
-        M.RESP_ACK, M.RESP_DATA_DIRTY))),
-    home_may_send=frozenset(map(int, (
-        M.HOME_DOWNGRADE_S, M.HOME_DOWNGRADE_I,
-        M.RESP_DATA, M.RESP_DATA_DIRTY, M.RESP_ACK, M.RESP_NACK))),
-    local_ops=frozenset((LocalOp.LOAD, LocalOp.STORE, LocalOp.EVICT,
-                         LocalOp.DEMOTE)),
-)
-
-ENHANCED_MESI = dataclasses.replace(
-    FULL_MOESI, name="enhanced_mesi", tables=MINIMAL)
-
-READ_ONLY = ProtocolSubset(
-    name="read_only",
-    tables=MINIMAL,
-    # Fig. 1(b) read-only: only transitions 1 (upgrade to shared) and 6
-    # (voluntary downgrade to invalid) remain.
-    remote_may_send=frozenset(map(int, (M.REQ_READ_SHARED,
-                                        M.VOL_DOWNGRADE_I, M.RESP_ACK))),
-    # home keeps only 'downgrade remote to invalid' (evict clean data).
-    home_may_send=frozenset(map(int, (M.HOME_DOWNGRADE_I, M.RESP_DATA,
-                                      M.RESP_NACK))),
-    local_ops=frozenset((LocalOp.LOAD, LocalOp.EVICT)),
-)
-
-STATELESS = ProtocolSubset(
-    name="stateless",
-    tables=MINIMAL,
-    remote_may_send=frozenset(map(int, (M.REQ_READ_SHARED,
-                                        M.VOL_DOWNGRADE_I))),
-    home_may_send=frozenset(map(int, (M.RESP_DATA,))),
-    local_ops=frozenset((LocalOp.LOAD, LocalOp.EVICT)),
-    stateless_home=True,
-)
-
-SUBSETS: Dict[str, ProtocolSubset] = {
-    s.name: s for s in (FULL_MOESI, ENHANCED_MESI, READ_ONLY, STATELESS)
-}
-
-
 def reachable_joint_states(subset: ProtocolSubset) -> FrozenSet[str]:
-    """Joint states reachable from II under the subset's allowed traffic.
+    """2-node joint states reachable from II under the subset's traffic.
 
     Small explicit-state model checking over the python reference tables —
     this is the count the paper's specialization argument is about.
     """
-    from .states import HomeState as H
-    from .states import RemoteState as R
-
     home = build_home_table(subset.tables.moesi)
     if subset.stateless_home:
         # the home never transitions: the only joint 'state' is I*.
@@ -193,5 +127,143 @@ def subset_metrics(subset: ProtocolSubset) -> Dict[str, int]:
         "remote_msg_types": len(subset.remote_may_send),
         "home_msg_types": len(subset.home_may_send),
         "local_ops": len(subset.local_ops),
+        "home_tracks_state": 0 if subset.stateless_home else 1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# N-remote joint-state counts: the paper's protocol-size table for N nodes.
+# ---------------------------------------------------------------------------
+
+
+def _mn_atomic_successors(subset: ProtocolSubset, hs: int,
+                          rs: Tuple[int, ...]) -> List[Tuple[int,
+                                                             Tuple[int, ...]]]:
+    """Successors of one canonical N-node state under the subset's traffic.
+
+    Atomic semantics, transition for transition the ``MultiNodeRef``
+    oracle's (quiescent states only — the engine's transient E before a
+    parked STORE completes never survives to quiescence, which is why the
+    atomic model writes stores straight to M).  Home-initiated accesses are
+    admitted only when every downgrade they demand is in the subset's
+    ``home_may_send`` (the requirement-5 closure).
+    """
+    moesi = subset.tables.moesi
+    ops = subset.allowed_ops(n_remotes=max(len(rs), 2))
+    out: List[Tuple[int, Tuple[int, ...]]] = []
+    n = len(rs)
+
+    def recall_owner(hs: int, rs: List[int], to_shared: bool) -> int:
+        own = [j for j in range(n) if rs[j] in (int(R.E), int(R.M))]
+        if not own:
+            return hs
+        j = own[0]
+        dirty = rs[j] == int(R.M)
+        if dirty and to_shared:
+            hs = int(H.O) if moesi else int(H.S)
+        rs[j] = int(R.S) if to_shared else int(R.I)
+        return hs
+
+    def emit(hs: int, rs: List[int]) -> None:
+        out.append((hs, tuple(sorted(rs))))
+
+    # remote-initiated (one representative per distinct current state —
+    # canonical states are permutation classes, so that covers every case)
+    for i in range(n):
+        if i > 0 and rs[i] == rs[i - 1]:
+            continue                          # symmetric to i-1
+        if int(LocalOp.LOAD) in ops and rs[i] == int(R.I) and \
+                int(M.REQ_READ_SHARED) in subset.remote_may_send:
+            h2, r2 = hs, list(rs)
+            h2 = recall_owner(h2, r2, to_shared=True)
+            if h2 == int(H.M):
+                h2 = int(H.O) if moesi else int(H.S)
+            elif h2 == int(H.E):
+                h2 = int(H.S)
+            r2[i] = int(R.S)
+            emit(h2, r2)
+        if int(LocalOp.STORE) in ops:
+            h2, r2 = hs, list(rs)
+            if r2[i] in (int(R.E), int(R.M)):
+                r2[i] = int(R.M)              # silent E->M
+            else:
+                h2 = recall_owner(h2, r2, to_shared=False)
+                for j in range(n):
+                    if j != i:
+                        r2[j] = int(R.I)
+                h2 = int(H.I)
+                r2[i] = int(R.M)
+            emit(h2, r2)
+        if int(LocalOp.EVICT) in ops and rs[i] != int(R.I) and \
+                int(M.VOL_DOWNGRADE_I) in subset.remote_may_send:
+            h2, r2 = hs, list(rs)
+            if r2[i] == int(R.M):
+                if moesi and h2 in (int(H.I), int(H.O)):
+                    h2 = int(H.M)
+            elif h2 == int(H.O) and not any(
+                    r2[j] != int(R.I) for j in range(n) if j != i):
+                h2 = int(H.M)
+            r2[i] = int(R.I)
+            emit(h2, r2)
+
+    # home-initiated accesses (gated by the home_may_send closure)
+    owner = any(s in (int(R.E), int(R.M)) for s in rs)
+    sharers = any(s != int(R.I) for s in rs)
+    if not owner or int(M.HOME_DOWNGRADE_S) in subset.home_may_send:
+        h2, r2 = hs, list(rs)
+        h2 = recall_owner(h2, r2, to_shared=True)
+        emit(h2, r2)                          # home_read
+    if not sharers or int(M.HOME_DOWNGRADE_I) in subset.home_may_send:
+        h2, r2 = hs, list(rs)
+        h2 = recall_owner(h2, r2, to_shared=False)
+        r2 = [int(R.I)] * n
+        if h2 != int(H.I):
+            h2 = int(H.M)
+        emit(h2, r2)                          # home_write
+
+    return out
+
+
+def reachable_joint_states_mn(subset: ProtocolSubset,
+                              n_remotes: int) -> FrozenSet[str]:
+    """N-node joint states reachable from rest under the subset's traffic.
+
+    States are ``(home state, sorted per-remote states)`` — quiescent
+    classes up to remote permutation symmetry, named like ``"I:SSI"``.
+    The READ_ONLY subset collapses to the presence-bitmap family
+    ``{I:I..I, I:SI..I, ..., I:S..S}`` (n+1 states); STATELESS tracks no
+    home state at all and counts as the single ``I*``.
+    """
+    if subset.stateless_home:
+        return frozenset({"I*"})
+    start = (int(H.I), tuple([int(R.I)] * n_remotes))
+    seen = {start}
+    frontier = [start]
+    while frontier:
+        hs, rs = frontier.pop()
+        for nxt in _mn_atomic_successors(subset, hs, rs):
+            if nxt not in seen:
+                seen.add(nxt)
+                frontier.append(nxt)
+
+    def name(hs, rs):
+        return "ISEMO"[hs] + ":" + "".join("ISEM"[s] for s in rs)
+
+    return frozenset(name(h, r) for h, r in seen)
+
+
+def subset_metrics_mn(subset: ProtocolSubset,
+                      n_remotes: int) -> Dict[str, int]:
+    """The N-node protocol-size row: joint-state count plus the view-
+    vector domain per remote (3 for the full sharer vector, 2 for the
+    READ_ONLY presence bitmap, 1 for the stateless home)."""
+    views = subset_reachable_views(subset)
+    return {
+        "n_remotes": n_remotes,
+        "joint_states_mn": len(reachable_joint_states_mn(subset,
+                                                         n_remotes)),
+        "view_domain": 1 if subset.stateless_home else len(views),
+        "remote_msg_types": len(subset.remote_may_send),
+        "home_msg_types": len(subset.home_may_send),
         "home_tracks_state": 0 if subset.stateless_home else 1,
     }

@@ -94,7 +94,8 @@ def occupancy(ch: Channel, msg_class: int) -> jnp.ndarray:
 
 
 def credit_accept(ch: Channel, msg_class: int, cand: jnp.ndarray,
-                  credits: jnp.ndarray) -> jnp.ndarray:
+                  credits: jnp.ndarray, *,
+                  shared: bool = False) -> jnp.ndarray:
     """[..., L] mask of candidates within their VC's credit.
 
     A candidate is in credit iff its VC's current occupancy plus the number
@@ -104,16 +105,32 @@ def credit_accept(ch: Channel, msg_class: int, cand: jnp.ndarray,
     two parity-split running sums over the line axis — bit-identical to
     (and much cheaper than) ranking against a dense ``[..., L, N_VCS]``
     one-hot expansion.
+
+    ``shared=True`` models a SHARED-credit link instead of per-initiator
+    credit pools: occupancy and candidate ranks reduce over ALL leading
+    axes (row-major order ranks candidates across rows), so one credit
+    budget covers the whole ``[R, L]`` slab.  This is the ROADMAP's
+    shared-credit question for the home's R-1 invalidation fan-out — the
+    per-row accounting gives the home R independent budgets, a real
+    shared link would not.
     """
     L = ch.msg.shape[-1]
     odd = (jnp.arange(L) & 1).astype(bool)                      # [L]
     active = ch.msg != int(MsgType.NOP)
-    occ_o = jnp.where(odd, active, False).sum(-1, keepdims=True)
-    occ_e = jnp.where(odd, False, active).sum(-1, keepdims=True)
     c_o = jnp.where(odd, cand, False).astype(jnp.int32)
     c_e = jnp.where(odd, False, cand).astype(jnp.int32)
-    rank_o = jnp.cumsum(c_o, axis=-1) - c_o        # candidates before me
-    rank_e = jnp.cumsum(c_e, axis=-1) - c_e
+    if shared and ch.msg.ndim > 1:
+        occ_o = jnp.where(odd, active, False).sum()
+        occ_e = jnp.where(odd, False, active).sum()
+        rank_o = (jnp.cumsum(c_o.reshape(-1)) - c_o.reshape(-1)
+                  ).reshape(cand.shape)
+        rank_e = (jnp.cumsum(c_e.reshape(-1)) - c_e.reshape(-1)
+                  ).reshape(cand.shape)
+    else:
+        occ_o = jnp.where(odd, active, False).sum(-1, keepdims=True)
+        occ_e = jnp.where(odd, False, active).sum(-1, keepdims=True)
+        rank_o = jnp.cumsum(c_o, axis=-1) - c_o    # candidates before me
+        rank_e = jnp.cumsum(c_e, axis=-1) - c_e
     occ_rank = jnp.where(odd, occ_o + rank_o, occ_e + rank_e)
     vc_credit = credits[vc_of(jnp.arange(L), msg_class)]        # [L]
     return cand & (occ_rank < vc_credit)
@@ -138,7 +155,8 @@ def place(ch: Channel, accept: jnp.ndarray, msg: jnp.ndarray,
 def submit(ch: Channel, msg_class: int, want: jnp.ndarray, msg: jnp.ndarray,
            dirty: jnp.ndarray, payload: jnp.ndarray,
            credits: jnp.ndarray, *,
-           unbounded: bool = False) -> tuple[Channel, jnp.ndarray]:
+           unbounded: bool = False,
+           shared: bool = False) -> tuple[Channel, jnp.ndarray]:
     """Try to enqueue messages for lines where ``want`` is set.
 
     Returns the updated channel and the mask of ACCEPTED lines.  A submit is
@@ -151,12 +169,13 @@ def submit(ch: Channel, msg_class: int, want: jnp.ndarray, msg: jnp.ndarray,
     ``unbounded=True`` skips the credit ranking entirely — the response-
     class fast path (responses always sink: the deadlock-freedom argument),
     identical to passing effectively-infinite credits but without paying
-    the occupancy/rank computation every step.
+    the occupancy/rank computation every step.  ``shared=True`` accounts
+    credits across all leading axes (see ``credit_accept``).
     """
     free = ch.msg == int(MsgType.NOP)
     cand = want & free                                          # [..., L]
     accept = cand if unbounded else credit_accept(ch, msg_class, cand,
-                                                  credits)
+                                                  credits, shared=shared)
     return place(ch, accept, msg, dirty, payload), accept
 
 

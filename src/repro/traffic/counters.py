@@ -139,6 +139,9 @@ def summarize(ctr: Counters, msg_count: np.ndarray,
         "active_steps": active,
         "ops_retired": int(retired.sum()),
         "ops_per_step": retired.sum() / active,
+        # interconnect cost per retired op — the protocol-subset figure of
+        # merit (bench_subsets compares it across the §3.4 lattice).
+        "msgs_per_op": float(mc.sum()) / max(int(retired.sum()), 1),
         "retired_per_remote": retired.tolist(),
         "max_wait": np.asarray(ctr.max_wait).tolist(),
         "lat_hist": np.asarray(ctr.lat_hist).tolist(),
@@ -165,7 +168,8 @@ def summarize(ctr: Counters, msg_count: np.ndarray,
 
 
 def replay_reference(trace: Tuple[np.ndarray, np.ndarray, np.ndarray],
-                     moesi: bool = True) -> Tuple[MultiNodeRef, np.ndarray]:
+                     moesi: bool = True,
+                     subset=None) -> Tuple[MultiNodeRef, np.ndarray]:
     """Replay a streaming run's retirement linearization atomically.
 
     ``trace`` is the driver's (retired [S,R,L], op [S,R,L], value [S,R,L])
@@ -173,11 +177,14 @@ def replay_reference(trace: Tuple[np.ndarray, np.ndarray, np.ndarray],
     transactions, so retirement order IS a legal atomic order; same-step
     retirements on one line can only be reads (an exclusive grant
     excludes concurrent sharers), which commute.  Returns the oracle and
-    its per-message-type counts [16].
+    its per-message-type counts [16].  ``subset`` puts the oracle in its
+    subset-aware mode (the replay then also PROVES the retired stream
+    respected the workload guarantee — an out-of-subset op raises).
     """
     retired, ops, vals = (np.asarray(a) for a in trace)
     _, n_remotes, n_lines = retired.shape
-    ref = MultiNodeRef(n_lines, n_remotes=n_remotes, moesi=moesi)
+    ref = MultiNodeRef(n_lines, n_remotes=n_remotes, moesi=moesi,
+                       subset=subset)
     for t in range(retired.shape[0]):
         rr, ll = np.nonzero(retired[t])
         for r, l in zip(rr, ll):
@@ -211,13 +218,15 @@ def assert_counts_match(msg_count: np.ndarray, ref_counts: np.ndarray
             for i in mism))
 
 
-def validate_run(run, moesi: bool = True) -> MultiNodeRef:
+def validate_run(run, moesi: bool = True, subset=None) -> MultiNodeRef:
     """Full validation of a traced ``StreamRun``: the run completed, and
     its counters match the atomic oracle at quiescence.  Returns the
-    replayed oracle (callers can go on to compare final states)."""
+    replayed oracle (callers can go on to compare final states).
+    ``subset`` validates against the subset-aware oracle — the per-
+    lattice-member acceptance path of the protocol-parametric engine."""
     assert run.completed, "stream did not drain within the step budget"
     assert run.trace is not None, "run_stream(collect_trace=True) required"
-    ref, counts = replay_reference(run.trace, moesi)
+    ref, counts = replay_reference(run.trace, moesi, subset=subset)
     ref.check_all()
     assert_counts_match(run.msg_count, counts)
     return ref

@@ -44,7 +44,7 @@ import numpy as np
 
 from ..core.engine_mn import EngineMN, EngineMNState, busy_flag_mn, step_mn
 from ..core.messages import MsgType
-from ..core.protocol import (FULL, MINIMAL, MN_FULL, MN_MINIMAL, LocalOp)
+from ..core.protocol import LocalOp, mn_tables
 from .counters import Counters, make_counters, update_counters
 from .workloads import Workload
 
@@ -90,15 +90,16 @@ class StreamRun(NamedTuple):
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_stream(moesi: bool, collect_trace: bool, width: int):
-    """One fused streaming program per (mode, trace?, width) triple, shared
-    across engines; shapes (R, L, T, total steps) retrace inside jit's
-    cache.  The engine state is donated — the streaming scan is the hot
-    path, and per-step reallocation of the ``[R, L]`` slabs is pure
-    overhead."""
-    tables = FULL if moesi else MINIMAL
-    tables_mn = MN_FULL if moesi else MN_MINIMAL
-    step_fn = functools.partial(step_mn, tables, tables_mn)
+def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
+                   hreq_shared: bool = False):
+    """One fused streaming program per (subset, trace?, width, credit
+    model) tuple, shared across engines; shapes (R, L, T, total steps)
+    retrace inside jit's cache.  The engine state is donated — the
+    streaming scan is the hot path, and per-step reallocation of the
+    ``[R, L]`` slabs is pure overhead."""
+    tables_mn = mn_tables(subset_name)
+    step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
+                                hreq_shared=hreq_shared)
     nop_op = jnp.int8(int(LocalOp.NOP))
     W = width
 
@@ -231,12 +232,25 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
     enter flight per remote per step (same-line window slots serialize
     in-queue; see the module docstring).  The passed-in state is consumed
     (donated to the fused program) — use the returned ``state``.
+
+    The WHOLE op stream is checked against the engine's protocol subset
+    BEFORE anything is submitted (one vectorized pass over the ``[T, R]``
+    plane, which covers every future ``[R, W]`` issue window) — an op
+    that violates the guarantee only in the last slot of the last window
+    still rejects the run up front, with the engine state untouched.
     """
     assert width >= 1, width
+    if not engine.subset.check_workload(np.asarray(wl.op),
+                                        n_remotes=engine.n_remotes):
+        raise ValueError(
+            f"workload op stream outside subset "
+            f"'{engine.subset.name}' guarantee (allowed ops: "
+            f"{sorted(engine.subset.allowed_ops(engine.n_remotes))})")
     st0 = engine.init() if st is None else st
     base_msgs = np.asarray(st0.msg_count, np.int64)
     base_payload = int(st0.payload_msgs)
-    fn = _jitted_stream(engine.moesi, collect_trace, int(width))
+    fn = _jitted_stream(engine.subset.name, collect_trace, int(width),
+                        engine.shared_credits)
     carry, trace, completed = fn(st0, wl.op, wl.line, wl.value,
                                  jnp.arange(steps, dtype=jnp.int32),
                                  engine.delays, engine.credits)

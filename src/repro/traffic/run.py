@@ -1,17 +1,23 @@
 """CLI for the streaming traffic subsystem.
 
     PYTHONPATH=src python -m repro.traffic.run --workload zipfian \
-        --remotes 4 --lines 64 --ops 128 [--validate]
+        --remotes 4 --lines 64 --ops 128 [--validate] [--subset read_only]
     PYTHONPATH=src python -m repro.traffic.run --smoke
 
 ``--smoke`` runs EVERY workload generator at a small size with full
 oracle validation (counter exactness + completion), plus one WIDE case
 (zipfian at 8 remotes) so the scaled flat-[R, L] engine path stays
-exercised and one W=2 case covering the multi-op issue window — the CI
+exercised, one W=2 case covering the multi-op issue window, and one
+READ_ONLY R=8 case covering the protocol-parametric subset path — the CI
 keep-green path for the subsystem.  Without it, one workload is driven at
 the requested size and its counter summary printed as JSON.  ``--remotes``
 accepts up to 64 (the EWF v2 node-id ceiling); ``--width`` sets the
-per-remote issue width.
+per-remote issue width; ``--subset`` picks the §3.4 protocol subset the
+engine runs (read-only subsets require a store-free generator —
+sequential/strided/zipfian, driven with ``store_frac=0``); ``--credits``
+overrides the uniform per-VC credit and ``--shared-credits`` switches the
+home-request VC to one shared pool across remotes (the ROADMAP
+shared-credit link model — see docs/traffic.md).
 """
 from __future__ import annotations
 
@@ -22,30 +28,53 @@ import time
 import jax
 import jax.numpy as jnp
 
+#: generators that can be driven store-free (they take ``store_frac``).
+STORE_FREE_CAPABLE = ("sequential", "strided", "zipfian")
 
-def _build(n_lines: int, n_remotes: int, moesi: bool, block: int = 2):
+
+def _build(n_lines: int, n_remotes: int, subset, credits=None,
+           shared_credits: bool = False, block: int = 2):
+    import numpy as np
     from repro.core.engine_mn import EngineMN
+    from repro.core.transport import N_VCS
+    cr = None if credits is None else np.asarray([credits] * N_VCS,
+                                                 np.int32)
     return EngineMN(jnp.zeros((n_lines, block), jnp.float32),
-                    n_remotes=n_remotes, moesi=moesi)
+                    n_remotes=n_remotes, subset=subset, credits=cr,
+                    shared_credits=shared_credits)
 
 
 def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
           steps: int, seed: int, moesi: bool, validate: bool,
-          width: int = 1):
+          width: int = 1, subset_name: str = "", credits=None,
+          shared_credits: bool = False):
+    from repro.core.protocol import ENHANCED_MESI, FULL_MOESI, SUBSETS, \
+        LocalOp
     from repro.traffic import (WORKLOADS, run_stream, summarize,
                                validate_run)
-    eng = _build(n_lines, n_remotes, moesi)
-    wl = WORKLOADS[workload](jax.random.key(seed), ops, n_remotes, n_lines)
+    subset = SUBSETS[subset_name] if subset_name else \
+        (FULL_MOESI if moesi else ENHANCED_MESI)
+    kwargs = {}
+    if int(LocalOp.STORE) not in subset.local_ops:
+        if workload not in STORE_FREE_CAPABLE:
+            raise ValueError(
+                f"subset '{subset.name}' admits no stores; use a "
+                f"store-free generator ({', '.join(STORE_FREE_CAPABLE)})")
+        kwargs["store_frac"] = 0.0
+    eng = _build(n_lines, n_remotes, subset, credits, shared_credits)
+    wl = WORKLOADS[workload](jax.random.key(seed), ops, n_remotes, n_lines,
+                             **kwargs)
     t0 = time.perf_counter()
     run = run_stream(eng, wl, steps=steps, collect_trace=validate,
                      width=width)
     wall = time.perf_counter() - t0
     if validate:
-        validate_run(run, moesi)
+        validate_run(run, eng.moesi, subset=subset if subset_name else None)
     out = summarize(run.counters, run.msg_count, run.payload_msgs)
     out.update(workload=workload, n_remotes=n_remotes, n_lines=n_lines,
                completed=run.completed, wall_s=round(wall, 3),
-               validated=bool(validate), width=width)
+               validated=bool(validate), width=width, subset=subset.name,
+               shared_credits=bool(shared_credits))
     return out
 
 
@@ -53,25 +82,29 @@ def smoke() -> int:
     """Small-size full-taxonomy run with oracle validation; exit status.
 
     Includes one WIDE case (zipfian, 8 remotes) so the flat-[R, L] engine
-    path past the old 4-remote ceiling stays covered by CI, and one W=2
-    case keeping the multi-op issue window on the keep-green path."""
+    path past the old 4-remote ceiling stays covered by CI, one W=2 case
+    keeping the multi-op issue window on the keep-green path, and one
+    READ_ONLY R=8 case keeping the protocol-parametric subset engine
+    validated against the subset-aware oracle."""
     from repro.traffic import WORKLOADS
-    cases = [(name, 2, 220, 1) for name in WORKLOADS]
-    cases.append(("zipfian", 8, 900, 1))
-    cases.append(("zipfian", 4, 500, 2))
+    cases = [(name, 2, 220, 1, "") for name in WORKLOADS]
+    cases.append(("zipfian", 8, 900, 1, ""))
+    cases.append(("zipfian", 4, 500, 2, ""))
+    cases.append(("zipfian", 8, 900, 1, "read_only"))
     failures = 0
-    for name, n_remotes, steps, width in cases:
+    for name, n_remotes, steps, width, subset in cases:
+        tag = f" {subset}" if subset else ""
         try:
             out = drive(name, n_remotes=n_remotes, n_lines=12, ops=20,
                         steps=steps, seed=7, moesi=True, validate=True,
-                        width=width)
-            print(f"smoke {name} r{n_remotes} w{width}: OK "
+                        width=width, subset_name=subset)
+            print(f"smoke {name} r{n_remotes} w{width}{tag}: OK "
                   f"ops={out['ops_retired']} "
                   f"max_wait={max(out['max_wait'])} "
                   f"msgs={sum(out['messages'].values())}")
         except AssertionError as e:
             failures += 1
-            print(f"smoke {name} r{n_remotes} w{width}: FAIL {e}")
+            print(f"smoke {name} r{n_remotes} w{width}{tag}: FAIL {e}")
     print("smoke:", "PASS" if not failures else f"{failures} FAILURES")
     return 1 if failures else 0
 
@@ -94,7 +127,17 @@ def main() -> None:
                          "flight per remote per step (default 1)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesi", action="store_true",
-                    help="run the MESI subset instead of MOESI")
+                    help="run the ENHANCED_MESI subset instead of MOESI")
+    ap.add_argument("--subset", default="",
+                    help="protocol subset to run (full_moesi, "
+                         "enhanced_mesi, read_only, stateless); overrides "
+                         "--mesi")
+    ap.add_argument("--credits", type=int, default=0,
+                    help="uniform per-VC credit override (0 = default 64)")
+    ap.add_argument("--shared-credits", action="store_true",
+                    help="home-request VC uses ONE credit pool shared "
+                         "across remotes (shared-credit link model) "
+                         "instead of per-remote pools")
     ap.add_argument("--validate", action="store_true",
                     help="collect the retirement trace and replay it "
                          "against the MultiNodeRef oracle")
@@ -108,12 +151,20 @@ def main() -> None:
                  f"(EWF v2 node-id field)")
     if args.width < 1:
         ap.error("--width must be >= 1")
+    if args.subset:
+        from repro.core.protocol import SUBSETS
+        if args.subset not in SUBSETS:
+            ap.error(f"--subset must be one of {sorted(SUBSETS)}")
+    if args.credits < 0:
+        ap.error("--credits must be >= 0")
     if args.smoke:
         raise SystemExit(smoke())
     from repro.traffic import default_steps
     steps = args.steps or default_steps(args.ops, args.remotes)
     out = drive(args.workload, args.remotes, args.lines, args.ops, steps,
-                args.seed, not args.mesi, args.validate, width=args.width)
+                args.seed, not args.mesi, args.validate, width=args.width,
+                subset_name=args.subset, credits=args.credits or None,
+                shared_credits=args.shared_credits)
     print(json.dumps(out, indent=1, default=str))
     if not out["completed"]:
         raise SystemExit("stream did not drain within --steps")

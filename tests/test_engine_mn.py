@@ -328,10 +328,24 @@ def test_coherent_store_multi_reader():
     assert msgs.get("HOME_DOWNGRADE_I", 0) >= 1         # the fan-out paid
 
 
-def test_coherent_store_stateless_rejects_multi_reader(small_backing):
+def test_coherent_store_stateless_multi_reader(small_backing):
+    """The protocol-parametric engine runs STATELESS with several readers:
+    reads serve correctly, the home records NOTHING per line, and a home
+    write to a consumer-cached line is rejected (a stateless home cannot
+    invalidate what it does not track)."""
     from repro.core import CoherentStore, STATELESS
+    import jax.numpy as jnp
+    cs = CoherentStore(small_backing, STATELESS, n_remotes=2)
+    cs.read([0, 1], node=0)
+    cs.read([1, 2], node=1)
+    assert int(np.asarray(cs.state.dir.home_state).sum()) == 0
+    assert int(np.asarray(cs.state.dir.view).sum()) == 0
+    assert int(cs.state.dir.illegal) == 0
     with pytest.raises(ValueError):
-        CoherentStore(small_backing, STATELESS, n_remotes=2)
+        cs.home_write([1], jnp.zeros((1, 2)))
+    cs.home_write([4], jnp.ones((1, 2)))      # uncached: legal
+    np.testing.assert_allclose(np.asarray(cs.read([4], node=1)),
+                               [[1.0, 1.0]])
 
 
 def test_prefix_tier_multi_reader():

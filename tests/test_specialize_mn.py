@@ -1,0 +1,350 @@
+"""Protocol-parametric wide-R engine: the §3.4 lattice on ``EngineMN``.
+
+The acceptance surface of the subset refactor:
+
+* ``verify_envelope_mn`` is clean for every lattice member (the checks
+  honor the subset's masks the way requirement 5 intends);
+* READ_ONLY and STATELESS run on the N-remote engine with retirement-order
+  bisimulation against the subset-aware ``MultiNodeRef`` EXACT — streaming
+  (fast R=8, slow R ∈ {8, 64}) and round-driven with EVICT coverage;
+* the workload guarantee is enforced BEFORE submit, across the whole
+  ``[R, W]`` issue window (a violation only in slot W-1 still rejects);
+* one LocalOp encoding feeds both engines (DEMOTE programs are rejected on
+  the MN engine, not silently dropped);
+* the N-node protocol-size table: READ_ONLY collapses the sharer vector to
+  a presence bitmap (n+1 joint states), STATELESS to ONE for any n;
+* the read-mostly decode-fleet workload pays measurably fewer messages/op
+  under READ_ONLY than under FULL (the `bench_subsets` claim, mini-sized);
+* the shared-credit link model stalls the R-1 invalidation fan-out at the
+  credit bound and stays oracle-exact (the ROADMAP credit question).
+"""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine_mn import EngineMN
+from repro.core.multinode import MultiNodeRef
+from repro.core.protocol import (FULL_MOESI, READ_ONLY, STATELESS, SUBSETS,
+                                 LocalOp, bake_mn, verify_envelope_mn)
+from repro.core.specialize import (reachable_joint_states_mn,
+                                   subset_metrics_mn)
+from repro.core.states import HomeState as H
+from repro.core.states import RemoteState as R_
+from repro.traffic import WORKLOADS, Workload, run_stream, summarize, \
+    validate_run
+from tests.test_engine_mn import _assert_bisimilar, _run_round
+
+BLOCK = 2
+
+
+# ---------------------------------------------------------------------------
+# Envelope + protocol-size table per lattice member.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SUBSETS))
+def test_envelope_mn_all_lattice_members(name):
+    """Requirement-5 soundness, mechanically, for every lattice member —
+    including the masked subsets (the §3.4 claim that dropping machinery
+    is sound exactly when the guarantee makes it unreachable)."""
+    assert verify_envelope_mn(bake_mn(SUBSETS[name])) == []
+
+
+def test_mn_joint_state_counts():
+    """The N-node protocol-size table: READ_ONLY's sharer vector is a
+    presence bitmap (n+1 permutation-classes), STATELESS is ONE state at
+    any n, and the full protocols grow strictly beyond both."""
+    assert sorted(reachable_joint_states_mn(READ_ONLY, 3)) == \
+        ["I:III", "I:IIS", "I:ISS", "I:SSS"]
+    for n in (2, 4, 8):
+        assert subset_metrics_mn(STATELESS, n)["joint_states_mn"] == 1
+        ro = subset_metrics_mn(READ_ONLY, n)["joint_states_mn"]
+        full = subset_metrics_mn(FULL_MOESI, n)["joint_states_mn"]
+        assert ro == n + 1
+        assert full > ro
+    assert subset_metrics_mn(READ_ONLY, 4)["view_domain"] == 2
+    assert subset_metrics_mn(FULL_MOESI, 4)["view_domain"] == 3
+    assert subset_metrics_mn(STATELESS, 4)["view_domain"] == 1
+
+
+def test_custom_subset_names_key_the_bake_cache():
+    """A custom subset bakes and verifies under its own name; REUSING a
+    built-in name for a different subset object is rejected (names key
+    the engines' compiled-program caches)."""
+    custom = dataclasses.replace(READ_ONLY, name="custom_read_only")
+    assert verify_envelope_mn(bake_mn(custom)) == []
+    clash = dataclasses.replace(READ_ONLY)      # same name, new object
+    with pytest.raises(ValueError):
+        bake_mn(clash)
+
+
+# ---------------------------------------------------------------------------
+# Subset-aware bisimulation: round driver (EVICT + home-access coverage).
+# ---------------------------------------------------------------------------
+
+#: op kinds per subset for the round driver — the subset's full guarantee
+#: surface (STATELESS excludes home writes: a stateless home may only
+#: write lines no remote caches, which the random schedule can't promise).
+SUBSET_KINDS = {
+    "read_only": ["load", "evict", "hread", "hwrite", "load"],
+    "stateless": ["load", "evict", "hread", "load"],
+}
+
+
+def _assert_bisimilar_stateless(st, ref, n_remotes, n_lines):
+    """STATELESS variant: remote states/caches/backing must agree, and the
+    engine's home must have recorded NOTHING per line."""
+    rs = np.asarray(st.agents.remote_state)
+    ref_rs = np.asarray([[int(s) for s in ref.remote_state[r]]
+                         for r in range(n_remotes)])
+    np.testing.assert_array_equal(rs, ref_rs, err_msg="remote states")
+    assert int(np.asarray(st.dir.home_state).sum()) == 0
+    assert int(np.asarray(st.dir.view).sum()) == 0
+    assert int(st.dir.illegal) == 0
+    assert int(np.asarray(st.agents.illegal).sum()) == 0
+    cache = np.asarray(st.agents.cache)
+    backing = np.asarray(st.dir.backing)
+    for line in range(n_lines):
+        for r in range(n_remotes):
+            if ref_rs[r, line] != int(R_.I):
+                assert cache[r, line, 0] == ref.remote_cache[r][line]
+        assert backing[line, 0] == ref.backing[line]
+
+
+def run_subset_bisimulation(subset, seed, n_remotes, n_lines, rounds):
+    """Round-driven differential bisimulation vs the subset-aware oracle
+    (the EVICT/home-access coverage the eviction-free streaming
+    generators cannot give)."""
+    rng = random.Random(seed)
+    kinds = SUBSET_KINDS[subset.name]
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, subset=subset)
+    st = eng.init()
+    ref = MultiNodeRef(n_lines, n_remotes=n_remotes, subset=subset)
+    for _ in range(rounds):
+        sched = [(rng.choice(kinds), rng.randrange(n_remotes),
+                  rng.randrange(1, 100)) for _ in range(n_lines)]
+        st = _run_round(eng, st, sched, n_remotes, n_lines)
+        for line, (kind, node, v) in enumerate(sched):
+            if kind == "load":
+                ref.load(node, line)
+            elif kind == "evict":
+                ref.evict(node, line)
+            elif kind == "hread":
+                ref.home_read(line)
+            else:
+                ref.home_write(line, v)
+        ref.check_all()
+        if subset.stateless_home:
+            _assert_bisimilar_stateless(st, ref, n_remotes, n_lines)
+        else:
+            _assert_bisimilar(st, ref, n_remotes, n_lines)
+
+
+@pytest.mark.parametrize("subset", [READ_ONLY, STATELESS],
+                         ids=["read_only", "stateless"])
+@pytest.mark.parametrize("n_remotes", [4, 8])
+def test_subset_round_bisimulation(subset, n_remotes):
+    """Fast tier: READ_ONLY/STATELESS on the MN engine bisimulate the
+    subset-aware oracle under load/evict/home-access schedules."""
+    run_subset_bisimulation(subset, seed=311 * n_remotes, n_remotes=n_remotes,
+                            n_lines=10, rounds=5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("subset", [READ_ONLY, STATELESS],
+                         ids=["read_only", "stateless"])
+@pytest.mark.parametrize("n_remotes", [8, 16])
+def test_subset_round_bisimulation_wide(subset, n_remotes):
+    for seed in range(3):
+        run_subset_bisimulation(subset, seed=4021 * seed + n_remotes,
+                                n_remotes=n_remotes, n_lines=32, rounds=8)
+
+
+# ---------------------------------------------------------------------------
+# Subset-aware bisimulation: streaming retirement-order replay (the
+# acceptance criterion at R ∈ {8, 64}).
+# ---------------------------------------------------------------------------
+
+
+def _stream_and_validate(subset, n_remotes, n_lines, ops, steps, seed=11,
+                         width=1):
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, subset=subset)
+    wl = WORKLOADS["zipfian"](jax.random.key(seed), ops, n_remotes,
+                              n_lines, store_frac=0.0)
+    run = run_stream(eng, wl, steps=steps, collect_trace=True, width=width)
+    ref = validate_run(run, moesi=eng.moesi, subset=subset)
+    rs = np.asarray(run.state.agents.remote_state)
+    ref_rs = np.asarray([[int(s) for s in ref.remote_state[r]]
+                         for r in range(n_remotes)])
+    np.testing.assert_array_equal(rs, ref_rs, err_msg="remote states")
+    if subset.stateless_home:
+        assert int(np.asarray(run.state.dir.home_state).sum()) == 0
+        assert int(np.asarray(run.state.dir.view).sum()) == 0
+    assert int(run.state.dir.illegal) == 0
+    assert int(np.asarray(run.state.agents.illegal).sum()) == 0
+    return run
+
+
+@pytest.mark.parametrize("subset", [READ_ONLY, STATELESS],
+                         ids=["read_only", "stateless"])
+def test_subset_stream_oracle_exact(subset):
+    """Fast tier: retirement-order replay against the subset-aware oracle
+    stays EXACT for the masked subsets at R=8 (width 2 keeps the issue
+    window on the subset path too)."""
+    _stream_and_validate(subset, n_remotes=8, n_lines=12, ops=24,
+                         steps=900, width=2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("subset", [READ_ONLY, STATELESS],
+                         ids=["read_only", "stateless"])
+@pytest.mark.parametrize("n_remotes", [8, 64])
+def test_subset_stream_oracle_exact_wide(subset, n_remotes):
+    """Slow tier — THE acceptance criterion: READ_ONLY and STATELESS run
+    on ``EngineMN`` at R ∈ {8, 64} with retirement-order bisimulation vs
+    the subset-aware ``MultiNodeRef`` exact."""
+    from repro.traffic import default_steps
+    ops = 48 if n_remotes == 8 else 16
+    _stream_and_validate(subset, n_remotes=n_remotes, n_lines=24, ops=ops,
+                         steps=default_steps(ops, n_remotes), seed=29)
+
+
+# ---------------------------------------------------------------------------
+# Guarantee enforcement: before submit, across the issue window, loudly.
+# ---------------------------------------------------------------------------
+
+
+def test_check_workload_rejects_slot_w_minus_1_before_submit():
+    """An op program that violates READ_ONLY ONLY in slot W-1 of the issue
+    window must be rejected before anything is submitted: the passed-in
+    state is untouched (not donated, zero messages)."""
+    n_remotes, n_lines, W = 3, 8, 4
+    op = np.full((W, n_remotes), int(LocalOp.LOAD), np.int8)
+    op[W - 1, 0] = int(LocalOp.STORE)          # last slot of first window
+    line = np.arange(W)[:, None] * np.ones((1, n_remotes), np.int32)
+    val = np.ones((W, n_remotes), np.float32)
+    wl = Workload(jnp.asarray(op), jnp.asarray(line.astype(np.int32)),
+                  jnp.asarray(val))
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, subset=READ_ONLY)
+    st = eng.init()
+    with pytest.raises(ValueError, match="read_only"):
+        run_stream(eng, wl, steps=50, st=st, width=W)
+    assert int(jnp.asarray(st.msg_count).sum()) == 0   # st NOT consumed
+
+
+def test_op_encoding_unified_across_engines():
+    """One LocalOp encoding feeds both engines: the workload generators
+    emit it, and ``check_workload`` rejects (not drops) ops outside the
+    N-remote envelope — DEMOTE is legal 2-node, rejected on MN."""
+    demote = [int(LocalOp.DEMOTE)]
+    assert FULL_MOESI.check_workload(demote)               # 2-node: legal
+    assert not FULL_MOESI.check_workload(demote, n_remotes=2)
+    wl = WORKLOADS["zipfian"](jax.random.key(0), 16, 4, 8, store_frac=0.0)
+    assert READ_ONLY.check_workload(np.asarray(wl.op), n_remotes=4)
+    wl2 = WORKLOADS["zipfian"](jax.random.key(0), 16, 4, 8)
+    assert not READ_ONLY.check_workload(np.asarray(wl2.op), n_remotes=4)
+    assert FULL_MOESI.check_workload(np.asarray(wl2.op), n_remotes=4)
+
+
+def test_coherent_store_mn_readonly_rejects_store():
+    from repro.core import CoherentStore
+    cs = CoherentStore(jnp.zeros((6, BLOCK), jnp.float32), READ_ONLY,
+                       n_remotes=4)
+    cs.read([0, 1], node=2)
+    with pytest.raises(ValueError):
+        cs.write([0], jnp.ones((1, BLOCK)), node=2)
+
+
+# ---------------------------------------------------------------------------
+# The §3.4 payoff, mini-sized: messages/op on the decode-fleet workload.
+# ---------------------------------------------------------------------------
+
+
+def test_readonly_cuts_messages_per_op_vs_full():
+    """A fast R=4 version of ``bench_subsets``: the same decode-fleet
+    trace (readers re-read hot records, a publisher refreshes one) costs
+    measurably fewer messages/op under READ_ONLY (home publishes) than
+    under FULL (a writer remote publishes)."""
+    n_remotes, n_lines, rounds, publish_every = 4, 6, 12, 3
+    n_readers = n_remotes - 1
+    wl = WORKLOADS["zipfian"](jax.random.key(3), rounds, n_readers,
+                              n_lines, store_frac=0.0)
+    lines = np.asarray(wl.line)
+    hot = int(np.bincount(lines.ravel(), minlength=n_lines).argmax())
+    ar = np.arange(n_readers)
+    msgs = {}
+    for subset in (FULL_MOESI, READ_ONLY):
+        eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                       n_remotes=n_remotes, subset=subset)
+        st = eng.init()
+        zvv = jnp.zeros((n_remotes, n_lines, BLOCK), jnp.float32)
+
+        def read_round(st, t):
+            opv = np.zeros((n_remotes, n_lines), np.int8)
+            opv[ar, lines[t]] = int(LocalOp.LOAD)
+            st, _, _, _, busy = eng.run_ops(st, jnp.asarray(opv), zvv, 256)
+            assert not bool(busy)
+            return st
+
+        def publish(st, value):
+            if subset is READ_ONLY:
+                want = jnp.zeros((n_lines,), bool).at[hot].set(True)
+                wv = jnp.zeros((n_lines, BLOCK), jnp.float32).at[hot].set(
+                    float(value))
+                st, _ = eng.step(st, want_write=want, wval=wv)
+                for _ in range(128):
+                    if eng.quiescent(st):
+                        return st
+                    st, _ = eng.step(st)
+                raise AssertionError("publish did not retire")
+            opv = np.zeros((n_remotes, n_lines), np.int8)
+            opv[n_remotes - 1, hot] = int(LocalOp.STORE)
+            vv = zvv.at[n_remotes - 1, hot].set(float(value))
+            st, _, _, _, busy = eng.run_ops(st, jnp.asarray(opv), vv, 256)
+            assert not bool(busy)
+            return st
+
+        for t in range(rounds):                  # warm-up (cold misses)
+            st = read_round(st, t)
+        st = publish(st, 1)
+        base = int(np.asarray(st.msg_count).sum())
+        for t in range(rounds):
+            if t % publish_every == 0:
+                st = publish(st, t + 2)
+            st = read_round(st, t)
+        msgs[subset.name] = int(np.asarray(st.msg_count).sum()) - base
+    assert msgs["read_only"] < msgs["full_moesi"], msgs
+
+
+# ---------------------------------------------------------------------------
+# Shared-credit link model: the fan-out stalls at the bound, stays exact.
+# ---------------------------------------------------------------------------
+
+
+def test_shared_credit_fanout_stalls_but_stays_exact():
+    """Under the shared-credit link model the R-1 invalidation fan-out on
+    one line's VC is pinned at the credit (vs the full R-1 burst under
+    per-remote pools), the refused invalidations defer-and-retry, and the
+    retirement-order replay stays EXACT (see docs/traffic.md)."""
+    n_remotes, n_lines, ops, credit = 8, 1, 10, 4
+    wl = WORKLOADS["producer_consumer"](jax.random.key(5), ops, n_remotes,
+                                        n_lines)
+    peaks = {}
+    for shared in (False, True):
+        eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                       n_remotes=n_remotes,
+                       credits=np.asarray([credit] * 10, np.int32),
+                       shared_credits=shared)
+        run = run_stream(eng, wl, steps=4000, collect_trace=True)
+        validate_run(run, moesi=True)
+        s = summarize(run.counters, run.msg_count)
+        peaks[shared] = s["peak_occupancy"]["hreq"]
+    assert peaks[False] == n_remotes - 1      # per-remote pools: full burst
+    assert peaks[True] <= credit              # shared pool: stalls at bound
