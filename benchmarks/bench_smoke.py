@@ -37,14 +37,16 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-#: (workload, n_remotes, n_lines, ops, width) per streaming smoke config —
-#: small enough for a CI job, wide enough (R=8, R=32) to exercise the
-#: past-4-remotes flat layout, one W=2 config covering the multi-op issue
-#: window, and one NON-zipfian traffic shape (producer_consumer: steady-
-#: state dirty forwarding) so the gate covers more than hot-line skew.
-STREAM_CONFIGS = (("zipfian", 2, 16, 32, 1), ("zipfian", 8, 16, 32, 1),
-                  ("zipfian", 32, 16, 32, 1), ("zipfian", 8, 16, 32, 2),
-                  ("producer_consumer", 8, 16, 32, 1))
+#: (workload, n_remotes, n_lines, ops, width, homes) per streaming smoke
+#: config — small enough for a CI job, wide enough (R=8, R=32) to exercise
+#: the past-4-remotes flat layout, one W=2 config covering the multi-op
+#: issue window, one NON-zipfian traffic shape (producer_consumer: steady-
+#: state dirty forwarding) so the gate covers more than hot-line skew, and
+#: one H=2 config keeping the multi-home [H, R, L/H] engine on the gate.
+STREAM_CONFIGS = (("zipfian", 2, 16, 32, 1, 1), ("zipfian", 8, 16, 32, 1, 1),
+                  ("zipfian", 32, 16, 32, 1, 1), ("zipfian", 8, 16, 32, 2, 1),
+                  ("producer_consumer", 8, 16, 32, 1, 1),
+                  ("zipfian", 8, 16, 32, 1, 2))
 FANOUT_REMOTES = (2, 8)
 
 #: the wall-clock harness config: THE acceptance stream of the hot-path
@@ -91,9 +93,9 @@ def run_streaming() -> dict:
     from repro.core.engine_mn import EngineMN
 
     out = {}
-    for workload, n_remotes, n_lines, ops, width in STREAM_CONFIGS:
+    for workload, n_remotes, n_lines, ops, width, homes in STREAM_CONFIGS:
         eng = EngineMN(jnp.zeros((n_lines, 2), jnp.float32),
-                       n_remotes=n_remotes)
+                       n_remotes=n_remotes, n_homes=homes)
         wl = WORKLOADS[workload](jax.random.key(0), ops, n_remotes, n_lines)
         steps = default_steps(ops, n_remotes)
         t0 = time.perf_counter()
@@ -106,6 +108,8 @@ def run_streaming() -> dict:
         # zipfian keys keep their historical names so the committed
         # baseline and the cross-PR trajectory stay comparable.
         key = f"r{n_remotes}" if width == 1 else f"r{n_remotes}_w{width}"
+        if homes > 1:
+            key = f"{key}_h{homes}"
         if workload != "zipfian":
             key = f"{workload}_{key}"
         out[key] = {

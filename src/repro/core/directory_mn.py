@@ -17,6 +17,14 @@ being ``view != I``.  Three vectorized operations cover the protocol:
 
 All of it is gathers and masked updates over dense arrays — fully
 ``jit``-able, no python control flow in the hot path.
+
+Like the transport and agent primitives, every function here is
+polymorphic over LEADING batch axes: the canonical layout is ``[R, L]``
+views over ``[L]`` home state (one directory), and the multi-home engine
+runs the same code over ``[H, R, L/H]`` views / ``[H, L/H]`` home state —
+one batched program per phase, H home slices, no ``vmap``.  The remote
+axis is therefore always ``axis=-2`` of ``view`` and per-remote gathers
+use ``take_along_axis`` along it.
 """
 from __future__ import annotations
 
@@ -53,10 +61,25 @@ def _jt(table, *idx):
     return jnp.asarray(table)[idx]
 
 
+def _take_remote(arr: jnp.ndarray, node: jnp.ndarray) -> jnp.ndarray:
+    """Gather ``arr[..., node[l], l]`` — one remote's row per line.
+
+    ``arr`` is ``[..., R, L]`` (or ``[..., R, L, B]``), ``node`` is
+    ``[..., L]``; the gather runs along the remote axis so it is the same
+    single op for the flat and the home-batched layouts."""
+    if arr.ndim == node.ndim + 2:            # [..., R, L, B] payloads
+        idx = node[..., None, :, None]
+        return jnp.take_along_axis(
+            arr, jnp.broadcast_to(idx, idx.shape[:-1] + arr.shape[-1:]),
+            axis=-3)[..., 0, :, :]
+    return jnp.take_along_axis(arr, node[..., None, :], axis=-2)[..., 0, :]
+
+
 def home_value(st: DirectoryMNState) -> jnp.ndarray:
-    """[L, B] — the line value as seen by the home (own copy if cached)."""
+    """[..., L, B] — the line value as seen by the home (own copy if
+    cached)."""
     has = st.home_state != int(HomeState.I)
-    return jnp.where(has[:, None], st.home_buf, st.backing)
+    return jnp.where(has[..., None], st.home_buf, st.backing)
 
 
 def absorb(tables: DenseTablesMN, st: DirectoryMNState,
@@ -96,30 +119,28 @@ def absorb(tables: DenseTablesMN, st: DirectoryMNState,
     view = jnp.where(to_s, jnp.int8(int(RemoteView.S)), view)
 
     # -- home-state / data effects (at most one dirty source per line) -----
-    d_act = active & dirty                           # [R, L]
-    any_dirty = d_act.any(axis=0)                    # [L]
-    src = jnp.argmax(d_act, axis=0)                  # [L] the dirty remote
-    L = st.home_state.shape[0]
-    lines = jnp.arange(L)
-    d_kind = kind[src, lines].astype(jnp.int32)      # [L]
-    d_pay = payload[src, lines]                      # [L, B]
+    d_act = active & dirty                           # [..., R, L]
+    any_dirty = d_act.any(axis=-2)                   # [..., L]
+    src = jnp.argmax(d_act, axis=-2)                 # [..., L] dirty remote
+    d_kind = _take_remote(kind, src).astype(jnp.int32)     # [..., L]
+    d_pay = _take_remote(payload, src)               # [..., L, B]
 
     hs = st.home_state.astype(jnp.int32)
-    one = jnp.ones((L,), jnp.int32)
+    one = jnp.ones_like(hs)
     new_home = _jt(tables.absorb_new_home, d_kind, one, hs)
     to_back = _jt(tables.absorb_to_backing, d_kind, one, hs) & any_dirty
     to_buf = _jt(tables.absorb_to_homebuf, d_kind, one, hs) & any_dirty
 
     home_state = jnp.where(any_dirty, new_home.astype(jnp.int8),
                            st.home_state)
-    backing = jnp.where(to_back[:, None], d_pay, st.backing)
-    home_buf = jnp.where(to_buf[:, None], d_pay, st.home_buf)
+    backing = jnp.where(to_back[..., None], d_pay, st.backing)
+    home_buf = jnp.where(to_buf[..., None], d_pay, st.home_buf)
 
     # hidden-O upkeep: when the LAST sharer leaves a hidden-O line, the home
     # is simply dirty-exclusive again (O -> M); the invariant "hidden O only
     # while sharers exist" stays true at quiescence.
-    no_sharers = ~(view != int(RemoteView.I)).any(axis=0)
-    was_vol = (active & (kind == vol_i)).any(axis=0)
+    no_sharers = ~(view != int(RemoteView.I)).any(axis=-2)
+    was_vol = (active & (kind == vol_i)).any(axis=-2)
     o_to_m = was_vol & no_sharers & \
         (home_state == int(HomeState.O))
     home_state = jnp.where(o_to_m, jnp.int8(int(HomeState.M)), home_state)
@@ -130,18 +151,18 @@ def absorb(tables: DenseTablesMN, st: DirectoryMNState,
 
 def needed_downgrades(st: DirectoryMNState, active: jnp.ndarray,
                       msg: jnp.ndarray, node: jnp.ndarray) -> jnp.ndarray:
-    """[R, L] int8 — the HOME_DOWNGRADE_* each remote needs before ``msg``
-    from ``node`` can be granted (NOP where none).  The vectorized twin of
-    ``protocol.mn_needed_mask``."""
-    R, L = st.view.shape
+    """[..., R, L] int8 — the HOME_DOWNGRADE_* each remote needs before
+    ``msg`` from ``node`` can be granted (NOP where none).  The vectorized
+    twin of ``protocol.mn_needed_mask``."""
+    R = st.view.shape[-2]
     rids = jnp.arange(R)[:, None]                    # [R, 1]
-    others = rids != node[None, :]                   # [R, L]
+    others = rids != node[..., None, :]              # [..., R, L]
     shared_req = active & (msg == int(MsgType.REQ_READ_SHARED))
     excl_req = active & ((msg == int(MsgType.REQ_READ_EXCL))
                          | (msg == int(MsgType.REQ_UPGRADE)))
-    recall = shared_req[None, :] & others & \
+    recall = shared_req[..., None, :] & others & \
         (st.view == int(RemoteView.EM))
-    inval = excl_req[None, :] & others & \
+    inval = excl_req[..., None, :] & others & \
         (st.view != int(RemoteView.I))
     out = jnp.where(inval, jnp.int8(int(MsgType.HOME_DOWNGRADE_I)),
                     jnp.int8(int(MsgType.NOP)))
@@ -150,10 +171,10 @@ def needed_downgrades(st: DirectoryMNState, active: jnp.ndarray,
 
 def home_needed_downgrades(st: DirectoryMNState, want_read: jnp.ndarray,
                            want_write: jnp.ndarray) -> jnp.ndarray:
-    """[R, L] int8 — downgrades required before a HOME-side access: reads
-    recall a dirty owner to S, writes invalidate every sharer."""
-    recall = want_read[None, :] & (st.view == int(RemoteView.EM))
-    inval = want_write[None, :] & (st.view != int(RemoteView.I))
+    """[..., R, L] int8 — downgrades required before a HOME-side access:
+    reads recall a dirty owner to S, writes invalidate every sharer."""
+    recall = want_read[..., None, :] & (st.view == int(RemoteView.EM))
+    inval = want_write[..., None, :] & (st.view != int(RemoteView.I))
     out = jnp.where(inval, jnp.int8(int(MsgType.HOME_DOWNGRADE_I)),
                     jnp.int8(int(MsgType.NOP)))
     return jnp.where(recall & ~inval,
@@ -166,11 +187,12 @@ def grant(tables: DenseTablesMN, st: DirectoryMNState, active: jnp.ndarray,
     """Complete requests whose downgrade preconditions hold.
 
     Args:
-      active: [L] bool — a grant fires on the line this step.
-      msg: [L] int8 — the parked request type.
-      node: [L] int32 — the requester.
+      active: [..., L] bool — a grant fires on the line this step.
+      msg: [..., L] int8 — the parked request type.
+      node: [..., L] int32 — the requester.
 
-    Returns (new_state, resp [L] int8 (NOP where inactive), payload [L, B]).
+    Returns (new_state, resp [..., L] int8 (NOP where inactive),
+    payload [..., L, B]).
     An UPGRADE whose requester view was concurrently invalidated is NACKed
     (the agent falls back to I and reissues READ_EXCL) — the transaction-
     layer race of §3.3, kept rare by per-line serialization.
@@ -180,11 +202,10 @@ def grant(tables: DenseTablesMN, st: DirectoryMNState, active: jnp.ndarray,
     state ``I*`` of §3.4).  Requests outside the subset still count as
     illegal (the baked ``grant_legal`` mask).
     """
-    R, L = st.view.shape
-    lines = jnp.arange(L)
+    R = st.view.shape[-2]
     m = msg.astype(jnp.int32)
     hs = st.home_state.astype(jnp.int32)
-    req_view = st.view[node, lines].astype(jnp.int32)    # requester's view
+    req_view = _take_remote(st.view, node).astype(jnp.int32)  # requester's
 
     want_view = _jt(jnp.asarray(
         [MN_REQUEST_VIEW.get(i, 0) for i in range(16)], jnp.int32), m)
@@ -202,13 +223,13 @@ def grant(tables: DenseTablesMN, st: DirectoryMNState, active: jnp.ndarray,
         # single joint state I*: serve the data, record nothing.
         backing, home_state, view = st.backing, st.home_state, st.view
     else:
-        backing = jnp.where((do & wb)[:, None], st.home_buf, st.backing)
+        backing = jnp.where((do & wb)[..., None], st.home_buf, st.backing)
         home_state = jnp.where(do, new_home.astype(jnp.int8),
                                st.home_state)
         new_view = _jt(tables.grant_view, m)
-        onehot = jnp.arange(R)[:, None] == node[None, :]  # [R, L]
-        view = jnp.where(onehot & do[None, :],
-                         new_view[None, :].astype(jnp.int8), st.view)
+        onehot = jnp.arange(R)[:, None] == node[..., None, :]  # [..., R, L]
+        view = jnp.where(onehot & do[..., None, :],
+                         new_view[..., None, :].astype(jnp.int8), st.view)
 
     resp = jnp.where(do, resp.astype(jnp.int8), jnp.int8(int(MsgType.NOP)))
     resp = jnp.where(is_upgrade_race, jnp.int8(int(MsgType.RESP_NACK)), resp)
@@ -225,7 +246,7 @@ def home_apply_write(st: DirectoryMNState, mask: jnp.ndarray,
     wb = mask & has
     direct = mask & ~has
     return st._replace(
-        home_buf=jnp.where(wb[:, None], value, st.home_buf),
+        home_buf=jnp.where(wb[..., None], value, st.home_buf),
         home_state=jnp.where(wb, jnp.int8(int(HomeState.M)), st.home_state),
-        backing=jnp.where(direct[:, None], value, st.backing),
+        backing=jnp.where(direct[..., None], value, st.backing),
     )

@@ -1,7 +1,9 @@
 """The vectorized N-remote coherency engine (paper §4.1, R <= 64).
 
-One home (sharer-vector directory, ``core.directory_mn``) plus ``R``
-caching remotes, each a full 4-state agent (``core.agent``) laid out over
+One home (sharer-vector directory, ``core.directory_mn``) — or ``H``
+address-interleaved homes (``n_homes``, the multi-home fold below) — plus
+``R`` caching remotes, each a full 4-state agent (``core.agent``) laid
+over
 one contiguous ``[R, L]`` slab — the per-remote virtual channels and MSHRs
 are flat ``transport.Channel`` arrays with a leading remote axis, operated
 on directly by the batch-polymorphic transport/agent primitives (no
@@ -72,6 +74,116 @@ MAX_REMOTES = MAX_NODE + 1
 #: Outside the MsgType value range, so it can never collide with a parked
 #: request.
 HOME_TXN = 100
+
+
+# ---------------------------------------------------------------------------
+# Multi-home fold: the [R, L] <-> [H, R, L/H] layout change.
+#
+# ``multinode.home_of`` interleaves line ownership by address
+# (``line % H``), so the home-major layout is a pure reshape of the line
+# axis: global line ``l = q*H + h`` lands at ``[h, ..., q]``.  Every
+# transport/agent/directory primitive is polymorphic over leading batch
+# axes, so the SAME step body runs the folded layout — one batched
+# program, H home slices, compile time ~flat in H — and each home slice
+# carries its own ``arb_rr``/transaction/MSHR plane and VC credit pools
+# for free.  ``H == 1`` skips the fold entirely (bit-identical to the
+# single-home engine).
+# ---------------------------------------------------------------------------
+
+
+def _f_l(x, H):       # [L, ...tail] per-line home-state style arrays
+    """[L] -> [H, L/H] (or [L, B] -> [H, L/H, B])."""
+    return jnp.moveaxis(x.reshape((x.shape[0] // H, H) + x.shape[1:]),
+                        1, 0)
+
+
+def _u_l(x):
+    """Inverse of ``_f_l``: [H, L/H, ...] -> [L, ...]."""
+    m = jnp.moveaxis(x, 0, 1)
+    return m.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+
+def _f_rl(x, H):
+    """[R, L] -> [H, R, L/H] (or [R, L, B] -> [H, R, L/H, B])."""
+    r, l = x.shape[:2]
+    return jnp.moveaxis(x.reshape((r, l // H, H) + x.shape[2:]), 2, 0)
+
+
+def _u_rl(x):
+    """Inverse of ``_f_rl``: [H, R, L/H, ...] -> [R, L, ...]."""
+    m = jnp.moveaxis(x, 0, 2)
+    return m.reshape((x.shape[1], x.shape[2] * x.shape[0]) + x.shape[3:])
+
+
+def _fold_state_mn(st: EngineMNState, H: int) -> EngineMNState:
+    """Flat [R, L] engine state -> home-major [H, R, L/H] layout.
+
+    The agents' per-remote tallies (``illegal``/``hits``/``misses``,
+    shape [R]) have no line axis to fold; the folded state carries fresh
+    [H, R] zeros and ``_unfold_state_mn`` adds the per-home deltas back
+    onto the flat totals."""
+    chf = lambda ch: tp.Channel(*(_f_rl(a, H) for a in ch))
+    zr = jnp.zeros((H,) + st.agents.illegal.shape,
+                   st.agents.illegal.dtype)
+    return EngineMNState(
+        dir=st.dir._replace(
+            home_state=_f_l(st.dir.home_state, H),
+            view=_f_rl(st.dir.view, H),
+            backing=_f_l(st.dir.backing, H),
+            home_buf=_f_l(st.dir.home_buf, H)),
+        agents=st.agents._replace(
+            remote_state=_f_rl(st.agents.remote_state, H),
+            cache=_f_rl(st.agents.cache, H),
+            pending_req=_f_rl(st.agents.pending_req, H),
+            pending_op=_f_rl(st.agents.pending_op, H),
+            pending_val=_f_rl(st.agents.pending_val, H),
+            illegal=zr, hits=zr, misses=zr),
+        ch_req=chf(st.ch_req), ch_resp=chf(st.ch_resp),
+        ch_hreq=chf(st.ch_hreq), ch_hresp=chf(st.ch_hresp),
+        hreq_pending=_f_rl(st.hreq_pending, H),
+        txn_msg=_f_l(st.txn_msg, H),
+        txn_node=_f_l(st.txn_node, H),
+        arb_rr=_f_l(st.arb_rr, H),
+        want_read=_f_l(st.want_read, H),
+        want_write=_f_l(st.want_write, H),
+        want_wval=_f_l(st.want_wval, H),
+        msg_count=st.msg_count, payload_msgs=st.payload_msgs,
+        step_no=st.step_no,
+    )
+
+
+def _unfold_state_mn(st: EngineMNState, flat: EngineMNState
+                     ) -> EngineMNState:
+    """Home-major [H, R, L/H] state -> flat [R, L]; ``flat`` supplies the
+    pre-fold per-remote tally bases the folded zeros started from."""
+    chu = lambda ch: tp.Channel(*(_u_rl(a) for a in ch))
+    return EngineMNState(
+        dir=st.dir._replace(
+            home_state=_u_l(st.dir.home_state),
+            view=_u_rl(st.dir.view),
+            backing=_u_l(st.dir.backing),
+            home_buf=_u_l(st.dir.home_buf)),
+        agents=st.agents._replace(
+            remote_state=_u_rl(st.agents.remote_state),
+            cache=_u_rl(st.agents.cache),
+            pending_req=_u_rl(st.agents.pending_req),
+            pending_op=_u_rl(st.agents.pending_op),
+            pending_val=_u_rl(st.agents.pending_val),
+            illegal=flat.agents.illegal + st.agents.illegal.sum(axis=0),
+            hits=flat.agents.hits + st.agents.hits.sum(axis=0),
+            misses=flat.agents.misses + st.agents.misses.sum(axis=0)),
+        ch_req=chu(st.ch_req), ch_resp=chu(st.ch_resp),
+        ch_hreq=chu(st.ch_hreq), ch_hresp=chu(st.ch_hresp),
+        hreq_pending=_u_rl(st.hreq_pending),
+        txn_msg=_u_l(st.txn_msg),
+        txn_node=_u_l(st.txn_node),
+        arb_rr=_u_l(st.arb_rr),
+        want_read=_u_l(st.want_read),
+        want_write=_u_l(st.want_write),
+        want_wval=_u_l(st.want_wval),
+        msg_count=st.msg_count, payload_msgs=st.payload_msgs,
+        step_no=st.step_no,
+    )
 
 
 class EngineMNState(NamedTuple):
@@ -150,7 +262,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
             st: EngineMNState, op: jnp.ndarray, op_val: jnp.ndarray,
             want_read: jnp.ndarray, want_write: jnp.ndarray,
             wval: jnp.ndarray, delays: jnp.ndarray, credits: jnp.ndarray,
-            hreq_shared: bool = False
+            hreq_shared: bool = False, n_homes: int = 1, home_bw: int = 0
             ) -> Tuple[EngineMNState, StepMNOutput]:
     """One fused engine step over all remotes and lines.
 
@@ -163,6 +275,19 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     submission to SHARED credit accounting (one budget across all R rows
     instead of per-row pools — the ROADMAP shared-credit link model).
 
+    MULTI-HOME (``n_homes > 1``): line ownership interleaves across homes
+    by address (``multinode.home_of``), and the step folds the flat
+    ``[R, L]`` state into the home-major ``[H, R, L/H]`` layout at entry
+    and unfolds at exit — the body in between is unchanged, because every
+    transport/agent/directory primitive is polymorphic over leading batch
+    axes.  Each home slice then owns its own ``arb_rr``/transaction/MSHR
+    plane and VC credit pools; compile time stays ~flat in H (same traced
+    program, one more batch axis).  ``home_bw > 0`` caps the NEW
+    transactions each home parks per step (the directory-slice pipeline
+    bandwidth — the single-directory ceiling ``bench_streaming``'s
+    H-scaling curve measures); 0 means unbounded, and ``n_homes == 1``
+    skips the fold entirely (bit-identical to the single-home engine).
+
     The transport/agent primitives are batch-polymorphic, so the ``[R, L]``
     channel/MSHR slabs are operated on directly — one batched op per phase
     regardless of R (the flat layout that lets this engine scale to
@@ -174,8 +299,15 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     ONCE — the stall dry-run's acceptance is reused as the channel write
     mask, since the surviving emission set can only shrink between the
     dry-run and the write (same occupancy, smaller ranks)."""
+    if n_homes > 1:
+        flat_in = st
+        st = _fold_state_mn(st, n_homes)
+        op, op_val = _f_rl(op, n_homes), _f_rl(op_val, n_homes)
+        want_read = _f_l(want_read, n_homes)
+        want_write = _f_l(want_write, n_homes)
+        wval = _f_l(wval, n_homes)
     nop = jnp.int8(int(MsgType.NOP))
-    R, L = st.hreq_pending.shape
+    R, L = st.hreq_pending.shape[-2:]
     msg_count, payload_msgs = st.msg_count, st.payload_msgs
     lines = jnp.arange(L)
     rids = jnp.arange(R)
@@ -189,7 +321,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # accumulate new home-side wants.
     want_read = st.want_read | want_read
     want_write = st.want_write | want_write
-    wv = jnp.where((want_write & ~st.want_write)[:, None], wval,
+    wv = jnp.where((want_write & ~st.want_write)[..., None], wval,
                    st.want_wval)
 
     # ---- 1. time advances on all channels --------------------------------
@@ -216,7 +348,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     pop_vol = ready_req & is_vol
     dstate = dmn.absorb(
         tables_mn, dstate, pop_vol,
-        jnp.full((R, L), int(MnAbsorb.VOL_I), jnp.int8),
+        jnp.full(pop_vol.shape, int(MnAbsorb.VOL_I), jnp.int8),
         ch_req.dirty, ch_req.payload)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, pop_vol,
                                      ch_req.msg, ch_req.dirty)
@@ -228,15 +360,15 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # fan-out invalidation could cross the previous requester's grant (the
     # delivered response would resurrect a sharer the directory just wrote
     # off).  Per-line serialization, as in the 2-node engine's step 6/7.
-    resp_in_flight = (ch_resp.msg != nop).any(axis=0)
-    line_free = (st.txn_msg == nop) & ~(hreq_pending != nop).any(axis=0) & \
-        ~resp_in_flight
+    resp_in_flight = (ch_resp.msg != nop).any(axis=-2)
+    line_free = (st.txn_msg == nop) & \
+        ~(hreq_pending != nop).any(axis=-2) & ~resp_in_flight
     # The home is arbitration participant R: an outstanding want competes
     # for the line's transaction slot like any remote request, so it
     # bounded-waits under sustained streaming instead of waiting for the
     # line to drain (the pre-fix unbounded starvation).
     home_ready = want_read | want_write
-    any_req = req_ready.any(axis=0) | home_ready
+    any_req = req_ready.any(axis=-2) | home_ready
     # Rotating priority (the ROADMAP starvation fix): the per-line pointer
     # ``arb_rr`` names the highest-priority participant; each accepted
     # request advances it PAST the winner, so a persistently-ready
@@ -246,23 +378,37 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # align with the rotation period and park the same priority order at
     # every free instant — the pointer rotates per GRANT, which cannot
     # alias.)
-    prio = (jnp.arange(R + 1)[:, None] - st.arb_rr[None, :]) % (R + 1)
-    ready_all = jnp.concatenate([req_ready, home_ready[None, :]], axis=0)
-    winner = jnp.argmin(jnp.where(ready_all, prio, R + 1), axis=0)
+    prio = (jnp.arange(R + 1)[:, None] - st.arb_rr[..., None, :]) % (R + 1)
+    ready_all = jnp.concatenate([req_ready, home_ready[..., None, :]],
+                                axis=-2)
+    winner = jnp.argmin(jnp.where(ready_all, prio, R + 1), axis=-2)
     accept_line = any_req & line_free
+    if home_bw:
+        # Directory-slice pipeline bandwidth: each home parks at most
+        # ``home_bw`` NEW transactions per step (in-flight ones proceed
+        # unthrottled — this caps ACCEPTANCE, so it only delays, never
+        # changes, the per-line serialization the bisimulation pins).
+        # Priority rotates its origin line every step; under a fixed
+        # cumsum order a saturated low line range would starve the tail.
+        off = st.step_no % L
+        pos = (lines + off) % L
+        rolled = jnp.take(accept_line, pos, axis=-1).astype(jnp.int32)
+        rank = jnp.take(jnp.cumsum(rolled, axis=-1) - rolled,
+                        (lines - off) % L, axis=-1)
+        accept_line = accept_line & (rank < home_bw)
     home_win = accept_line & (winner == R)
     arb_rr = jnp.where(accept_line, (winner + 1) % (R + 1), st.arb_rr)
     win_node = jnp.minimum(winner, R - 1)
     win_msg = jnp.where(home_win, jnp.int8(HOME_TXN),
-                        ch_req.msg[win_node, lines])
-    pop_req = (accept_line & ~home_win)[None, :] & \
-        (rids[:, None] == winner[None, :])
+                        dmn._take_remote(ch_req.msg, win_node))
+    pop_req = (accept_line & ~home_win)[..., None, :] & \
+        (rids[:, None] == winner[..., None, :])
     ch_req = _pop(ch_req, pop_vol | (pop_req & req_ready))
     txn_msg = jnp.where(accept_line, win_msg, st.txn_msg)
     txn_node = jnp.where(accept_line, winner, st.txn_node)
     msg_count, payload_msgs = _count(
         msg_count, payload_msgs, accept_line & ~home_win, win_msg,
-        jnp.zeros((L,), bool))
+        jnp.zeros(accept_line.shape, bool))
 
     # ---- 5. fan-out: emit one HOME_DOWNGRADE_* per conflicting sharer ----
     active_txn = txn_msg != nop
@@ -273,7 +419,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     node_c = jnp.minimum(txn_node, R - 1)
     # an UPGRADE whose requester was concurrently invalidated is doomed to
     # a NACK — suppress its fan-out so the new owner keeps the line.
-    req_view_now = dstate.view[node_c, lines].astype(jnp.int32)
+    req_view_now = dmn._take_remote(dstate.view, node_c).astype(jnp.int32)
     doomed = active_txn & (txn_msg == int(MsgType.REQ_UPGRADE)) & \
         (req_view_now != int(RemoteView.S))
     needed_r = dmn.needed_downgrades(dstate,
@@ -283,10 +429,10 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # recall a dirty owner to S, writes invalidate every sharer.
     needed_h = dmn.home_needed_downgrades(dstate, want_read & is_home_txn,
                                           want_write & is_home_txn)
-    needed = jnp.where(is_home_txn[None, :], needed_h, needed_r)
+    needed = jnp.where(is_home_txn[..., None, :], needed_h, needed_r)
     send_h = (needed != nop) & (hreq_pending == nop)
     ch_hreq, acc_h = tp.submit(ch_hreq, tp.CLASS_HOME_REQ, send_h, needed,
-                               jnp.zeros((R, L), bool),
+                               jnp.zeros(send_h.shape, bool),
                                jnp.zeros_like(st.ch_hreq.payload), credits,
                                shared=hreq_shared)
     hreq_pending = jnp.where(acc_h, needed, hreq_pending)
@@ -294,15 +440,15 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # ---- 6. grant parked requests whose preconditions now hold -----------
     in_flight_vol = ((ch_req.msg == int(MsgType.VOL_DOWNGRADE_I)) |
                      (ch_req.msg == int(MsgType.VOL_DOWNGRADE_S))
-                     ).any(axis=0)
-    in_flight_h = (ch_hreq.msg != nop).any(axis=0) | \
-                  (ch_hresp.msg != nop).any(axis=0)
+                     ).any(axis=-2)
+    in_flight_h = (ch_hreq.msg != nop).any(axis=-2) | \
+                  (ch_hresp.msg != nop).any(axis=-2)
     # `needed` must be EMPTY, not merely pending-free: a fan-out submission
     # refused for credit leaves hreq_pending == NOP with the sharer's view
     # intact — granting then would hand out exclusivity while the line is
     # still shared.  (Home transactions complete under the same guard.)
-    complete = active_txn & ~(needed != nop).any(axis=0) & \
-        ~(hreq_pending != nop).any(axis=0) & \
+    complete = active_txn & ~(needed != nop).any(axis=-2) & \
+        ~(hreq_pending != nop).any(axis=-2) & \
         ~in_flight_vol & ~in_flight_h
     complete_r = complete & ~is_home_txn
     dstate, resp, resp_pay = dmn.grant(tables_mn, dstate, complete_r,
@@ -312,18 +458,20 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # tables — no message leaves the home.
     complete_h = complete & is_home_txn
     hread_done = complete_h & want_read
-    hread_val = jnp.where(hread_done[:, None], dmn.home_value(dstate), 0)
+    hread_val = jnp.where(hread_done[..., None], dmn.home_value(dstate), 0)
     dstate = dmn.home_apply_write(dstate, complete_h & want_write, wv)
     want_read2 = want_read & ~complete_h
     want_write2 = want_write & ~complete_h
     txn_msg = jnp.where(complete, nop, txn_msg)
-    send_resp = (rids[:, None] == txn_node[None, :]) & \
-        (resp != nop)[None, :]
+    send_resp = (rids[:, None] == txn_node[..., None, :]) & \
+        (resp != nop)[..., None, :]
     ch_resp, _ = tp.submit(ch_resp, tp.CLASS_HOME_RESP, send_resp,
-                           jnp.broadcast_to(resp, (R, L)),
-                           jnp.zeros((R, L), bool),
-                           jnp.broadcast_to(resp_pay,
-                                            (R, L) + resp_pay.shape[1:]),
+                           jnp.broadcast_to(resp[..., None, :],
+                                            send_resp.shape),
+                           jnp.zeros(send_resp.shape, bool),
+                           jnp.broadcast_to(resp_pay[..., None, :, :],
+                                            send_resp.shape
+                                            + resp_pay.shape[-1:]),
                            credits, unbounded=True)
     carries = (resp == int(MsgType.RESP_DATA)) | \
               (resp == int(MsgType.RESP_DATA_DIRTY))
@@ -339,7 +487,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
                                    ch_resp_in.msg, ch_resp_in.payload,
                                    nack_holds=True)
     load_done = r_arr & was_load & ~_nack
-    load_val = jnp.where(load_done[:, :, None], agents.cache, 0)
+    load_val = jnp.where(load_done[..., None], agents.cache, 0)
 
     # ---- 8. home-initiated downgrades arrive at the remotes --------------
     ch_hreq_in = ch_hreq
@@ -349,7 +497,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
         tables, agents, h_arr, ch_hreq_in.msg)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, h_arr,
                                      ch_hreq_in.msg,
-                                     jnp.zeros((R, L), bool))
+                                     jnp.zeros(h_arr.shape, bool))
     ch_hresp, _ = tp.submit(ch_hresp, tp.CLASS_REMOTE_RESP, hresp != nop,
                             hresp, hresp_dirty, hresp_pay, credits,
                             unbounded=True)
@@ -379,7 +527,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
                                would_emit & (ch_req.msg == nop), credits)
     eff_op = jnp.where(would_emit & ~acc_pre, jnp.int8(int(LocalOp.NOP)),
                        eff_op)
-    eff_val = jnp.where(parked[:, :, None], agents.pending_val, op_val)
+    eff_val = jnp.where(parked[..., None], agents.pending_val, op_val)
     agents2, accepted, emit, req_dirty, req_pay = ag.submit(
         tables, agents, eff_op, eff_val)
     ch_req = tp.place(ch_req, emit != nop, emit, req_dirty, req_pay)
@@ -388,7 +536,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     hit = jnp.asarray(tables.loc_hit)[o, rs]
     load_hit = accepted & hit & (o == int(LocalOp.LOAD))
     load_done = load_done | load_hit
-    load_val = jnp.where(load_hit[:, :, None], agents2.cache, load_val)
+    load_val = jnp.where(load_hit[..., None], agents2.cache, load_val)
 
     new = EngineMNState(
         dir=dstate, agents=agents2,
@@ -400,21 +548,32 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
         step_no=st.step_no + 1,
     )
     caller_taken = accepted & ~parked
-    return new, StepMNOutput(load_done, load_val, hread_done, hread_val,
-                             caller_taken)
+    out = StepMNOutput(load_done, load_val, hread_done, hread_val,
+                       caller_taken)
+    if n_homes > 1:
+        new = _unfold_state_mn(new, flat_in)
+        out = StepMNOutput(
+            load_done=_u_rl(out.load_done), load_val=_u_rl(out.load_val),
+            hread_done=_u_l(out.hread_done),
+            hread_val=_u_l(out.hread_val),
+            accepted=_u_rl(out.accepted))
+    return new, out
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_step_mn(subset_name: str, hreq_shared: bool = False):
-    """One compiled step per (protocol subset, credit model), shared across
-    engine instances (shape changes retrace inside jax.jit's own cache).
+def _jitted_step_mn(subset_name: str, hreq_shared: bool = False,
+                    n_homes: int = 1, home_bw: int = 0):
+    """One compiled step per (protocol subset, credit model, home plan),
+    shared across engine instances (shape changes retrace inside
+    jax.jit's own cache).
 
     The incoming state is DONATED: the ``[R, L]`` channel/MSHR/directory
     slabs update in place instead of reallocating every step.  Callers must
     treat a stepped state as consumed (every in-repo driver rebinds)."""
     tables_mn = mn_tables(subset_name)
     return jax.jit(functools.partial(step_mn, tables_mn.base, tables_mn,
-                                     hreq_shared=hreq_shared),
+                                     hreq_shared=hreq_shared,
+                                     n_homes=n_homes, home_bw=home_bw),
                    donate_argnums=0)
 
 
@@ -432,12 +591,14 @@ def busy_flag_mn(st: EngineMNState) -> jnp.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_run_ops_mn(subset_name: str, hreq_shared: bool = False):
-    """One fused submit-and-drain program per (subset, credit model),
-    shared across EngineMN instances exactly like ``_jitted_step_mn``."""
+def _jitted_run_ops_mn(subset_name: str, hreq_shared: bool = False,
+                       n_homes: int = 1, home_bw: int = 0):
+    """One fused submit-and-drain program per (subset, credit model, home
+    plan), shared across EngineMN instances like ``_jitted_step_mn``."""
     tables_mn = mn_tables(subset_name)
     step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
-                                hreq_shared=hreq_shared)
+                                hreq_shared=hreq_shared,
+                                n_homes=n_homes, home_bw=home_bw)
 
     def run(st, opv, vv, delays, credits, max_rounds):
         L, B = st.dir.backing.shape
@@ -480,6 +641,13 @@ class EngineMN:
     credit pool across all R rows — the link model under which the R-1
     invalidation fan-out on one line's VC pair can actually stall (see
     docs/traffic.md, "Shared-credit link model").
+
+    MULTI-HOME (``n_homes > 1``): line ownership interleaves across homes
+    by address (``multinode.home_of``) and the step runs the home-major
+    ``[H, R, L/H]`` fold — each home gets its own arbitration/transaction/
+    MSHR plane and credit pools (see docs/multinode.md, "Sharding the
+    home").  ``home_bw`` caps new transactions accepted per home per step
+    (0 = unbounded), modeling the directory-slice pipeline bandwidth.
     """
 
     def __init__(self, backing: jnp.ndarray, n_remotes: int,
@@ -487,7 +655,8 @@ class EngineMN:
                  delays: Optional[np.ndarray] = None,
                  credits: Optional[np.ndarray] = None,
                  subset: Optional[ProtocolSubset] = None,
-                 shared_credits: bool = False):
+                 shared_credits: bool = False,
+                 n_homes: int = 1, home_bw: int = 0):
         assert 1 <= n_remotes <= MAX_REMOTES, \
             f"EWF v2 carries 6-bit node ids (n_remotes={n_remotes})"
         self.n_remotes = n_remotes
@@ -499,11 +668,19 @@ class EngineMN:
         self.tables_mn = bake_mn(subset)
         self.shared_credits = shared_credits
         self.n_lines, self.block = backing.shape
+        assert n_homes >= 1 and self.n_lines % n_homes == 0, \
+            f"n_homes={n_homes} must divide n_lines={self.n_lines} " \
+            f"(address-interleaved fold reshapes the line axis)"
+        assert home_bw >= 0, \
+            f"home_bw={home_bw} must be >= 0 (0 = unbounded acceptance)"
+        self.n_homes = n_homes
+        self.home_bw = home_bw
         self.delays = jnp.asarray(
             delays if delays is not None else tp.DEFAULT_DELAYS)
         self.credits = jnp.asarray(
             credits if credits is not None else tp.DEFAULT_CREDITS)
-        self._step = _jitted_step_mn(subset.name, shared_credits)
+        self._step = _jitted_step_mn(subset.name, shared_credits,
+                                     n_homes, home_bw)
         self._backing = backing
 
     def init(self) -> EngineMNState:
@@ -531,13 +708,27 @@ class EngineMN:
         return self._step(st, op, op_val, want_read, want_write, wval,
                           self.delays, self.credits)
 
-    def drain(self, st: EngineMNState, max_steps: int = 128
-              ) -> EngineMNState:
-        """Run empty steps until every transaction retires."""
+    def drain(self, st: EngineMNState, max_steps: int = 128,
+              strict: bool = True) -> EngineMNState:
+        """Run empty steps until every transaction retires.
+
+        Raises ``RuntimeError`` if the engine is still busy after
+        ``max_steps`` — a contended R=64 line set can legitimately need
+        more than the default budget, and silently returning a
+        non-quiescent state poisons everything downstream (callers read
+        values out of half-finished transactions).  ``strict=False``
+        restores the old return-what-we-have behavior for callers that
+        poll ``quiescent`` themselves."""
         for _ in range(max_steps):
             if self.quiescent(st):
-                break
+                return st
             st, _ = self.step(st)
+        if not self.quiescent(st) and strict:
+            raise RuntimeError(
+                f"EngineMN.drain: engine still busy after {max_steps} "
+                f"steps (R={self.n_remotes}, L={self.n_lines}, "
+                f"H={self.n_homes}) — raise max_steps or pass "
+                f"strict=False to poll quiescent() yourself")
         return st
 
     def quiescent(self, st: EngineMNState) -> bool:
@@ -551,6 +742,7 @@ class EngineMN:
         while_loop — see ``Engine.run_ops``.  Returns (state, done[L],
         vals[L,B], rounds, still_busy) with done/vals reduced over the
         remote axis (at most one remote acts per line per call)."""
-        return _jitted_run_ops_mn(self.subset.name, self.shared_credits)(
+        return _jitted_run_ops_mn(self.subset.name, self.shared_credits,
+                                  self.n_homes, self.home_bw)(
             st, opv, op_val, self.delays, self.credits,
             jnp.asarray(max_rounds, jnp.int32))

@@ -29,6 +29,22 @@ from .states import HomeState as H
 from .states import RemoteState as R
 
 
+def home_of(line, n_homes: int):
+    """Address-interleaved home assignment: ``line % n_homes``.
+
+    The canonical directory-fabric interleaving (BlackParrot/BedRock,
+    classic full-map NUMA directories): consecutive lines round-robin
+    across homes, so any contiguous working set spreads evenly.  Works on
+    python ints and on numpy/JAX integer arrays alike — the engine and the
+    oracle share this one routing function.
+    """
+    return line % n_homes
+
+
+#: sentinel distinguishing "no expected value" from an op returning None.
+_NO_VALUE = object()
+
+
 class MultiNodeRef:
     """Atomic reference model: 1 home + ``n_remotes`` caching agents.
 
@@ -40,12 +56,21 @@ class MultiNodeRef:
     home: a ``stateless_home`` subset keeps no per-line state, so
     home-side writes are only legal while no remote caches the line.
     The protocol mode (MESI/MOESI) follows the subset's base tables.
+
+    MULTI-HOME AWARE: with ``n_homes > 1`` the oracle ALSO runs one shard
+    sub-oracle per home (holding the lines ``home_of`` interleaves there)
+    in lockstep with the flat model, asserting message-sequence, return-
+    value and per-line state agreement after every op — the executable
+    proof that sharding the home plane by address is semantics-invariant,
+    which is what the multi-home engine's bisimulation tests lean on.
     """
 
     def __init__(self, n_lines: int, n_remotes: int = 3, moesi: bool = True,
-                 subset: Optional[Union[str, ProtocolSubset]] = None):
+                 subset: Optional[Union[str, ProtocolSubset]] = None,
+                 n_homes: int = 1):
         assert 1 <= n_remotes <= MAX_NODE + 1, \
             "EWF v2 carries 6-bit node ids"
+        assert n_homes >= 1, n_homes
         self.n = n_lines
         self.r = n_remotes
         if subset is not None and isinstance(subset, str):
@@ -63,6 +88,20 @@ class MultiNodeRef:
             [None] * n_lines for _ in range(n_remotes)]
         self._truth = [0] * n_lines
         self.trace: List[Tuple[str, int, int]] = []  # (msg, node, line)
+        #: MULTI-HOME mode (``n_homes > 1``): one shard sub-oracle per
+        #: home, holding exactly the lines ``home_of`` maps there, run in
+        #: LOCKSTEP with the flat model — every public op replays on the
+        #: owning shard and the mirror asserts message-for-message and
+        #: state-for-state agreement, so a passing run IS an executable
+        #: proof that address interleaving is semantics-invariant.
+        self.n_homes = n_homes
+        self._shards: Optional[List["MultiNodeRef"]] = None
+        if n_homes > 1:
+            self._shards = [
+                MultiNodeRef(len(range(h, n_lines, n_homes)),
+                             n_remotes=n_remotes, moesi=moesi,
+                             subset=subset)
+                for h in range(n_homes)]
 
     # -- helpers -----------------------------------------------------------
 
@@ -135,9 +174,89 @@ class MultiNodeRef:
             raise AssertionError(
                 f"op {op} outside subset '{self.subset.name}' guarantee")
 
+    # -- the lockstep shard mirror -------------------------------------------
+
+    def _mirror(self, line: int, mark: int, fn, expect=_NO_VALUE) -> None:
+        """Replay the op that just ran on the flat model onto the owning
+        home's shard sub-oracle and assert full agreement.
+
+        ``mark`` is the flat trace length BEFORE the op; ``fn(shard,
+        local_line)`` applies the same op shard-side.  The shard's new
+        messages (translated back to global line ids) must equal the flat
+        model's, its return value must match ``expect``, and the line's
+        entire state (directory + every remote) must coincide."""
+        if not self._shards:
+            return
+        h = home_of(line, self.n_homes)
+        loc = line // self.n_homes
+        shard = self._shards[h]
+        smark = len(shard.trace)
+        got = fn(shard, loc)
+        if expect is not _NO_VALUE:
+            assert got == expect, (
+                f"home shard {h} returned {got!r} on line {line}, "
+                f"flat model returned {expect!r}")
+        sent = [(m, n, l * self.n_homes + h)
+                for m, n, l in shard.trace[smark:]]
+        assert sent == self.trace[mark:], (
+            f"home shard {h} message sequence diverged on line {line}: "
+            f"shard {sent} vs flat {self.trace[mark:]}")
+        self._assert_shard_line(shard, h, line)
+
+    def _assert_shard_line(self, shard: "MultiNodeRef", h: int,
+                           line: int) -> None:
+        loc = line // self.n_homes
+        ctx = f"home shard {h}, line {line}"
+        assert shard.home_state[loc] == self.home_state[line], ctx
+        assert shard.home_buf[loc] == self.home_buf[line], ctx
+        assert shard.backing[loc] == self.backing[line], ctx
+        assert shard._truth[loc] == self._truth[line], ctx
+        for i in range(self.r):
+            assert shard.remote_state[i][loc] == \
+                self.remote_state[i][line], f"{ctx}, remote {i}"
+            assert shard.remote_cache[i][loc] == \
+                self.remote_cache[i][line], f"{ctx}, remote {i}"
+
+    def per_home_messages(self) -> Dict[int, int]:
+        """Message count by owning home — the load-balance view of the
+        trace (address interleaving spreads a contiguous working set)."""
+        out = {h: 0 for h in range(self.n_homes)}
+        for _, _, line in self.trace:
+            out[home_of(line, self.n_homes)] += 1
+        return out
+
     # -- remote-initiated transactions ---------------------------------------
 
     def load(self, node: int, line: int) -> int:
+        mark = len(self.trace)
+        val = self._load(node, line)
+        self._mirror(line, mark, lambda s, loc: s.load(node, loc),
+                     expect=val)
+        return val
+
+    def store(self, node: int, line: int, value) -> None:
+        mark = len(self.trace)
+        self._store(node, line, value)
+        self._mirror(line, mark, lambda s, loc: s.store(node, loc, value))
+
+    def evict(self, node: int, line: int) -> None:
+        mark = len(self.trace)
+        self._evict(node, line)
+        self._mirror(line, mark, lambda s, loc: s.evict(node, loc))
+
+    def home_read(self, line: int) -> int:
+        mark = len(self.trace)
+        val = self._home_read(line)
+        self._mirror(line, mark, lambda s, loc: s.home_read(loc),
+                     expect=val)
+        return val
+
+    def home_write(self, line: int, value) -> None:
+        mark = len(self.trace)
+        self._home_write(line, value)
+        self._mirror(line, mark, lambda s, loc: s.home_write(loc, value))
+
+    def _load(self, node: int, line: int) -> int:
         self._guard_op(int(LocalOp.LOAD))
         rs = self.remote_state[node][line]
         if rs != R.I:
@@ -161,7 +280,7 @@ class MultiNodeRef:
         self._check(line)
         return val
 
-    def store(self, node: int, line: int, value: int) -> None:
+    def _store(self, node: int, line: int, value) -> None:
         self._guard_op(int(LocalOp.STORE))
         rs = self.remote_state[node][line]
         if rs in (R.E, R.M):
@@ -187,7 +306,7 @@ class MultiNodeRef:
         self._truth[line] = value
         self._check(line)
 
-    def evict(self, node: int, line: int) -> None:
+    def _evict(self, node: int, line: int) -> None:
         self._guard_op(int(LocalOp.EVICT))
         rs = self.remote_state[node][line]
         if rs == R.I:
@@ -211,13 +330,13 @@ class MultiNodeRef:
 
     # -- home-initiated ------------------------------------------------------
 
-    def home_read(self, line: int) -> int:
+    def _home_read(self, line: int) -> int:
         self._recall_owner(line, to_shared=True)
         val = self._home_value(line)
         self._check(line)
         return val
 
-    def home_write(self, line: int, value: int) -> None:
+    def _home_write(self, line: int, value) -> None:
         if self.subset is not None and self.subset.stateless_home:
             # a stateless home tracks no sharers, so it cannot invalidate
             # them — writing while a remote caches the line would be
@@ -266,6 +385,13 @@ class MultiNodeRef:
     def check_all(self) -> None:
         for line in range(self.n):
             self._check(line)
+        if self._shards:
+            for shard in self._shards:
+                shard.check_all()
+            for line in range(self.n):
+                self._assert_shard_line(
+                    self._shards[home_of(line, self.n_homes)],
+                    home_of(line, self.n_homes), line)
 
     def invalidation_messages(self) -> int:
         """Count of fan-out invalidations in the trace — the scaling cost

@@ -107,9 +107,13 @@ def credit_accept(ch: Channel, msg_class: int, cand: jnp.ndarray,
     one-hot expansion.
 
     ``shared=True`` models a SHARED-credit link instead of per-initiator
-    credit pools: occupancy and candidate ranks reduce over ALL leading
-    axes (row-major order ranks candidates across rows), so one credit
-    budget covers the whole ``[R, L]`` slab.  This is the ROADMAP's
+    credit pools: occupancy and candidate ranks reduce over the LAST TWO
+    axes — the ``[initiators, lines]`` slab (row-major order ranks
+    candidates across rows), so one credit budget covers the whole
+    ``[R, L]`` plane.  Any further LEADING axes keep independent pools:
+    the multi-home engine's ``[H, R, L/H]`` layout gives each home slice
+    its own shared budget, since credit pools — like everything else in
+    the home plane — live at the directory slice.  This is the ROADMAP's
     shared-credit question for the home's R-1 invalidation fan-out — the
     per-row accounting gives the home R independent budgets, a real
     shared link would not.
@@ -120,12 +124,14 @@ def credit_accept(ch: Channel, msg_class: int, cand: jnp.ndarray,
     c_o = jnp.where(odd, cand, False).astype(jnp.int32)
     c_e = jnp.where(odd, False, cand).astype(jnp.int32)
     if shared and ch.msg.ndim > 1:
-        occ_o = jnp.where(odd, active, False).sum()
-        occ_e = jnp.where(odd, False, active).sum()
-        rank_o = (jnp.cumsum(c_o.reshape(-1)) - c_o.reshape(-1)
-                  ).reshape(cand.shape)
-        rank_e = (jnp.cumsum(c_e.reshape(-1)) - c_e.reshape(-1)
-                  ).reshape(cand.shape)
+        occ_o = jnp.where(odd, active, False).sum(
+            axis=(-2, -1), keepdims=True)
+        occ_e = jnp.where(odd, False, active).sum(
+            axis=(-2, -1), keepdims=True)
+        flat_o = c_o.reshape(c_o.shape[:-2] + (-1,))
+        flat_e = c_e.reshape(c_e.shape[:-2] + (-1,))
+        rank_o = (jnp.cumsum(flat_o, axis=-1) - flat_o).reshape(cand.shape)
+        rank_e = (jnp.cumsum(flat_e, axis=-1) - flat_e).reshape(cand.shape)
     else:
         occ_o = jnp.where(odd, active, False).sum(-1, keepdims=True)
         occ_e = jnp.where(odd, False, active).sum(-1, keepdims=True)

@@ -8,13 +8,14 @@ engine driver, and hardware-style perf counters (see docs/traffic.md).
     run = run_stream(eng, wl, steps=1024, width=2)   # issue width W=2
     print(summarize(run.counters, run.msg_count))
 """
-from .counters import (Counters, assert_counts_match, replay_reference,
-                       summarize, validate_run)
+from .counters import (Counters, RetirementTrace, acc_total,
+                       assert_counts_match, replay_reference, summarize,
+                       validate_run)
 from .driver import StreamRun, default_steps, run_stream
 from .workloads import WORKLOADS, Workload
 
 __all__ = [
-    "Counters", "StreamRun", "WORKLOADS", "Workload",
-    "assert_counts_match", "default_steps", "replay_reference",
-    "run_stream", "summarize", "validate_run",
+    "Counters", "RetirementTrace", "StreamRun", "WORKLOADS", "Workload",
+    "acc_total", "assert_counts_match", "default_steps",
+    "replay_reference", "run_stream", "summarize", "validate_run",
 ]

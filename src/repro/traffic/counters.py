@@ -42,16 +42,45 @@ N_LAT_BUCKETS = len(LAT_EDGES) + 1
 #: the four coherence channel classes, in Counters.occ_* order.
 CHANNELS = ("req", "resp", "hreq", "hresp")
 
+#: Occupancy accumulators fold up to R*L (65,536 at R=64/L=1024) per step,
+#: so a single int32 wraps after ~2^31 / 2^16 = 32,768 steps — BELOW the
+#: default step budget of a full R=64 stream (``default_steps(256, 64)`` =
+#: 35,904).  JAX's default x64-disabled mode silently downcasts an int64
+#: carry back to int32, so the fix is a hi/lo int32 PAIR: ``lo`` keeps the
+#: low ACC_SHIFT bits, every update moves the overflow bits into ``hi``.
+#: Exact up to 2^(31 + ACC_SHIFT) = 2^61 — per-step deltas must stay below
+#: 2^31 - 2^ACC_SHIFT, comfortably above any [R, L] slab this repo runs.
+ACC_SHIFT = 30
+ACC_MASK = (1 << ACC_SHIFT) - 1
+
+
+def acc_add(hi: jnp.ndarray, lo: jnp.ndarray, delta: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One exact hi/lo accumulator update (traced; int32 in, int32 out)."""
+    raw = lo + delta                     # < 2^ACC_SHIFT + 2^31-2^ACC_SHIFT
+    return hi + (raw >> ACC_SHIFT), raw & ACC_MASK
+
+
+def acc_total(hi, lo) -> np.ndarray:
+    """Host-side readout of a hi/lo pair as exact int64."""
+    return (np.asarray(hi, np.int64) << ACC_SHIFT) + np.asarray(lo, np.int64)
+
 
 class Counters(NamedTuple):
-    """Scan-carried telemetry (all int32, device-resident)."""
+    """Scan-carried telemetry (all int32, device-resident).
+
+    The per-step-summed accumulators (``occ_sum_*``, ``mshr_sum_*``) are
+    hi/lo int32 pairs — see ``acc_add``; read them out with ``acc_total``.
+    """
 
     lat_hist: jnp.ndarray   # [R, N_LAT_BUCKETS] retirement latency histo
     max_wait: jnp.ndarray   # [R] worst request wait observed (starvation)
     retired: jnp.ndarray    # [R] ops retired
-    occ_sum: jnp.ndarray    # [4] per-class channel occupancy, summed/step
+    occ_sum_hi: jnp.ndarray  # [4] per-class channel occupancy, summed/step
+    occ_sum_lo: jnp.ndarray  # [4] (hi/lo int32 pair, exact to 2^61)
     occ_peak: jnp.ndarray   # [4] per-class peak occupancy
-    mshr_sum: jnp.ndarray   # [] in-flight transactions (MSHRs), summed/step
+    mshr_sum_hi: jnp.ndarray  # [] in-flight transactions, summed/step
+    mshr_sum_lo: jnp.ndarray  # [] (hi/lo int32 pair)
     mshr_peak: jnp.ndarray  # [] peak in-flight transactions
     steps: jnp.ndarray      # [] steps folded (the full scan budget)
     active_steps: jnp.ndarray  # [] steps with traffic in flight — the
@@ -64,9 +93,11 @@ def make_counters(n_remotes: int) -> Counters:
         lat_hist=jnp.zeros((n_remotes, N_LAT_BUCKETS), jnp.int32),
         max_wait=jnp.zeros((n_remotes,), jnp.int32),
         retired=jnp.zeros((n_remotes,), jnp.int32),
-        occ_sum=jnp.zeros((4,), jnp.int32),
+        occ_sum_hi=jnp.zeros((4,), jnp.int32),
+        occ_sum_lo=jnp.zeros((4,), jnp.int32),
         occ_peak=jnp.zeros((4,), jnp.int32),
-        mshr_sum=jnp.zeros((), jnp.int32),
+        mshr_sum_hi=jnp.zeros((), jnp.int32),
+        mshr_sum_lo=jnp.zeros((), jnp.int32),
         mshr_peak=jnp.zeros((), jnp.int32),
         steps=jnp.zeros((), jnp.int32),
         active_steps=jnp.zeros((), jnp.int32),
@@ -104,13 +135,17 @@ def update_counters(ctr: Counters, st, *, retired: jnp.ndarray,
     # MSHR occupancy: transactions in flight across all remotes — the
     # x-axis of the issue-width occupancy/throughput curve.
     mshr = outstanding.sum().astype(jnp.int32)
+    occ_hi, occ_lo = acc_add(ctr.occ_sum_hi, ctr.occ_sum_lo, occ)
+    mshr_hi, mshr_lo = acc_add(ctr.mshr_sum_hi, ctr.mshr_sum_lo, mshr)
     return Counters(
         lat_hist=hist,
         max_wait=max_wait,
         retired=ctr.retired + retired.sum(axis=1).astype(jnp.int32),
-        occ_sum=ctr.occ_sum + occ,
+        occ_sum_hi=occ_hi,
+        occ_sum_lo=occ_lo,
         occ_peak=jnp.maximum(ctr.occ_peak, occ),
-        mshr_sum=ctr.mshr_sum + mshr,
+        mshr_sum_hi=mshr_hi,
+        mshr_sum_lo=mshr_lo,
         mshr_peak=jnp.maximum(ctr.mshr_peak, mshr),
         steps=ctr.steps + 1,
         active_steps=ctr.active_steps + step_active.astype(jnp.int32),
@@ -149,12 +184,13 @@ def summarize(ctr: Counters, msg_count: np.ndarray,
         "inval_per_excl_grant": inval / max(excl, 1),
         "nacks": nacks,
         "mean_occupancy": {
-            ch: float(np.asarray(ctr.occ_sum)[i]) / active
+            ch: float(acc_total(ctr.occ_sum_hi, ctr.occ_sum_lo)[i]) / active
             for i, ch in enumerate(CHANNELS)},
         "peak_occupancy": {
             ch: int(np.asarray(ctr.occ_peak)[i])
             for i, ch in enumerate(CHANNELS)},
-        "mean_mshr_occupancy": float(ctr.mshr_sum) / active,
+        "mean_mshr_occupancy":
+            float(acc_total(ctr.mshr_sum_hi, ctr.mshr_sum_lo)) / active,
         "peak_mshr_occupancy": int(ctr.mshr_peak),
         "payload_msgs": int(payload_msgs),
         "messages": {MsgType(i).name: int(mc[i]) for i in range(16)
@@ -167,34 +203,60 @@ def summarize(ctr: Counters, msg_count: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def replay_reference(trace: Tuple[np.ndarray, np.ndarray, np.ndarray],
-                     moesi: bool = True,
-                     subset=None) -> Tuple[MultiNodeRef, np.ndarray]:
+class RetirementTrace(NamedTuple):
+    """Compact retirement linearization of a streamed run.
+
+    One int32 per workload slot — ``retire_step[t, r]`` is the engine step
+    at which remote ``r``'s ``t``-th stream op retired (-1 = never
+    retired).  Op/line/value ride along straight from the workload arrays,
+    so the whole record is O(T * R): the earlier dense per-step encoding
+    (three ``[S, R, L]`` slabs) hit ~14 GB at R=64/L=1024 with the default
+    step budget, five orders of magnitude more than the retirements it
+    described.
+    """
+
+    retire_step: np.ndarray  # [T, R] int32, -1 = never retired
+    op: np.ndarray           # [T, R] int8  LocalOp (from the workload)
+    line: np.ndarray         # [T, R] int32 (from the workload)
+    value: np.ndarray        # [T, R]       (from the workload)
+    n_lines: int             # oracle sizing (lines no op touched still
+    #                          need directory slots)
+
+
+def replay_reference(trace: RetirementTrace, moesi: bool = True,
+                     subset=None, n_homes: int = 1
+                     ) -> Tuple[MultiNodeRef, np.ndarray]:
     """Replay a streaming run's retirement linearization atomically.
 
-    ``trace`` is the driver's (retired [S,R,L], op [S,R,L], value [S,R,L])
-    — R and L come from its shape.  Per line the engine serializes
-    transactions, so retirement order IS a legal atomic order; same-step
-    retirements on one line can only be reads (an exclusive grant
-    excludes concurrent sharers), which commute.  Returns the oracle and
+    Retired slots replay in (retire_step, remote, program-order) order:
+    per line the engine serializes transactions, so retirement order IS a
+    legal atomic order; same-step retirements on one line can only be
+    reads (an exclusive grant excludes concurrent sharers), which commute
+    — any tie-break within a step is equivalent.  Returns the oracle and
     its per-message-type counts [16].  ``subset`` puts the oracle in its
     subset-aware mode (the replay then also PROVES the retired stream
-    respected the workload guarantee — an out-of-subset op raises).
+    respected the workload guarantee — an out-of-subset op raises);
+    ``n_homes`` replays into the multi-home oracle, whose lockstep shard
+    mirror extends counter validation into a sharding-invariance proof.
     """
-    retired, ops, vals = (np.asarray(a) for a in trace)
-    _, n_remotes, n_lines = retired.shape
-    ref = MultiNodeRef(n_lines, n_remotes=n_remotes, moesi=moesi,
-                       subset=subset)
-    for t in range(retired.shape[0]):
-        rr, ll = np.nonzero(retired[t])
-        for r, l in zip(rr, ll):
-            op = int(ops[t, r, l])
-            if op == int(LocalOp.LOAD):
-                ref.load(int(r), int(l))
-            elif op == int(LocalOp.STORE):
-                ref.store(int(r), int(l), float(vals[t, r, l]))
-            elif op == int(LocalOp.EVICT):
-                ref.evict(int(r), int(l))
+    rs = np.asarray(trace.retire_step)
+    ops = np.asarray(trace.op)
+    lines = np.asarray(trace.line)
+    vals = np.asarray(trace.value)
+    ref = MultiNodeRef(trace.n_lines, n_remotes=rs.shape[1], moesi=moesi,
+                       subset=subset, n_homes=n_homes)
+    # one vectorized pass replaces the old per-step nonzero scan: gather
+    # the retired slots, order them by (step, remote, t).
+    tt, rr = np.nonzero(rs >= 0)
+    order = np.lexsort((tt, rr, rs[tt, rr]))
+    for t, r in zip(tt[order], rr[order]):
+        op = int(ops[t, r])
+        if op == int(LocalOp.LOAD):
+            ref.load(int(r), int(lines[t, r]))
+        elif op == int(LocalOp.STORE):
+            ref.store(int(r), int(lines[t, r]), float(vals[t, r]))
+        elif op == int(LocalOp.EVICT):
+            ref.evict(int(r), int(lines[t, r]))
     counts = np.zeros(16, np.int64)
     for name, _, _ in ref.trace:
         counts[int(MsgType[name])] += 1
@@ -218,15 +280,19 @@ def assert_counts_match(msg_count: np.ndarray, ref_counts: np.ndarray
             for i in mism))
 
 
-def validate_run(run, moesi: bool = True, subset=None) -> MultiNodeRef:
+def validate_run(run, moesi: bool = True, subset=None,
+                 n_homes: int = 1) -> MultiNodeRef:
     """Full validation of a traced ``StreamRun``: the run completed, and
     its counters match the atomic oracle at quiescence.  Returns the
     replayed oracle (callers can go on to compare final states).
     ``subset`` validates against the subset-aware oracle — the per-
-    lattice-member acceptance path of the protocol-parametric engine."""
+    lattice-member acceptance path of the protocol-parametric engine;
+    ``n_homes`` matches the engine's home count (the multi-home oracle's
+    shard mirror then certifies the interleaving too)."""
     assert run.completed, "stream did not drain within the step budget"
     assert run.trace is not None, "run_stream(collect_trace=True) required"
-    ref, counts = replay_reference(run.trace, moesi, subset=subset)
+    ref, counts = replay_reference(run.trace, moesi, subset=subset,
+                                   n_homes=n_homes)
     ref.check_all()
     assert_counts_match(run.msg_count, counts)
     return ref

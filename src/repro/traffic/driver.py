@@ -36,7 +36,7 @@ the atomic oracle), so counter exactness holds at every width.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +45,8 @@ import numpy as np
 from ..core.engine_mn import EngineMN, EngineMNState, busy_flag_mn, step_mn
 from ..core.messages import MsgType
 from ..core.protocol import LocalOp, mn_tables
-from .counters import Counters, make_counters, update_counters
+from .counters import (Counters, RetirementTrace, make_counters,
+                       update_counters)
 from .workloads import Workload
 
 # the issue window scatters ops/values ADDITIVELY into the dense [R, L]
@@ -61,8 +62,12 @@ class _Carry(NamedTuple):
     slot_born: jnp.ndarray    # [R, W] int32: step the slot entered the window
     outstanding: jnp.ndarray  # [R, L] bool: accepted, not yet retired
     born: jnp.ndarray         # [R, L] int32: first-attempt step per txn
-    out_op: jnp.ndarray       # [R, L] int8: LocalOp of the in-flight txn
-    out_val: jnp.ndarray      # [R, L]: store value of the in-flight txn
+    out_idx: jnp.ndarray      # [R, L] int32: stream index of in-flight txn
+    #                           (trace mode; [0] placeholder otherwise)
+    retire: jnp.ndarray       # [T+1, R] int32: retirement step per stream
+    #                           slot, -1 = in flight; row T is a scratch
+    #                           row non-retiring lanes scatter into (trace
+    #                           mode; [0] placeholder otherwise)
     ctr: Counters
 
 
@@ -85,21 +90,23 @@ class StreamRun(NamedTuple):
     counters: Counters
     msg_count: np.ndarray     # [16] int64: delivered messages, this run
     payload_msgs: int         # messages that carried line data, this run
-    trace: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+    trace: Optional[RetirementTrace]
     completed: bool           # stream fully consumed AND engine quiescent
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
-                   hreq_shared: bool = False):
+                   hreq_shared: bool = False, n_homes: int = 1,
+                   home_bw: int = 0):
     """One fused streaming program per (subset, trace?, width, credit
-    model) tuple, shared across engines; shapes (R, L, T, total steps)
-    retrace inside jit's cache.  The engine state is donated — the
-    streaming scan is the hot path, and per-step reallocation of the
-    ``[R, L]`` slabs is pure overhead."""
+    model, home plane) tuple, shared across engines; shapes (R, L, T,
+    total steps) retrace inside jit's cache.  The engine state is donated
+    — the streaming scan is the hot path, and per-step reallocation of
+    the ``[R, L]`` slabs is pure overhead."""
     tables_mn = mn_tables(subset_name)
     step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
-                                hreq_shared=hreq_shared)
+                                hreq_shared=hreq_shared, n_homes=n_homes,
+                                home_bw=home_bw)
     nop_op = jnp.int8(int(LocalOp.NOP))
     W = width
 
@@ -151,14 +158,24 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             newly = out.accepted                       # [R, L]
             outstanding = c.outstanding | newly
             born = jnp.where(newly, born_d, c.born)
-            out_op = jnp.where(newly, opd, c.out_op)
-            out_val = jnp.where(newly, vald[:, :, 0], c.out_val)
             # retired once the MSHR is clear again: hits the same step,
             # misses when the grant (or NACK-retry grant) lands.
             mshr_free = (st2.agents.pending_op == int(LocalOp.NOP)) & \
                         (st2.agents.pending_req == int(MsgType.NOP))
             retired = outstanding & mshr_free
             outstanding = outstanding & ~retired
+
+            # ---- compact retirement record (trace mode) -----------------
+            out_idx, retire = c.out_idx, c.retire
+            if collect_trace:
+                # stream index of each in-flight transaction; retiring
+                # lanes stamp the step into their slot's row, everything
+                # else lands in the scratch row T (sliced off on readout).
+                idx_d = jnp.zeros((R, L), jnp.int32).at[
+                    ar[:, None], s_line].add(jnp.where(can, idxc, 0))
+                out_idx = jnp.where(newly, idx_d, c.out_idx)
+                row = jnp.where(retired, out_idx, T)         # [R, L]
+                retire = c.retire.at[row, ar[:, None]].set(t)
 
             # ---- slide each window past its issued prefix ---------------
             slot_acc = can & newly[ar[:, None], s_line]      # [R, W]
@@ -187,17 +204,18 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                                   head_wait=head_wait,
                                   step_active=step_active)
 
-            ys = None
-            if collect_trace:
-                ys = (retired,
-                      jnp.where(retired, out_op, nop_op),
-                      jnp.where(retired, out_val, 0))
             c2 = _Carry(st=st2, cursor=cursor, issued=issued2,
                         slot_born=slot_born,
-                        outstanding=outstanding, born=born, out_op=out_op,
-                        out_val=out_val, ctr=ctr)
-            return c2, ys
+                        outstanding=outstanding, born=born,
+                        out_idx=out_idx, retire=retire, ctr=ctr)
+            return c2, None
 
+        if collect_trace:
+            out_idx0 = jnp.zeros((R, L), jnp.int32)
+            retire0 = jnp.full((T + 1, R), -1, jnp.int32)
+        else:   # zero-size placeholders: no per-step trace cost at all
+            out_idx0 = jnp.zeros((0,), jnp.int32)
+            retire0 = jnp.zeros((0,), jnp.int32)
         carry0 = _Carry(
             st=st,
             cursor=jnp.zeros((R,), jnp.int32),
@@ -205,14 +223,14 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             slot_born=jnp.zeros((R, W), jnp.int32),
             outstanding=jnp.zeros((R, L), bool),
             born=jnp.zeros((R, L), jnp.int32),
-            out_op=jnp.zeros((R, L), jnp.int8),
-            out_val=jnp.zeros((R, L), dt),
+            out_idx=out_idx0,
+            retire=retire0,
             ctr=make_counters(R),
         )
-        carry, trace = jax.lax.scan(body, carry0, tsteps)
+        carry, _ = jax.lax.scan(body, carry0, tsteps)
         completed = (carry.cursor >= T).all() & \
             ~carry.outstanding.any() & ~busy_flag_mn(carry.st)
-        return carry, trace, completed
+        return carry, completed
 
     return jax.jit(run, donate_argnums=0)
 
@@ -250,17 +268,28 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
     base_msgs = np.asarray(st0.msg_count, np.int64)
     base_payload = int(st0.payload_msgs)
     fn = _jitted_stream(engine.subset.name, collect_trace, int(width),
-                        engine.shared_credits)
-    carry, trace, completed = fn(st0, wl.op, wl.line, wl.value,
-                                 jnp.arange(steps, dtype=jnp.int32),
-                                 engine.delays, engine.credits)
+                        engine.shared_credits, engine.n_homes,
+                        engine.home_bw)
+    carry, completed = fn(st0, wl.op, wl.line, wl.value,
+                          jnp.arange(steps, dtype=jnp.int32),
+                          engine.delays, engine.credits)
+    trace = None
     if collect_trace:
-        trace = tuple(np.asarray(a) for a in trace)
+        # compact O(T * R) record: the scratch row the non-retiring lanes
+        # scatter into is sliced off; op/line/value come straight from
+        # the workload, which the retire_step array indexes 1:1.
+        trace = RetirementTrace(
+            retire_step=np.asarray(carry.retire)[:-1],
+            op=np.asarray(wl.op),
+            line=np.asarray(wl.line),
+            value=np.asarray(wl.value),
+            n_lines=engine.n_lines,
+        )
     return StreamRun(
         state=carry.st,
         counters=jax.device_get(carry.ctr),
         msg_count=np.asarray(carry.st.msg_count, np.int64) - base_msgs,
         payload_msgs=int(carry.st.payload_msgs) - base_payload,
-        trace=trace if collect_trace else None,
+        trace=trace,
         completed=bool(completed),
     )

@@ -17,7 +17,11 @@ engine runs (read-only subsets require a store-free generator —
 sequential/strided/zipfian, driven with ``store_frac=0``); ``--credits``
 overrides the uniform per-VC credit and ``--shared-credits`` switches the
 home-request VC to one shared pool across remotes (the ROADMAP
-shared-credit link model — see docs/traffic.md).
+shared-credit link model — see docs/traffic.md); ``--homes`` shards the
+directory across H address-interleaved homes (``home_of(line) = line %
+homes``) and ``--home-bw`` caps how many NEW transactions each home
+accepts per step (0 = unbounded) — together they expose the home-
+serialization bottleneck multi-home sharding relieves.
 """
 from __future__ import annotations
 
@@ -33,7 +37,8 @@ STORE_FREE_CAPABLE = ("sequential", "strided", "zipfian")
 
 
 def _build(n_lines: int, n_remotes: int, subset, credits=None,
-           shared_credits: bool = False, block: int = 2):
+           shared_credits: bool = False, block: int = 2,
+           n_homes: int = 1, home_bw: int = 0):
     import numpy as np
     from repro.core.engine_mn import EngineMN
     from repro.core.transport import N_VCS
@@ -41,13 +46,15 @@ def _build(n_lines: int, n_remotes: int, subset, credits=None,
                                                  np.int32)
     return EngineMN(jnp.zeros((n_lines, block), jnp.float32),
                     n_remotes=n_remotes, subset=subset, credits=cr,
-                    shared_credits=shared_credits)
+                    shared_credits=shared_credits, n_homes=n_homes,
+                    home_bw=home_bw)
 
 
 def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
           steps: int, seed: int, moesi: bool, validate: bool,
           width: int = 1, subset_name: str = "", credits=None,
-          shared_credits: bool = False):
+          shared_credits: bool = False, n_homes: int = 1,
+          home_bw: int = 0):
     from repro.core.protocol import ENHANCED_MESI, FULL_MOESI, SUBSETS, \
         LocalOp
     from repro.traffic import (WORKLOADS, run_stream, summarize,
@@ -61,7 +68,8 @@ def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
                 f"subset '{subset.name}' admits no stores; use a "
                 f"store-free generator ({', '.join(STORE_FREE_CAPABLE)})")
         kwargs["store_frac"] = 0.0
-    eng = _build(n_lines, n_remotes, subset, credits, shared_credits)
+    eng = _build(n_lines, n_remotes, subset, credits, shared_credits,
+                 n_homes=n_homes, home_bw=home_bw)
     wl = WORKLOADS[workload](jax.random.key(seed), ops, n_remotes, n_lines,
                              **kwargs)
     t0 = time.perf_counter()
@@ -69,12 +77,13 @@ def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
                      width=width)
     wall = time.perf_counter() - t0
     if validate:
-        validate_run(run, eng.moesi, subset=subset if subset_name else None)
+        validate_run(run, eng.moesi, subset=subset if subset_name else None,
+                     n_homes=n_homes)
     out = summarize(run.counters, run.msg_count, run.payload_msgs)
     out.update(workload=workload, n_remotes=n_remotes, n_lines=n_lines,
                completed=run.completed, wall_s=round(wall, 3),
                validated=bool(validate), width=width, subset=subset.name,
-               shared_credits=bool(shared_credits))
+               shared_credits=bool(shared_credits), homes=n_homes)
     return out
 
 
@@ -83,28 +92,37 @@ def smoke() -> int:
 
     Includes one WIDE case (zipfian, 8 remotes) so the flat-[R, L] engine
     path past the old 4-remote ceiling stays covered by CI, one W=2 case
-    keeping the multi-op issue window on the keep-green path, and one
+    keeping the multi-op issue window on the keep-green path, one
     READ_ONLY R=8 case keeping the protocol-parametric subset engine
-    validated against the subset-aware oracle."""
+    validated against the subset-aware oracle, and one H=2 multi-home
+    case keeping the address-interleaved home plane validated end-to-end.
+
+    Each case catches ANY Exception, not just AssertionError: a shape
+    error, a ValueError from the workload guard or a TypeError in the
+    engine used to escape the harness and abort the remaining cases with
+    a traceback instead of a per-case FAIL line and a nonzero exit."""
     from repro.traffic import WORKLOADS
-    cases = [(name, 2, 220, 1, "") for name in WORKLOADS]
-    cases.append(("zipfian", 8, 900, 1, ""))
-    cases.append(("zipfian", 4, 500, 2, ""))
-    cases.append(("zipfian", 8, 900, 1, "read_only"))
+    cases = [(name, 2, 220, 1, "", 1) for name in WORKLOADS]
+    cases.append(("zipfian", 8, 900, 1, "", 1))
+    cases.append(("zipfian", 4, 500, 2, "", 1))
+    cases.append(("zipfian", 8, 900, 1, "read_only", 1))
+    cases.append(("zipfian", 8, 900, 1, "", 2))
     failures = 0
-    for name, n_remotes, steps, width, subset in cases:
-        tag = f" {subset}" if subset else ""
+    for name, n_remotes, steps, width, subset, homes in cases:
+        tag = (f" {subset}" if subset else "") + \
+            (f" h{homes}" if homes > 1 else "")
         try:
             out = drive(name, n_remotes=n_remotes, n_lines=12, ops=20,
                         steps=steps, seed=7, moesi=True, validate=True,
-                        width=width, subset_name=subset)
+                        width=width, subset_name=subset, n_homes=homes)
             print(f"smoke {name} r{n_remotes} w{width}{tag}: OK "
                   f"ops={out['ops_retired']} "
                   f"max_wait={max(out['max_wait'])} "
                   f"msgs={sum(out['messages'].values())}")
-        except AssertionError as e:
+        except Exception as e:
             failures += 1
-            print(f"smoke {name} r{n_remotes} w{width}{tag}: FAIL {e}")
+            print(f"smoke {name} r{n_remotes} w{width}{tag}: "
+                  f"FAIL {type(e).__name__}: {e}")
     print("smoke:", "PASS" if not failures else f"{failures} FAILURES")
     return 1 if failures else 0
 
@@ -138,6 +156,14 @@ def main() -> None:
                     help="home-request VC uses ONE credit pool shared "
                          "across remotes (shared-credit link model) "
                          "instead of per-remote pools")
+    ap.add_argument("--homes", type=int, default=1,
+                    help="number of address-interleaved home directories "
+                         "(home_of(line) = line %% homes; must divide "
+                         "--lines; default 1)")
+    ap.add_argument("--home-bw", type=int, default=0,
+                    help="per-home per-step cap on NEW transaction "
+                         "acceptances (0 = unbounded) — the serialization "
+                         "bottleneck multi-home sharding relieves")
     ap.add_argument("--validate", action="store_true",
                     help="collect the retirement trace and replay it "
                          "against the MultiNodeRef oracle")
@@ -157,6 +183,14 @@ def main() -> None:
             ap.error(f"--subset must be one of {sorted(SUBSETS)}")
     if args.credits < 0:
         ap.error("--credits must be >= 0")
+    if args.homes < 1:
+        ap.error("--homes must be >= 1")
+    if args.lines % args.homes:
+        ap.error(f"--homes ({args.homes}) must divide --lines "
+                 f"({args.lines}) — address interleaving shards the line "
+                 f"space evenly")
+    if args.home_bw < 0:
+        ap.error("--home-bw must be >= 0")
     if args.smoke:
         raise SystemExit(smoke())
     from repro.traffic import default_steps
@@ -164,7 +198,8 @@ def main() -> None:
     out = drive(args.workload, args.remotes, args.lines, args.ops, steps,
                 args.seed, not args.mesi, args.validate, width=args.width,
                 subset_name=args.subset, credits=args.credits or None,
-                shared_credits=args.shared_credits)
+                shared_credits=args.shared_credits, n_homes=args.homes,
+                home_bw=args.home_bw)
     print(json.dumps(out, indent=1, default=str))
     if not out["completed"]:
         raise SystemExit("stream did not drain within --steps")

@@ -128,13 +128,21 @@ def _assert_bisimilar(st, ref, n_remotes, n_lines):
             f"backing on line {line}"
 
 
-def run_bisimulation(seed, n_remotes, moesi, n_lines, rounds):
-    """One engine vs one oracle over ``n_lines`` concurrent schedules."""
+def run_bisimulation(seed, n_remotes, moesi, n_lines, rounds,
+                     n_homes=1, home_bw=0):
+    """One engine vs one oracle over ``n_lines`` concurrent schedules.
+
+    With ``n_homes > 1`` both sides shard: the engine runs the home-major
+    ``[H, R, L/H]`` fold and the oracle runs its lockstep per-home shard
+    sub-oracles — so each round checks engine-vs-oracle AND (inside the
+    oracle) flat-vs-sharded semantics."""
     rng = random.Random(seed)
     eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
-                   n_remotes=n_remotes, moesi=moesi)
+                   n_remotes=n_remotes, moesi=moesi,
+                   n_homes=n_homes, home_bw=home_bw)
     st = eng.init()
-    ref = MultiNodeRef(n_lines, n_remotes=n_remotes, moesi=moesi)
+    ref = MultiNodeRef(n_lines, n_remotes=n_remotes, moesi=moesi,
+                       n_homes=n_homes)
     for _ in range(rounds):
         sched = [(rng.choice(KINDS), rng.randrange(n_remotes),
                   rng.randrange(1, 100)) for _ in range(n_lines)]
@@ -169,6 +177,43 @@ def test_engine_mn_bisimulates_oracle_wide_fast():
     ceiling bisimulates at R=8 (tiny sizes; the R∈{8,16} depth lives in
     the slow tier)."""
     run_bisimulation(seed=88, n_remotes=8, moesi=True, n_lines=8, rounds=3)
+
+
+@pytest.mark.parametrize("n_homes", [2, 4])
+def test_engine_mn_multi_home_bisimulates_oracle(n_homes):
+    """Fast multi-home tier: the address-interleaved [H, R, L/H] engine
+    bisimulates the multi-home oracle, which itself lockstep-mirrors every
+    op against per-home shard sub-oracles — engine == sharded == flat."""
+    run_bisimulation(seed=31 * n_homes, n_remotes=4, moesi=True,
+                     n_lines=16, rounds=5, n_homes=n_homes)
+
+
+def test_engine_mn_multi_home_bw_cap_bisimulates():
+    """home_bw=1 (each home accepts one new transaction per step) only
+    delays acceptance; retirement semantics stay exact vs the oracle."""
+    run_bisimulation(seed=77, n_remotes=3, moesi=True,
+                     n_lines=8, rounds=4, n_homes=2, home_bw=1)
+
+
+def test_engine_mn_multi_home_h1_bit_identical():
+    """n_homes=1 must take the identity path: the jitted program and the
+    stepped states are THE SAME OBJECTS as the default-parameter engine
+    (fold/unfold skipped entirely, not merely equivalent)."""
+    from repro.core.engine_mn import _jitted_step_mn
+    eng_d = EngineMN(jnp.zeros((8, BLOCK), jnp.float32), n_remotes=3)
+    eng_1 = EngineMN(jnp.zeros((8, BLOCK), jnp.float32), n_remotes=3,
+                     n_homes=1)
+    assert eng_1._step is eng_d._step          # same lru_cache entry
+    assert _jitted_step_mn(eng_d.subset.name, False, 1, 0) is eng_d._step
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("moesi", [False, True], ids=["mesi", "moesi"])
+def test_engine_mn_multi_home_wide(moesi):
+    """Slow tier: H=2 at R=16 — the sharded home plane holds exact
+    bisimulation at paper-scale remote counts."""
+    run_bisimulation(seed=555 + int(moesi), n_remotes=16, moesi=moesi,
+                     n_lines=32, rounds=6, n_homes=2)
 
 
 @pytest.mark.slow

@@ -1,0 +1,196 @@
+"""Regression tests for the latent-overflow/robustness sweep.
+
+Each test here pins a bug that only bit at scale or on the failure path:
+
+* int32 wrap of the scan-carried occupancy accumulators past ~33k steps
+  (below the default R=64 step budget) — fixed by hi/lo int32 pairs;
+* the dense ``[S, R, L]`` retirement trace (~14 GB at R=64 scale) —
+  fixed by the compact O(T * R) ``RetirementTrace``;
+* ``EngineMN.drain`` silently returning a non-quiescent state when the
+  step budget ran out — fixed by raising ``RuntimeError``;
+* the traffic smoke harness aborting (with only a traceback) on any
+  non-``AssertionError`` — fixed by per-case ``Exception`` handling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine_mn import EngineMN
+from repro.core.protocol import LocalOp
+from repro.traffic import WORKLOADS, run_stream, validate_run
+from repro.traffic.counters import (ACC_MASK, acc_add, acc_total,
+                                    make_counters, update_counters)
+
+BLOCK = 2
+
+
+# ---------------------------------------------------------------------------
+# S1: accumulator overflow.  occ/mshr sums fold up to R*L = 65,536 per
+# step at R=64/L=1024; 2^31 / 65,536 = 32,768 steps, BELOW the default
+# budget default_steps(256, 64) = 35,904 — a full-scale run used to read
+# back garbage (negative mean occupancy).  x64 is off, so the fix is an
+# exact hi/lo int32 pair, not a silent int64 upcast.
+# ---------------------------------------------------------------------------
+
+
+def test_acc_pair_exact_past_int32_at_r64_scale():
+    """Folding the worst-case per-step delta for the full default R=64
+    step budget must stay exact — the total crosses 2^31 twentyfold."""
+    delta, steps = 65_536, 36_000            # R*L at R=64/L=1024
+    assert delta * steps > 2**31             # the old int32 had wrapped
+
+    def body(c, _):
+        return acc_add(c[0], c[1], jnp.int32(delta)), None
+
+    zero = jnp.zeros((), jnp.int32)
+    (hi, lo), _ = jax.lax.scan(body, (zero, zero), None, length=steps)
+    assert int(acc_total(hi, lo)) == delta * steps
+
+
+def test_acc_pair_vector_and_boundary():
+    """The [4]-shaped occupancy pair carries element-wise, and a lo at
+    the carry boundary rolls into hi losslessly."""
+    hi = jnp.zeros((4,), jnp.int32)
+    lo = jnp.full((4,), ACC_MASK, jnp.int32)
+    hi2, lo2 = acc_add(hi, lo, jnp.asarray([1, 2, 3, 4], jnp.int32))
+    np.testing.assert_array_equal(
+        acc_total(hi2, lo2), np.asarray([ACC_MASK + d for d in (1, 2, 3, 4)],
+                                        np.int64))
+    assert (np.asarray(lo2) <= ACC_MASK).all()
+
+
+def test_update_counters_carries_through_real_path():
+    """``update_counters`` itself (not just the helper) must carry: seed
+    the MSHR accumulator at the lo boundary and fold one busy step."""
+    n_remotes, n_lines = 2, 4
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes)
+    st = eng.init()
+    ctr = make_counters(n_remotes)._replace(
+        mshr_sum_lo=jnp.asarray(ACC_MASK, jnp.int32))
+    outstanding = jnp.ones((n_remotes, n_lines), bool)
+    zero_rl = jnp.zeros((n_remotes, n_lines), jnp.int32)
+    ctr2 = update_counters(
+        ctr, st, retired=jnp.zeros((n_remotes, n_lines), bool),
+        lat=zero_rl, outstanding=outstanding,
+        head_wait=jnp.zeros((n_remotes,), jnp.int32),
+        step_active=jnp.asarray(True))
+    assert int(acc_total(ctr2.mshr_sum_hi, ctr2.mshr_sum_lo)) == \
+        ACC_MASK + n_remotes * n_lines
+    assert int(ctr2.mshr_sum_lo) <= ACC_MASK
+
+
+# ---------------------------------------------------------------------------
+# S2: trace compaction.  The old encoding stacked three dense [S, R, L]
+# arrays out of the scan — ~14 GB for a default R=64/L=1024 run.  The
+# compact record is one int32 per WORKLOAD SLOT, independent of the step
+# budget, and must still replay exactly.
+# ---------------------------------------------------------------------------
+
+
+def test_trace_is_compact_and_step_budget_independent():
+    """A deliberately huge step budget (20k steps — R=64-scale) must not
+    inflate the trace: its footprint is O(T * R) and the oracle replay
+    still validates byte-for-byte counters."""
+    n_remotes, n_lines, ops, steps = 8, 16, 12, 20_000
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes)
+    wl = WORKLOADS["zipfian"](jax.random.key(3), ops, n_remotes, n_lines)
+    run = run_stream(eng, wl, steps=steps, collect_trace=True)
+    assert run.completed
+    tr = run.trace
+    assert tr.retire_step.shape == (ops, n_remotes)
+    assert tr.retire_step.dtype == np.int32
+    # the record the old encoding kept: three [S, R, L] slabs.
+    dense_bytes = 3 * steps * n_remotes * n_lines
+    compact_bytes = tr.retire_step.nbytes
+    assert compact_bytes == ops * n_remotes * 4
+    assert compact_bytes * 100 < dense_bytes
+    validate_run(run, moesi=True)
+
+
+def test_trace_unretired_slots_are_minus_one():
+    """Slots stranded by an undersized budget read -1, and NOP slots
+    never enter the record at all."""
+    n_remotes, n_lines, ops = 3, 8, 16
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes)
+    wl = WORKLOADS["false_sharing"](jax.random.key(2), ops, n_remotes,
+                                    n_lines)
+    run = run_stream(eng, wl, steps=8, collect_trace=True)
+    assert not run.completed
+    rs = run.trace.retire_step
+    assert (rs == -1).any()                  # stranded ops visible as -1
+    nop = np.asarray(wl.op) == int(LocalOp.NOP)
+    assert (rs[nop] == -1).all()             # NOPs never retire
+
+
+# ---------------------------------------------------------------------------
+# S3: drain truncation.  A contended line set can legitimately outlive
+# the default budget; silently returning a half-drained state poisons
+# every downstream read.
+# ---------------------------------------------------------------------------
+
+
+def _contended_state():
+    eng = EngineMN(jnp.zeros((4, BLOCK), jnp.float32), n_remotes=4)
+    st = eng.init()
+    op = jnp.zeros((4, 4), jnp.int8).at[:, 0].set(int(LocalOp.STORE))
+    val = jnp.ones((4, 4, BLOCK), jnp.float32)
+    st, _ = eng.step(st, op=op, op_val=val)
+    return eng, st
+
+
+def test_drain_raises_on_truncated_budget():
+    eng, st = _contended_state()
+    with pytest.raises(RuntimeError, match="still busy"):
+        eng.drain(st, max_steps=1)
+
+
+def test_drain_strict_false_returns_and_bigger_budget_succeeds():
+    eng, st = _contended_state()
+    partial = eng.drain(st, max_steps=1, strict=False)   # old behavior
+    assert not eng.quiescent(partial)
+    done = eng.drain(partial, max_steps=256)
+    assert eng.quiescent(done)
+
+
+# ---------------------------------------------------------------------------
+# S4: the smoke harness.  Any per-case exception — not just a failed
+# assertion — must become a FAIL line and a nonzero exit, with the
+# remaining cases still run.
+# ---------------------------------------------------------------------------
+
+
+def test_smoke_survives_nonassertion_failure(monkeypatch, capsys):
+    import repro.traffic.run as run_mod
+
+    calls = []
+
+    def fake_drive(name, **kw):
+        calls.append(name)
+        if name == "migratory":
+            raise ValueError("injected shape blow-up")
+        return {"ops_retired": 1, "max_wait": [0], "messages": {}}
+
+    monkeypatch.setattr(run_mod, "drive", fake_drive)
+    rc = run_mod.smoke()
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL ValueError: injected shape blow-up" in out
+    # every case after the failing one still ran and reported OK.
+    assert calls.count("migratory") == 1
+    assert out.count(": OK") == len(calls) - 1
+    assert "1 FAILURES" in out
+
+
+def test_smoke_passes_clean(monkeypatch, capsys):
+    import repro.traffic.run as run_mod
+
+    monkeypatch.setattr(
+        run_mod, "drive",
+        lambda name, **kw: {"ops_retired": 1, "max_wait": [0],
+                            "messages": {}})
+    assert run_mod.smoke() == 0
+    assert "PASS" in capsys.readouterr().out

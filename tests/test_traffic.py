@@ -14,8 +14,8 @@ import pytest
 from repro.core.engine_mn import EngineMN
 from repro.core.protocol import LocalOp
 from repro.core.states import HomeState as H
-from repro.traffic import (WORKLOADS, Workload, run_stream, summarize,
-                           validate_run)
+from repro.traffic import (WORKLOADS, Workload, default_steps, run_stream,
+                           summarize, validate_run)
 
 BLOCK = 2
 R, L, T, STEPS = 3, 12, 24, 360
@@ -311,6 +311,57 @@ def _stream_with_home_access(want_kind: str, n_remotes=4, inject_at=30,
                 and t >= inject_at:
             return t
     return None
+
+
+# ---------------------------------------------------------------------------
+# Multi-home streaming: the address-interleaved [H, R, L/H] home plane
+# under sustained traffic, validated against the multi-home oracle (whose
+# lockstep shard mirror certifies the interleaving on every replayed op).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_homes", [1, 2, 4])
+def test_streaming_multi_home_counters_match_oracle(n_homes):
+    """Counter exactness + final-state bisimulation for every home count
+    on one workload/seed — H=1 is the identity-path control."""
+    n_remotes, n_lines, ops = 8, 16, 32
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, n_homes=n_homes)
+    wl = WORKLOADS["zipfian"](jax.random.key(21), ops, n_remotes, n_lines)
+    run = run_stream(eng, wl, steps=default_steps(ops, n_remotes),
+                     collect_trace=True)
+    ref = validate_run(run, moesi=True, n_homes=n_homes)
+    _assert_state_bisimilar(run.state, ref, n_remotes, n_lines)
+    assert int(run.state.dir.illegal) == 0
+    assert int(np.asarray(run.state.agents.illegal).sum()) == 0
+
+
+def test_streaming_multi_home_bw_cap_retires_everything():
+    """A serialization-bottlenecked home plane (home_bw=1) only delays
+    acceptance: the whole stream still retires and still validates."""
+    n_remotes, n_lines, ops = 4, 16, 24
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, n_homes=2, home_bw=1)
+    wl = WORKLOADS["strided"](jax.random.key(8), ops, n_remotes, n_lines)
+    run = run_stream(eng, wl, steps=4 * default_steps(ops, n_remotes),
+                     collect_trace=True)
+    ref = validate_run(run, moesi=True, n_homes=2)
+    _assert_state_bisimilar(run.state, ref, n_remotes, n_lines)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_homes", [2, 4])
+def test_streaming_multi_home_wide_r64(n_homes):
+    """Slow tier: the multi-home engine at the R=64 node-id ceiling,
+    validated end-to-end against the sharded oracle."""
+    n_remotes, n_lines, ops = 64, 64, 16
+    eng = EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                   n_remotes=n_remotes, n_homes=n_homes)
+    wl = WORKLOADS["zipfian"](jax.random.key(33), ops, n_remotes, n_lines)
+    run = run_stream(eng, wl, steps=default_steps(ops, n_remotes),
+                     collect_trace=True)
+    ref = validate_run(run, moesi=True, n_homes=n_homes)
+    _assert_state_bisimilar(run.state, ref, n_remotes, n_lines)
 
 
 def test_home_read_bounded_wait_under_streaming():
