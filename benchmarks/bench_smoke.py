@@ -16,7 +16,12 @@ Gate rules (exit 1 on violation):
 * every streaming run must COMPLETE within its step budget;
 * fan-out exactness: engine invalidations/store == oracle == R-1;
 * ops/step must not regress more than ``--tolerance`` (default 30%)
-  against the committed baseline, per configuration.
+  against the committed baseline, per configuration;
+* observability: the traced acceptance stream (R=64, H in {1,2}) must
+  stay semantically bit-identical to the untraced one, check clean
+  against the online protocol specs, and cost at most
+  ``OBS_OVERHEAD_LIMIT`` (1.15x) wall time — observability-overhead
+  regressions gate like perf regressions.
 
 ``--write-baseline`` refreshes the committed baseline file instead of
 comparing (run it locally when a PR intentionally shifts throughput).
@@ -53,6 +58,17 @@ FANOUT_REMOTES = (2, 8)
 #: overhaul (zipfian, R=64), timed at issue widths 1 and 4.
 WALLCLOCK_CONFIG = dict(n_remotes=64, n_lines=32, block=4, ops=48)
 WALLCLOCK_WIDTHS = (1, 4)
+
+#: observability-overhead harness: the acceptance config (zipfian R=64)
+#: at H in {1, 2}, traced (EWF ring + online NFA specs + phase
+#: attribution) vs untraced, best-of-N each.  The ratio is GATED at
+#: OBS_OVERHEAD_LIMIT — observability-overhead regressions fail CI like
+#: any perf regression — and the traced run must stay semantically
+#: bit-identical (same ops retired, same message counts) with zero spec
+#: violations.
+OBS_CONFIG = dict(n_remotes=64, n_lines=32, block=4, ops=24)
+OBS_HOMES = (1, 2)
+OBS_OVERHEAD_LIMIT = 1.15
 
 
 def run_fanout() -> dict:
@@ -181,6 +197,87 @@ def run_wallclock(repeats: int = 3) -> dict:
     return out
 
 
+def run_observability(repeats: int = 5) -> dict:
+    """Traced-vs-untraced overhead on the acceptance stream (R=64).
+
+    Both variants run the SAME workload through fresh engines; the traced
+    program folds the full observability plane (EWF ring capture, online
+    req_resp + single_writer NFA checking, phase attribution) through the
+    scan.  Reports the best of the per-pair wall ratios over ``repeats``
+    back-to-back (untraced, traced) pairs — gated at
+    ``OBS_OVERHEAD_LIMIT`` — plus the semantic-identity and
+    zero-violations facts the gate also enforces."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.engine_mn import EngineMN
+    from repro.traffic import (ObserveConfig, WORKLOADS, default_steps,
+                               run_stream, summarize)
+
+    cfg = OBS_CONFIG
+    n_remotes, n_lines = cfg["n_remotes"], cfg["n_lines"]
+    wl = WORKLOADS["zipfian"](jax.random.key(0), cfg["ops"], n_remotes,
+                              n_lines)
+    steps = default_steps(cfg["ops"], n_remotes)
+    obs_cfg = ObserveConfig(capture=True, capacity=1 << 12,
+                            specs=("req_resp", "single_writer"),
+                            attribution=True)
+    out = {}
+    for homes in OBS_HOMES:
+        variants = (("untraced", None), ("traced", obs_cfg))
+
+        def _measure(observe):
+            eng = EngineMN(jnp.zeros((n_lines, cfg["block"]), jnp.float32),
+                           n_remotes=n_remotes, n_homes=homes)
+            t0 = time.perf_counter()
+            run = run_stream(eng, wl, steps=steps, observe=observe)
+            return run, time.perf_counter() - t0
+
+        runs = {}
+        for tag, observe in variants:               # compile + warm
+            runs[tag] = [_measure(observe)[0], float("inf")]
+        # interleave the timed repeats: an A-block-then-B-block layout
+        # lets machine-load drift between the blocks masquerade as
+        # observability overhead (or hide it).  Each back-to-back
+        # (untraced, traced) pair shares its drift, so the per-pair
+        # ratio is drift-free; best-of over pairs then strips the
+        # noise-hit pairs, matching the best-of wall convention the
+        # other bench_* metrics use.
+        ratios = []
+        for _ in range(repeats):
+            pair = {}
+            for tag, observe in variants:
+                run, dt = _measure(observe)
+                pair[tag] = dt
+                runs[tag] = [run, min(runs[tag][1], dt)]
+            ratios.append(pair["traced"] / pair["untraced"])
+        ratio = float(min(ratios))
+        untraced, u_best = runs["untraced"]
+        traced, t_best = runs["traced"]
+        s = summarize(traced.counters, traced.msg_count)
+        identical = (
+            bool(untraced.completed) and bool(traced.completed)
+            and np.array_equal(np.asarray(untraced.msg_count),
+                               np.asarray(traced.msg_count))
+            and int(np.asarray(untraced.counters.retired).sum())
+            == int(np.asarray(traced.counters.retired).sum()))
+        out[f"r{n_remotes}_h{homes}"] = {
+            "config": dict(cfg, homes=homes, steps=steps),
+            "completed": bool(traced.completed),
+            "identical_semantics": identical,
+            "violations": len(traced.obs.violations),
+            "captured_words": int(len(traced.obs.words)),
+            "overhead_ratio": round(ratio, 4),
+            "overhead_limit": OBS_OVERHEAD_LIMIT,
+            "untraced_steps_per_s": round(steps / u_best, 1),
+            "traced_steps_per_s": round(steps / t_best, 1),
+            "ops_per_step": round(float(s["ops_per_step"]), 4),
+            "phase_p99": {ph: p["p99"] for ph, p in
+                          traced.obs.phase_percentiles().items()},
+        }
+    return out
+
+
 def collect(wallclock: bool = False) -> dict:
     import jax
     rec = {
@@ -189,6 +286,7 @@ def collect(wallclock: bool = False) -> dict:
         "generated_unix": int(time.time()),
         "fanout": run_fanout(),
         "streaming": run_streaming(),
+        "observability": run_observability(),
     }
     if wallclock:
         rec["wallclock"] = run_wallclock()
@@ -217,6 +315,26 @@ def gate(current: dict, baseline: dict, tolerance: float) -> list:
                 f"streaming {key}: ops/step {rec['ops_per_step']:.4f} "
                 f"regressed >{tolerance:.0%} vs baseline "
                 f"{base['ops_per_step']:.4f} (floor {floor:.4f})")
+    # observability gate: absolute rules, no baseline needed — the traced
+    # program must not perturb semantics, must check clean, and must stay
+    # within the committed overhead budget.
+    for key, rec in current.get("observability", {}).items():
+        if not rec["completed"]:
+            bad.append(f"observability {key}: traced stream did not "
+                       f"complete")
+        if not rec["identical_semantics"]:
+            bad.append(f"observability {key}: traced run diverged from "
+                       f"untraced (ops retired / message counts)")
+        if rec["violations"]:
+            bad.append(f"observability {key}: {rec['violations']} online "
+                       f"protocol-spec violation(s) on a clean stream")
+        if rec["overhead_ratio"] > rec["overhead_limit"]:
+            bad.append(
+                f"observability {key}: overhead ratio "
+                f"{rec['overhead_ratio']:.3f} exceeds "
+                f"{rec['overhead_limit']:.2f} (traced "
+                f"{rec['traced_steps_per_s']:.0f} vs untraced "
+                f"{rec['untraced_steps_per_s']:.0f} steps/s)")
     return bad
 
 
@@ -245,8 +363,11 @@ def main() -> None:
 
     if args.write_baseline:
         # the committed baseline carries ONLY deterministic metrics —
-        # wall-clock moves with the machine that happened to refresh it.
-        base = {k: v for k, v in current.items() if k != "wallclock"}
+        # wall-clock (and the observability overhead ratio, which is a
+        # wall-clock ratio gated by an absolute limit instead) moves with
+        # the machine that happened to refresh it.
+        base = {k: v for k, v in current.items()
+                if k not in ("wallclock", "observability")}
         with open(args.baseline, "w") as f:
             json.dump(base, f, indent=1, sort_keys=True)
             f.write("\n")
@@ -267,6 +388,12 @@ def main() -> None:
         print(f"streaming {key}: ops/step {rec['ops_per_step']:.4f} "
               f"(baseline {base.get('ops_per_step', float('nan')):.4f}) "
               f"max_wait {rec['max_wait']} wall {rec['wall_s']}s")
+    for key, rec in sorted(current.get("observability", {}).items()):
+        print(f"observability {key}: overhead "
+              f"{rec['overhead_ratio']:.3f}x (limit "
+              f"{rec['overhead_limit']:.2f}) violations "
+              f"{rec['violations']} identical "
+              f"{rec['identical_semantics']}")
     if violations:
         for v in violations:
             print("FAIL:", v)

@@ -213,6 +213,36 @@ class StepMNOutput(NamedTuple):
     accepted: jnp.ndarray        # [R, L] bool — caller ops taken this step
 
 
+class StepEvents(NamedTuple):
+    """Wire events of ONE engine step, in delivery order — the in-scan
+    observability feed (``traffic.observe``).
+
+    The five sites are exactly the step's ``_count`` sites, in step-phase
+    order (hresp arrivals, voluntary downgrades, request acceptance, grant
+    issue, home-downgrade delivery) — the per-line serialization the NFA
+    specs check and the EWF capture records.  Per-remote sites are
+    ``[R, L]``; the home-side sites (one transaction per line) are
+    ``[L]``.  Under the multi-home fold the events are unfolded back to
+    flat global-line indexing, like every other step output.
+    """
+
+    hresp_arr: jnp.ndarray    # [R, L] bool — downgrade replies reaching home
+    hresp_msg: jnp.ndarray    # [R, L] int8
+    hresp_dirty: jnp.ndarray  # [R, L] bool
+    vol_arr: jnp.ndarray      # [R, L] bool — voluntary downgrades absorbed
+    vol_msg: jnp.ndarray      # [R, L] int8
+    vol_dirty: jnp.ndarray    # [R, L] bool
+    req_acc: jnp.ndarray      # [L] bool — remote request parked (wins arb)
+    req_msg: jnp.ndarray      # [L] int8
+    req_node: jnp.ndarray     # [L] int32
+    grant: jnp.ndarray        # [L] bool — grant response issued
+    grant_msg: jnp.ndarray    # [L] int8
+    grant_node: jnp.ndarray   # [L] int32
+    grant_pay: jnp.ndarray    # [L] bool — the grant carries line data
+    hd_arr: jnp.ndarray       # [R, L] bool — HOME_DOWNGRADE_* delivered
+    hd_msg: jnp.ndarray       # [R, L] int8
+
+
 def make_engine_mn_state(backing: jnp.ndarray, n_remotes: int
                          ) -> EngineMNState:
     L, B = backing.shape
@@ -262,8 +292,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
             st: EngineMNState, op: jnp.ndarray, op_val: jnp.ndarray,
             want_read: jnp.ndarray, want_write: jnp.ndarray,
             wval: jnp.ndarray, delays: jnp.ndarray, credits: jnp.ndarray,
-            hreq_shared: bool = False, n_homes: int = 1, home_bw: int = 0
-            ) -> Tuple[EngineMNState, StepMNOutput]:
+            hreq_shared: bool = False, n_homes: int = 1, home_bw: int = 0,
+            emit_events: bool = False):
     """One fused engine step over all remotes and lines.
 
     PROTOCOL-PARAMETRIC: ``tables_mn`` is baked from a ``ProtocolSubset``
@@ -298,7 +328,14 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     ranking (they always sink), and the request path ranks credits exactly
     ONCE — the stall dry-run's acceptance is reused as the channel write
     mask, since the surviving emission set can only shrink between the
-    dry-run and the write (same occupancy, smaller ranks)."""
+    dry-run and the write (same occupancy, smaller ranks).
+
+    ``emit_events`` (static) additionally returns a ``StepEvents`` record
+    of this step's wire events — the in-scan observability feed of
+    ``traffic.observe``.  False (the default) leaves the returned tuple
+    AND the traced program exactly as before: the event planes are values
+    the step computes anyway, the flag only controls whether they are
+    returned."""
     if n_homes > 1:
         flat_in = st
         st = _fold_state_mn(st, n_homes)
@@ -352,6 +389,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
         ch_req.dirty, ch_req.payload)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, pop_vol,
                                      ch_req.msg, ch_req.dirty)
+    # observability site 2: voluntary downgrades as absorbed (pre-pop).
+    vol_msg, vol_dirty = ch_req.msg, ch_req.dirty
 
     # ---- 4. arbitration: remotes AND the home compete per free line ------
     req_ready = ready_req & ~is_vol
@@ -550,6 +589,17 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     caller_taken = accepted & ~parked
     out = StepMNOutput(load_done, load_val, hread_done, hread_val,
                        caller_taken)
+    ev = None
+    if emit_events:
+        ev = StepEvents(
+            hresp_arr=hr_arr, hresp_msg=ch_hresp_in.msg,
+            hresp_dirty=ch_hresp_in.dirty,
+            vol_arr=pop_vol, vol_msg=vol_msg, vol_dirty=vol_dirty,
+            req_acc=accept_line & ~home_win, req_msg=win_msg,
+            req_node=win_node,
+            grant=resp != nop, grant_msg=resp,
+            grant_node=node_c, grant_pay=carries,
+            hd_arr=h_arr, hd_msg=ch_hreq_in.msg)
     if n_homes > 1:
         new = _unfold_state_mn(new, flat_in)
         out = StepMNOutput(
@@ -557,6 +607,21 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
             hread_done=_u_l(out.hread_done),
             hread_val=_u_l(out.hread_val),
             accepted=_u_rl(out.accepted))
+        if emit_events:
+            ev = StepEvents(
+                hresp_arr=_u_rl(ev.hresp_arr),
+                hresp_msg=_u_rl(ev.hresp_msg),
+                hresp_dirty=_u_rl(ev.hresp_dirty),
+                vol_arr=_u_rl(ev.vol_arr), vol_msg=_u_rl(ev.vol_msg),
+                vol_dirty=_u_rl(ev.vol_dirty),
+                req_acc=_u_l(ev.req_acc), req_msg=_u_l(ev.req_msg),
+                req_node=_u_l(ev.req_node),
+                grant=_u_l(ev.grant), grant_msg=_u_l(ev.grant_msg),
+                grant_node=_u_l(ev.grant_node),
+                grant_pay=_u_l(ev.grant_pay),
+                hd_arr=_u_rl(ev.hd_arr), hd_msg=_u_rl(ev.hd_msg))
+    if emit_events:
+        return new, out, ev
     return new, out
 
 

@@ -1,21 +1,29 @@
 """Streaming traffic subsystem: workload generators, a quiescence-free
-engine driver, and hardware-style perf counters (see docs/traffic.md).
+engine driver, hardware-style perf counters, and the in-scan
+observability plane (see docs/traffic.md and docs/observability.md).
 
-    from repro.traffic import WORKLOADS, run_stream, summarize
+    from repro.traffic import WORKLOADS, ObserveConfig, run_stream, \
+        summarize
 
     eng = EngineMN(jnp.zeros((64, 4), jnp.float32), n_remotes=4)
     wl = WORKLOADS["zipfian"](jax.random.key(0), 128, 4, 64)
-    run = run_stream(eng, wl, steps=1024, width=2)   # issue width W=2
+    run = run_stream(eng, wl, steps=1024, width=2,   # issue width W=2
+                     observe=ObserveConfig())        # trace + check + attr
     print(summarize(run.counters, run.msg_count))
+    print(run.obs.violations, run.obs.phase_percentiles())
 """
 from .counters import (Counters, RetirementTrace, acc_total,
-                       assert_counts_match, replay_reference, summarize,
-                       validate_run)
+                       assert_counts_match, hist_percentiles,
+                       replay_reference, summarize, validate_run)
 from .driver import StreamRun, default_steps, run_stream
+from .observe import (ObserveConfig, ObsResult, OnlineViolation,
+                      perfetto_events, write_perfetto)
 from .workloads import WORKLOADS, Workload
 
 __all__ = [
-    "Counters", "RetirementTrace", "StreamRun", "WORKLOADS", "Workload",
+    "Counters", "ObserveConfig", "ObsResult", "OnlineViolation",
+    "RetirementTrace", "StreamRun", "WORKLOADS", "Workload",
     "acc_total", "assert_counts_match", "default_steps",
-    "replay_reference", "run_stream", "summarize", "validate_run",
+    "hist_percentiles", "perfetto_events", "replay_reference",
+    "run_stream", "summarize", "validate_run", "write_perfetto",
 ]

@@ -152,6 +152,35 @@ def update_counters(ctr: Counters, st, *, retired: jnp.ndarray,
     )
 
 
+def hist_percentiles(hist: np.ndarray,
+                     edges: np.ndarray = LAT_EDGES,
+                     qs: Tuple[float, ...] = (0.5, 0.99, 0.999)
+                     ) -> Dict[str, float]:
+    """Percentiles from a bucketed latency histogram (host-side).
+
+    Returns the UPPER edge of the bucket containing each quantile — the
+    conservative bound a bucketed histogram can actually certify (the
+    true latency is strictly below it; bucket i spans [edge[i-1],
+    edge[i])).  A quantile landing in the overflow bucket reports
+    ``inf``: the histogram only knows the latency was >= the last edge.
+    Empty histograms report 0 for every quantile.  Keys are "p50"-style
+    ("0.999" -> "p999")."""
+    counts = np.asarray(hist, np.float64)
+    uppers = np.concatenate([np.asarray(edges, np.float64), [np.inf]])
+    assert counts.shape == uppers.shape, (counts.shape, len(edges))
+    total = counts.sum()
+    out = {}
+    cdf = np.cumsum(counts)
+    for q in qs:
+        key = "p" + format(q * 100, "g").replace(".", "")
+        if total == 0:
+            out[key] = 0.0
+            continue
+        idx = int(np.searchsorted(cdf, q * total, side="left"))
+        out[key] = float(uppers[min(idx, len(uppers) - 1)])
+    return out
+
+
 def summarize(ctr: Counters, msg_count: np.ndarray,
               payload_msgs: int = 0) -> Dict[str, object]:
     """Host-side digest of a run: the numbers a benchmark row reports.
@@ -180,6 +209,13 @@ def summarize(ctr: Counters, msg_count: np.ndarray,
         "retired_per_remote": retired.tolist(),
         "max_wait": np.asarray(ctr.max_wait).tolist(),
         "lat_hist": np.asarray(ctr.lat_hist).tolist(),
+        # tail latency (ROADMAP open-loop item): aggregate + per-remote
+        # p50/p99/p999 pulled from the bucketed histograms — upper bucket
+        # edges, inf when the quantile lands in the overflow bucket.
+        "latency_percentiles":
+            hist_percentiles(np.asarray(ctr.lat_hist).sum(axis=0)),
+        "latency_percentiles_per_remote": [
+            hist_percentiles(row) for row in np.asarray(ctr.lat_hist)],
         "invalidations": inval,
         "inval_per_excl_grant": inval / max(excl, 1),
         "nacks": nacks,

@@ -47,6 +47,9 @@ from ..core.messages import MsgType
 from ..core.protocol import LocalOp, mn_tables
 from .counters import (Counters, RetirementTrace, make_counters,
                        update_counters)
+from .observe import (ObserveConfig, ObsResult, _encoded_tables,
+                      compiled_specs, finalize_obs, fold_obs,
+                      make_obs_carry)
 from .workloads import Workload
 
 # the issue window scatters ops/values ADDITIVELY into the dense [R, L]
@@ -69,6 +72,8 @@ class _Carry(NamedTuple):
     #                           row non-retiring lanes scatter into (trace
     #                           mode; [0] placeholder otherwise)
     ctr: Counters
+    obs: object = None        # ObsCarry when observability is enabled;
+    #                           None (an empty pytree) otherwise
 
 
 def default_steps(ops: int, n_remotes: int) -> int:
@@ -92,25 +97,34 @@ class StreamRun(NamedTuple):
     payload_msgs: int         # messages that carried line data, this run
     trace: Optional[RetirementTrace]
     completed: bool           # stream fully consumed AND engine quiescent
+    obs: Optional[ObsResult] = None   # observability digest (observe=...)
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                    hreq_shared: bool = False, n_homes: int = 1,
-                   home_bw: int = 0):
+                   home_bw: int = 0,
+                   obs: Optional[ObserveConfig] = None):
     """One fused streaming program per (subset, trace?, width, credit
-    model, home plane) tuple, shared across engines; shapes (R, L, T,
-    total steps) retrace inside jit's cache.  The engine state is donated
-    — the streaming scan is the hot path, and per-step reallocation of
-    the ``[R, L]`` slabs is pure overhead."""
+    model, home plane, observability) tuple, shared across engines; shapes
+    (R, L, T, total steps) retrace inside jit's cache.  The engine state
+    is donated — the streaming scan is the hot path, and per-step
+    reallocation of the ``[R, L]`` slabs is pure overhead.  ``obs=None``
+    (the default) leaves the traced program EXACTLY what it always was —
+    observability is compiled in only when an ``ObserveConfig`` keys a
+    separate cache entry."""
     tables_mn = mn_tables(subset_name)
     step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
                                 hreq_shared=hreq_shared, n_homes=n_homes,
                                 home_bw=home_bw)
     nop_op = jnp.int8(int(LocalOp.NOP))
     W = width
+    if obs is not None:
+        comp = compiled_specs(obs.specs)
+        tab_np, start_np = _encoded_tables(comp)
 
-    def run(st, wl_op, wl_line, wl_value, tsteps, delays, credits):
+    def run(st, wl_op, wl_line, wl_value, tsteps, delays, credits,
+            line_filt=None, type_filt=None):
         R, L = st.hreq_pending.shape
         B = st.dir.backing.shape[1]
         T = wl_op.shape[0]
@@ -151,8 +165,12 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                 ar[:, None], s_line].add(jnp.where(can, c.slot_born, 0))
 
             # ---- one engine step under sustained traffic ----------------
-            st2, out = step_fn(c.st, opd, vald, zb, zb, zwv, delays,
-                               credits)
+            if obs is None:
+                st2, out = step_fn(c.st, opd, vald, zb, zb, zwv, delays,
+                                   credits)
+            else:
+                st2, out, ev = step_fn(c.st, opd, vald, zb, zb, zwv,
+                                       delays, credits, emit_events=True)
 
             # ---- adopt newly accepted ops, detect retirements -----------
             newly = out.accepted                       # [R, L]
@@ -204,10 +222,19 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                                   head_wait=head_wait,
                                   step_active=step_active)
 
+            # ---- observability plane (in-scan; compiled in only when
+            # ---- an ObserveConfig keys this program) --------------------
+            oc = c.obs
+            if obs is not None:
+                oc = fold_obs(obs, jnp.asarray(tab_np),
+                              jnp.asarray(start_np), oc, ev, t,
+                              line_filt, type_filt,
+                              newly=newly, born_d=born_d, retired=retired)
+
             c2 = _Carry(st=st2, cursor=cursor, issued=issued2,
                         slot_born=slot_born,
                         outstanding=outstanding, born=born,
-                        out_idx=out_idx, retire=retire, ctr=ctr)
+                        out_idx=out_idx, retire=retire, ctr=ctr, obs=oc)
             return c2, None
 
         if collect_trace:
@@ -226,6 +253,8 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             out_idx=out_idx0,
             retire=retire0,
             ctr=make_counters(R),
+            obs=(make_obs_carry(obs, R, L, comp)
+                 if obs is not None else None),
         )
         carry, _ = jax.lax.scan(body, carry0, tsteps)
         completed = (carry.cursor >= T).all() & \
@@ -237,7 +266,10 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
 
 def run_stream(engine: EngineMN, wl: Workload, steps: int,
                st: Optional[EngineMNState] = None,
-               collect_trace: bool = False, width: int = 1) -> StreamRun:
+               collect_trace: bool = False, width: int = 1,
+               observe: Optional[ObserveConfig] = None,
+               line_filter: Optional[np.ndarray] = None,
+               type_filter: Optional[np.ndarray] = None) -> StreamRun:
     """Drive ``wl`` through ``engine`` for ``steps`` fused engine steps.
 
     ``steps`` must cover the stream length PLUS the drain tail (steps on a
@@ -250,6 +282,14 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
     enter flight per remote per step (same-line window slots serialize
     in-queue; see the module docstring).  The passed-in state is consumed
     (donated to the fused program) — use the returned ``state``.
+
+    ``observe`` switches on the in-scan observability plane (EWF ring
+    capture, online NFA protocol checking, per-transaction phase
+    attribution — see ``traffic.observe``); the digest lands in
+    ``StreamRun.obs``.  ``line_filter`` ([n_lines] bool) and
+    ``type_filter`` ([16] bool, indexed by ``MsgType``) restrict which
+    wire events enter the capture ring (checking always sees everything).
+    ``observe=None`` runs the exact same cached jit program as before.
 
     The WHOLE op stream is checked against the engine's protocol subset
     BEFORE anything is submitted (one vectorized pass over the ``[T, R]``
@@ -269,10 +309,19 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
     base_payload = int(st0.payload_msgs)
     fn = _jitted_stream(engine.subset.name, collect_trace, int(width),
                         engine.shared_credits, engine.n_homes,
-                        engine.home_bw)
-    carry, completed = fn(st0, wl.op, wl.line, wl.value,
-                          jnp.arange(steps, dtype=jnp.int32),
-                          engine.delays, engine.credits)
+                        engine.home_bw, observe)
+    if observe is None:
+        carry, completed = fn(st0, wl.op, wl.line, wl.value,
+                              jnp.arange(steps, dtype=jnp.int32),
+                              engine.delays, engine.credits)
+    else:
+        # None = capture-all: passed through as an empty pytree leaf, so
+        # the jit program specializes away the per-site filter gathers.
+        lf = None if line_filter is None else jnp.asarray(line_filter, bool)
+        tf = None if type_filter is None else jnp.asarray(type_filter, bool)
+        carry, completed = fn(st0, wl.op, wl.line, wl.value,
+                              jnp.arange(steps, dtype=jnp.int32),
+                              engine.delays, engine.credits, lf, tf)
     trace = None
     if collect_trace:
         # compact O(T * R) record: the scratch row the non-retiring lanes
@@ -285,6 +334,10 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
             value=np.asarray(wl.value),
             n_lines=engine.n_lines,
         )
+    obs_res = None
+    if observe is not None:
+        obs_res = finalize_obs(observe, carry.obs,
+                               compiled_specs(observe.specs))
     return StreamRun(
         state=carry.st,
         counters=jax.device_get(carry.ctr),
@@ -292,4 +345,5 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
         payload_msgs=int(carry.st.payload_msgs) - base_payload,
         trace=trace,
         completed=bool(completed),
+        obs=obs_res,
     )

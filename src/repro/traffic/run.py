@@ -22,6 +22,14 @@ directory across H address-interleaved homes (``home_of(line) = line %
 homes``) and ``--home-bw`` caps how many NEW transactions each home
 accepts per step (0 = unbounded) — together they expose the home-
 serialization bottleneck multi-home sharding relieves.
+
+Observability (docs/observability.md): ``--trace`` captures the in-scan
+EWF ring, ``--check-specs`` folds the online NFA protocol checkers
+through the scan (violations fail the run with a step/line/msg
+counterexample), ``--trace-out``/``--perfetto`` export the captured
+trace as TraceBuffer JSON / a Chrome trace-event timeline, and
+``--smoke --trace --check-specs --artifacts DIR`` is the CI job:
+every smoke case observed and checked, artifacts dropped in DIR.
 """
 from __future__ import annotations
 
@@ -50,11 +58,23 @@ def _build(n_lines: int, n_remotes: int, subset, credits=None,
                     home_bw=home_bw)
 
 
+def observe_specs(subset_name: str):
+    """Online spec set for a run: the two full-protocol invariants, plus
+    ``readonly`` when the subset actually guarantees it (a full-protocol
+    stream violates SPEC_READONLY by design — it has writes)."""
+    specs = ("req_resp", "single_writer")
+    if subset_name == "read_only":
+        specs = specs + ("readonly",)
+    return specs
+
+
 def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
           steps: int, seed: int, moesi: bool, validate: bool,
           width: int = 1, subset_name: str = "", credits=None,
           shared_credits: bool = False, n_homes: int = 1,
-          home_bw: int = 0):
+          home_bw: int = 0, observe: bool = False,
+          check_specs: bool = False, trace_out: str = "",
+          perfetto_out: str = ""):
     from repro.core.protocol import ENHANCED_MESI, FULL_MOESI, SUBSETS, \
         LocalOp
     from repro.traffic import (WORKLOADS, run_stream, summarize,
@@ -72,9 +92,16 @@ def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
                  n_homes=n_homes, home_bw=home_bw)
     wl = WORKLOADS[workload](jax.random.key(seed), ops, n_remotes, n_lines,
                              **kwargs)
+    obs_cfg = None
+    if observe or check_specs or trace_out or perfetto_out:
+        from repro.traffic.observe import ObserveConfig
+        obs_cfg = ObserveConfig(
+            capture=bool(observe or trace_out or perfetto_out),
+            specs=observe_specs(subset_name) if check_specs else (),
+            attribution=True)
     t0 = time.perf_counter()
     run = run_stream(eng, wl, steps=steps, collect_trace=validate,
-                     width=width)
+                     width=width, observe=obs_cfg)
     wall = time.perf_counter() - t0
     if validate:
         validate_run(run, eng.moesi, subset=subset if subset_name else None,
@@ -84,10 +111,24 @@ def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
                completed=run.completed, wall_s=round(wall, 3),
                validated=bool(validate), width=width, subset=subset.name,
                shared_credits=bool(shared_credits), homes=n_homes)
+    if run.obs is not None:
+        out["observability"] = run.obs.metrics()
+        if trace_out:
+            with open(trace_out, "w") as f:
+                f.write(run.obs.trace_buffer().to_json())
+        if perfetto_out:
+            from repro.traffic.observe import write_perfetto
+            write_perfetto(run.obs.trace_buffer(), perfetto_out,
+                           n_homes=n_homes)
+        if check_specs and run.obs.violations:
+            raise AssertionError(
+                "online protocol-spec violation(s): " + "; ".join(
+                    str(v) for v in run.obs.violations))
     return out
 
 
-def smoke() -> int:
+def smoke(observe: bool = False, check_specs: bool = False,
+          artifacts: str = "") -> int:
     """Small-size full-taxonomy run with oracle validation; exit status.
 
     Includes one WIDE case (zipfian, 8 remotes) so the flat-[R, L] engine
@@ -97,32 +138,57 @@ def smoke() -> int:
     validated against the subset-aware oracle, and one H=2 multi-home
     case keeping the address-interleaved home plane validated end-to-end.
 
+    ``observe``/``check_specs`` switch on the in-scan observability plane
+    (EWF ring capture / online NFA protocol checking) for every case — an
+    online spec violation fails that case with its counterexample.
+    ``artifacts`` names a directory to drop per-case trace JSON, Perfetto
+    timelines and a combined metrics JSON into (the CI upload payload).
+
     Each case catches ANY Exception, not just AssertionError: a shape
     error, a ValueError from the workload guard or a TypeError in the
     engine used to escape the harness and abort the remaining cases with
     a traceback instead of a per-case FAIL line and a nonzero exit."""
+    import os
     from repro.traffic import WORKLOADS
+    if artifacts:
+        os.makedirs(artifacts, exist_ok=True)
     cases = [(name, 2, 220, 1, "", 1) for name in WORKLOADS]
     cases.append(("zipfian", 8, 900, 1, "", 1))
     cases.append(("zipfian", 4, 500, 2, "", 1))
     cases.append(("zipfian", 8, 900, 1, "read_only", 1))
     cases.append(("zipfian", 8, 900, 1, "", 2))
     failures = 0
+    metrics = {}
     for name, n_remotes, steps, width, subset, homes in cases:
         tag = (f" {subset}" if subset else "") + \
             (f" h{homes}" if homes > 1 else "")
+        slug = f"{name}_r{n_remotes}_w{width}" + \
+            (f"_{subset}" if subset else "") + \
+            (f"_h{homes}" if homes > 1 else "")
+        art = dict(
+            trace_out=os.path.join(artifacts, f"{slug}.trace.json"),
+            perfetto_out=os.path.join(artifacts, f"{slug}.perfetto.json"),
+        ) if artifacts and (observe or check_specs) else {}
         try:
             out = drive(name, n_remotes=n_remotes, n_lines=12, ops=20,
                         steps=steps, seed=7, moesi=True, validate=True,
-                        width=width, subset_name=subset, n_homes=homes)
+                        width=width, subset_name=subset, n_homes=homes,
+                        observe=observe, check_specs=check_specs, **art)
+            metrics[slug] = out
+            obs = out.get("observability", {})
+            obs_tag = (f" trace={obs['captured_total']}w "
+                       f"specs={len(obs['specs'])}" if obs else "")
             print(f"smoke {name} r{n_remotes} w{width}{tag}: OK "
                   f"ops={out['ops_retired']} "
                   f"max_wait={max(out['max_wait'])} "
-                  f"msgs={sum(out['messages'].values())}")
+                  f"msgs={sum(out['messages'].values())}{obs_tag}")
         except Exception as e:
             failures += 1
             print(f"smoke {name} r{n_remotes} w{width}{tag}: "
                   f"FAIL {type(e).__name__}: {e}")
+    if artifacts:
+        with open(os.path.join(artifacts, "smoke_metrics.json"), "w") as f:
+            json.dump(metrics, f, indent=1, default=str)
     print("smoke:", "PASS" if not failures else f"{failures} FAILURES")
     return 1 if failures else 0
 
@@ -169,6 +235,27 @@ def main() -> None:
                          "against the MultiNodeRef oracle")
     ap.add_argument("--smoke", action="store_true",
                     help="validated mini-run of every workload generator")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture the in-scan EWF ring (device-side, "
+                         "bounded, overwrite-oldest) and report it in the "
+                         "observability block")
+    ap.add_argument("--check-specs", action="store_true",
+                    help="fold the online NFA protocol checkers "
+                         "(req_resp, single_writer, + readonly on the "
+                         "read_only subset) through the scan; any "
+                         "violation fails the run with its (step, line, "
+                         "msg) counterexample")
+    ap.add_argument("--trace-out", default="",
+                    help="write the captured EWF trace as TraceBuffer "
+                         "JSON to this path (implies --trace)")
+    ap.add_argument("--perfetto", default="",
+                    help="write a Chrome/Perfetto trace-event timeline "
+                         "of the captured trace to this path (implies "
+                         "--trace; load at https://ui.perfetto.dev)")
+    ap.add_argument("--artifacts", default="",
+                    help="with --smoke: directory for per-case trace "
+                         "JSON / Perfetto timelines / combined metrics "
+                         "(the CI upload payload)")
     args = ap.parse_args()
 
     from repro.core.engine_mn import MAX_REMOTES
@@ -192,14 +279,18 @@ def main() -> None:
     if args.home_bw < 0:
         ap.error("--home-bw must be >= 0")
     if args.smoke:
-        raise SystemExit(smoke())
+        raise SystemExit(smoke(observe=args.trace,
+                               check_specs=args.check_specs,
+                               artifacts=args.artifacts))
     from repro.traffic import default_steps
     steps = args.steps or default_steps(args.ops, args.remotes)
     out = drive(args.workload, args.remotes, args.lines, args.ops, steps,
                 args.seed, not args.mesi, args.validate, width=args.width,
                 subset_name=args.subset, credits=args.credits or None,
                 shared_credits=args.shared_credits, n_homes=args.homes,
-                home_bw=args.home_bw)
+                home_bw=args.home_bw,
+                observe=args.trace, check_specs=args.check_specs,
+                trace_out=args.trace_out, perfetto_out=args.perfetto)
     print(json.dumps(out, indent=1, default=str))
     if not out["completed"]:
         raise SystemExit("stream did not drain within --steps")

@@ -1,0 +1,395 @@
+"""The in-scan observability plane (traffic.observe + core.tracing).
+
+Covers the three pillars of the §4.1 toolkit on the PRODUCTION streaming
+engine — EWF ring capture, online NFA protocol checking, per-transaction
+phase attribution — plus the host-side satellites (O(1) TraceBuffer
+ring, histogram percentiles):
+
+* disabled path: ``observe=None`` is bit-identical to an observed run
+  (state, counters, message counts);
+* clean streaming runs at R in {8, 64}, H in {1, 2} pass all shipped
+  specs ONLINE and offline (``check_trace`` over the exported ring) —
+  and the two verdicts agree;
+* an injected protocol mutation (a second request while one is in
+  flight) is caught online with the exact (step, line, msg)
+  counterexample, and by the host checker on the exported trace;
+* the capture ring honours capacity (overwrite-oldest, order kept),
+  line/type filters, and counts trace-port drops instead of lying.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transport as tp
+from repro.core.engine_mn import EngineMN
+from repro.core.messages import MsgType
+from repro.core.tracing import (SPECS, TraceBuffer, check_trace,
+                                compile_spec, symbol_of)
+from repro.traffic import (ObserveConfig, WORKLOADS, default_steps,
+                           hist_percentiles, run_stream, summarize)
+from repro.traffic.observe import PHASES
+
+BLOCK = 2
+
+
+def _engine(n_remotes, n_lines, homes=1, subset=None):
+    return EngineMN(jnp.zeros((n_lines, BLOCK), jnp.float32),
+                    n_remotes=n_remotes, n_homes=homes, subset=subset)
+
+
+def _observed(n_remotes=4, n_lines=8, ops=12, homes=1, workload="zipfian",
+              seed=3, **cfg_kw):
+    wl = WORKLOADS[workload](jax.random.key(seed), ops, n_remotes, n_lines)
+    steps = default_steps(ops, n_remotes)
+    cfg = ObserveConfig(**{"capture": True, "capacity": 4096, **cfg_kw})
+    run = run_stream(_engine(n_remotes, n_lines, homes), wl, steps,
+                     observe=cfg)
+    assert run.completed
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Satellite: O(1) TraceBuffer ring.
+# ---------------------------------------------------------------------------
+
+
+def test_tracebuffer_ring_capacity_and_order():
+    """Overwrite-oldest keeps the LAST ``capacity`` words, in order."""
+    tb = TraceBuffer(capacity=4)
+    for i in range(10):
+        tb.record_name_line("REQ_READ_SHARED", line=i)
+    assert len(tb.words) == 4
+    assert [m.line for m in tb.messages()] == [6, 7, 8, 9]
+
+
+def test_tracebuffer_words_setter_roundtrip():
+    tb = TraceBuffer(capacity=8)
+    for i in range(3):
+        tb.record_name_line("REQ_READ_EXCL", line=i)
+    tb2 = TraceBuffer.from_words(list(tb.words), capacity=8)
+    assert tb2.words == tb.words
+    tb2.words = tb.words[:2]
+    assert len(tb2.words) == 2
+
+
+# ---------------------------------------------------------------------------
+# Satellite: percentile extraction from bucketed histograms.
+# ---------------------------------------------------------------------------
+
+
+def test_hist_percentiles_known_distribution():
+    """1000 samples of latency 3 + 10 of latency 200: p50/p99 sit in the
+    (2, 4] bucket (upper edge 4), p999 in the (128, 256] bucket."""
+    from repro.traffic.counters import LAT_EDGES, N_LAT_BUCKETS
+    lats = np.concatenate([np.full(1000, 3), np.full(10, 200)])
+    hist = np.zeros(N_LAT_BUCKETS, np.int64)
+    np.add.at(hist, np.searchsorted(LAT_EDGES, lats, side="right"), 1)
+    p = hist_percentiles(hist)
+    assert p == {"p50": 4.0, "p99": 4.0, "p999": 256.0}
+
+
+def test_hist_percentiles_overflow_and_empty():
+    from repro.traffic.counters import N_LAT_BUCKETS
+    hist = np.zeros(N_LAT_BUCKETS, np.int64)
+    assert hist_percentiles(hist) == {"p50": 0.0, "p99": 0.0, "p999": 0.0}
+    hist[-1] = 5        # everything in the overflow bucket
+    assert hist_percentiles(hist)["p50"] == float("inf")
+
+
+def test_summarize_reports_percentiles():
+    run = _observed()
+    s = summarize(run.counters, run.msg_count)
+    agg = s["latency_percentiles"]
+    assert set(agg) == {"p50", "p99", "p999"}
+    assert agg["p50"] <= agg["p99"] <= agg["p999"]
+    per = s["latency_percentiles_per_remote"]
+    assert len(per) == 4 and all(set(p) == set(agg) for p in per)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: disabled path is bit-identical.
+# ---------------------------------------------------------------------------
+
+
+def test_observe_disabled_bit_identical():
+    """An observed run must not perturb the simulation: engine state,
+    counters and message counts all match observe=None exactly."""
+    R, L, OPS = 4, 8, 12
+    wl = WORKLOADS["zipfian"](jax.random.key(3), OPS, R, L)
+    steps = default_steps(OPS, R)
+    r0 = run_stream(_engine(R, L), wl, steps)
+    r1 = run_stream(_engine(R, L), wl, steps, observe=ObserveConfig())
+    np.testing.assert_array_equal(np.asarray(r0.msg_count),
+                                  np.asarray(r1.msg_count))
+    for a, b in zip(jax.tree_util.tree_leaves(r0.state),
+                    jax.tree_util.tree_leaves(r1.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(r0.counters),
+                    jax.tree_util.tree_leaves(r1.counters)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: clean runs pass the shipped specs, online == offline.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("homes", [1, 2])
+@pytest.mark.parametrize("workload", ["zipfian", "producer_consumer"])
+def test_clean_stream_passes_specs_r8(workload, homes):
+    run = _observed(n_remotes=8, n_lines=12, ops=16, homes=homes,
+                    workload=workload)
+    assert run.obs.violations == []
+    assert run.obs.dropped == 0
+    tb = run.obs.trace_buffer()
+    # the ring captured every delivered message (no wrap at this size)
+    assert len(tb.words) == int(np.asarray(run.msg_count).sum())
+    for name in ("req_resp", "single_writer"):
+        assert check_trace(SPECS[name], tb) == [], name
+
+
+def test_readonly_subset_passes_all_three_specs():
+    from repro.core.protocol import SUBSETS
+    R, L, OPS = 8, 12, 16
+    wl = WORKLOADS["zipfian"](jax.random.key(0), OPS, R, L,
+                              store_frac=0.0)
+    run = run_stream(
+        _engine(R, L, subset=SUBSETS["read_only"]), wl,
+        default_steps(OPS, R),
+        observe=ObserveConfig(specs=("req_resp", "single_writer",
+                                     "readonly")))
+    assert run.completed and run.obs.violations == []
+    tb = run.obs.trace_buffer()
+    for name in SPECS:
+        assert check_trace(SPECS[name], tb) == [], name
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("homes", [1, 2])
+def test_clean_stream_passes_specs_r64(homes):
+    """The acceptance-criterion scale: online NFA + EWF capture inside
+    the fused scan at R=64, H in {1, 2}, verdicts matching check_trace
+    over the exported ring."""
+    run = _observed(n_remotes=64, n_lines=32, ops=16, homes=homes,
+                    seed=0, capacity=1 << 14)
+    assert run.obs.violations == []
+    assert run.obs.dropped == 0
+    tb = run.obs.trace_buffer()
+    assert len(tb.words) == int(np.asarray(run.msg_count).sum())
+    for name in ("req_resp", "single_writer"):
+        assert check_trace(SPECS[name], tb) == [], name
+
+
+@pytest.mark.slow
+def test_readonly_subset_passes_all_three_specs_r64():
+    from repro.core.protocol import SUBSETS
+    R, L, OPS = 64, 32, 16
+    wl = WORKLOADS["zipfian"](jax.random.key(0), OPS, R, L,
+                              store_frac=0.0)
+    run = run_stream(
+        _engine(R, L, subset=SUBSETS["read_only"]), wl,
+        default_steps(OPS, R),
+        observe=ObserveConfig(capacity=1 << 14,
+                              specs=("req_resp", "single_writer",
+                                     "readonly")))
+    assert run.completed and run.obs.violations == []
+    tb = run.obs.trace_buffer()
+    for name in SPECS:
+        assert check_trace(SPECS[name], tb) == [], name
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: injected protocol mutations are caught, with the right
+# counterexample, online and offline.
+# ---------------------------------------------------------------------------
+
+
+def _find_open_window(tb):
+    """(step, line) one step after a request parked >= 2 steps before its
+    grant — a point where a second request on the line is illegal."""
+    open_at = {}
+    for m in tb.messages():
+        klass = int(m.vc) // 2
+        if klass == tp.CLASS_REMOTE_REQ and int(m.msg_type) in (
+                int(MsgType.REQ_READ_SHARED), int(MsgType.REQ_READ_EXCL),
+                int(MsgType.REQ_UPGRADE)):
+            open_at[int(m.line)] = int(m.txn)
+        elif klass == tp.CLASS_HOME_RESP and int(m.line) in open_at:
+            s = open_at.pop(int(m.line))
+            if int(m.txn) > s + 1:
+                return s + 1, int(m.line)
+    raise AssertionError("no open request window in trace")
+
+
+def test_injected_mutation_caught_online_with_counterexample():
+    clean = _observed()
+    istep, iline = _find_open_window(clean.obs.trace_buffer())
+    bad = _observed(inject=(istep, iline, int(MsgType.REQ_READ_SHARED)))
+    v = [v for v in bad.obs.violations if v.spec == "req_resp"]
+    assert v, bad.obs.violations
+    assert (v[0].step, v[0].line) == (istep, iline)
+    assert v[0].symbol == "REQ_READ_SHARED"
+    assert "wait" in v[0].states_before
+    # host-side parity: the mutated word is in the exported ring, and the
+    # offline checker flags the same line
+    hv = check_trace(SPECS["req_resp"], bad.obs.trace_buffer())
+    assert hv and hv[0].line == iline
+
+
+def test_injected_out_of_order_word_trips_host_checker():
+    """Pure host-side variant of the satellite: duplicate a request word
+    right after itself in a captured trace — SPEC_REQ_RESP must flag the
+    duplicate at that line with states {wait}."""
+    tb = _observed().obs.trace_buffer()
+    words = list(tb.words)
+    idx, line = None, None
+    for i, m in enumerate(tb.messages()):
+        if int(m.vc) // 2 == tp.CLASS_REMOTE_REQ and int(m.msg_type) in (
+                int(MsgType.REQ_READ_SHARED), int(MsgType.REQ_READ_EXCL)):
+            idx, line = i, int(m.line)
+            break
+    assert idx is not None
+    mutated = TraceBuffer.from_words(
+        words[:idx + 1] + [words[idx]] + words[idx + 1:],
+        capacity=len(words) + 1)
+    viol = check_trace(SPECS["req_resp"], mutated)
+    assert viol and viol[0].line == line
+    assert viol[0].states_before == frozenset({"wait"})
+
+
+# ---------------------------------------------------------------------------
+# Capture ring semantics: filters, wrap, port drops.
+# ---------------------------------------------------------------------------
+
+
+def test_line_and_type_filters_restrict_capture():
+    R, L, OPS = 4, 8, 12
+    wl = WORKLOADS["zipfian"](jax.random.key(3), OPS, R, L)
+    steps = default_steps(OPS, R)
+    line_filter = np.zeros(L, bool)
+    line_filter[:2] = True
+    type_filter = np.zeros(16, bool)
+    type_filter[int(MsgType.REQ_READ_SHARED)] = True
+    type_filter[int(MsgType.REQ_READ_EXCL)] = True
+    run = run_stream(_engine(R, L), wl, steps,
+                     observe=ObserveConfig(specs=()),
+                     line_filter=line_filter, type_filter=type_filter)
+    msgs = list(run.obs.trace_buffer().messages())
+    assert msgs, "filters should still admit hot-line requests"
+    assert all(int(m.line) < 2 for m in msgs)
+    assert all(int(m.msg_type) in (int(MsgType.REQ_READ_SHARED),
+                                   int(MsgType.REQ_READ_EXCL))
+               for m in msgs)
+
+
+def test_ring_wrap_keeps_newest_words():
+    run = _observed(capacity=32, specs=())
+    obs = run.obs
+    assert obs.captured_total > 32
+    assert len(obs.words) == 32
+    # oldest-first export: step numbers (txn field) are non-decreasing,
+    # and the final word is from the newest captured step
+    steps_seen = [int(m.txn) for m in obs.trace_buffer().messages()]
+    assert steps_seen == sorted(steps_seen)
+    full = _observed(capacity=4096, specs=())
+    assert steps_seen[-1] == int(
+        list(full.obs.trace_buffer().messages())[-1].txn)
+
+
+def test_port_cap_counts_drops():
+    """A starved trace port must COUNT dropped words, not lie: captured
+    + dropped == total messages delivered."""
+    run = _observed(port=2, specs=())
+    obs = run.obs
+    assert obs.dropped > 0
+    assert obs.captured_total + obs.dropped == \
+        int(np.asarray(run.msg_count).sum())
+
+
+# ---------------------------------------------------------------------------
+# Phase attribution.
+# ---------------------------------------------------------------------------
+
+
+def test_phase_attribution_accounting():
+    """Every accepted op contributes one queue and one service sample;
+    every grant one home sample; fan-out waits are a subset of grants."""
+    run = _observed(n_remotes=8, n_lines=12, ops=16)
+    hist = run.obs.phase_hist
+    assert hist.shape[0] == len(PHASES)
+    totals = dict(zip(PHASES, hist.sum(axis=1)))
+    ops_retired = int(np.asarray(run.counters.retired).sum())
+    assert totals["queue"] == totals["service"] == ops_retired
+    mc = np.asarray(run.msg_count)
+    grants = int(mc[int(MsgType.RESP_DATA)] + mc[int(MsgType.RESP_DATA_DIRTY)]
+                 + mc[int(MsgType.RESP_ACK)] + mc[int(MsgType.RESP_NACK)]
+                 - mc[int(MsgType.VOL_DOWNGRADE_S)]
+                 - mc[int(MsgType.VOL_DOWNGRADE_I)]
+                 - mc[int(MsgType.HOME_DOWNGRADE_S)]
+                 - mc[int(MsgType.HOME_DOWNGRADE_I)])
+    assert totals["home"] > 0
+    assert 0 < totals["fanout"] <= totals["home"]
+    pct = run.obs.phase_percentiles()
+    for ph in PHASES:
+        assert pct[ph]["p50"] <= pct[ph]["p99"] <= pct[ph]["p999"]
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export.
+# ---------------------------------------------------------------------------
+
+
+def test_perfetto_export_shape():
+    from repro.traffic import perfetto_events
+    run = _observed()
+    doc = perfetto_events(run.obs.trace_buffer())
+    evs = doc["traceEvents"]
+    assert evs
+    spans = [e for e in evs if e["ph"] == "X"]
+    instants = [e for e in evs if e["ph"] == "i"]
+    assert spans and instants
+    for e in spans:
+        assert e["dur"] >= 1 and e["pid"].startswith("home")
+    # every span's latency is consistent with its endpoints
+    for e in spans:
+        assert e["args"]["latency_steps"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# Spec compilation invariants.
+# ---------------------------------------------------------------------------
+
+
+def test_all_shipped_specs_compile():
+    from repro.traffic.observe import _encoded_tables, compiled_specs
+    comp = compiled_specs(tuple(SPECS))
+    tab, start = _encoded_tables(comp)
+    assert tab.shape[0] == len(SPECS)
+    # start masks are singleton state sets containing each spec's start
+    for c, s in zip(comp, start):
+        assert c.start_mask == int(s)
+        assert c.mask_states(int(s)) == SPECS[c.name].start
+
+
+def test_compiled_spec_matches_host_step():
+    """The powerset table agrees with NFASpec.step on random symbol
+    sequences (the online checker's ground truth)."""
+    rng = np.random.default_rng(0)
+    for name, nfa in SPECS.items():
+        c = compile_spec(nfa)
+        idx = {s: i for i, s in enumerate(c.states)}
+        for _ in range(20):
+            mask = c.start_mask
+            states = set(nfa.start)
+            for sym_raw in rng.integers(0, 16, size=30):
+                sym = symbol_of(int(sym_raw), 0)
+                nxt = nfa.step(states, sym)
+                online = int(c.table[mask, int(sym_raw)])
+                if not nxt:     # violation: both resync to start
+                    assert online == 0
+                    states = set(nfa.start)
+                    mask = c.start_mask
+                    continue
+                assert online == sum(1 << idx[s] for s in nxt)
+                states, mask = set(nxt), online
