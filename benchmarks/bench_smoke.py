@@ -21,7 +21,13 @@ Gate rules (exit 1 on violation):
   stay semantically bit-identical to the untraced one, check clean
   against the online protocol specs, and cost at most
   ``OBS_OVERHEAD_LIMIT`` (1.15x) wall time — observability-overhead
-  regressions gate like perf regressions.
+  regressions gate like perf regressions;
+* open-loop knee (docs/serving.md): the R=8 Poisson sweep's
+  sub-saturation points must complete with p99 sojourn within
+  ``--tolerance`` of baseline, the past-saturation point must show
+  unserved backlog (overload detected), and the middle point's
+  retirement trace must replay EXACTLY against ``MultiNodeRef`` —
+  admission gates when ops issue, never what they do.
 
 ``--write-baseline`` refreshes the committed baseline file instead of
 comparing (run it locally when a PR intentionally shifts throughput).
@@ -70,6 +76,22 @@ OBS_CONFIG = dict(n_remotes=64, n_lines=32, block=4, ops=24)
 OBS_HOMES = (1, 2)
 OBS_OVERHEAD_LIMIT = 1.15
 
+#: open-loop knee curve (docs/serving.md): seeded Poisson arrivals at
+#: three offered loads (ops/step/remote) through the FIFO + reserve
+#: admission loop.  Closed-loop capacity at this config is ~0.084
+#: ops/step/remote (the committed r8 streaming baseline / 8), so 0.02 and
+#: 0.05 sit below the knee and 0.30 is past saturation — the overload
+#: point runs a FIXED window (the arrival span) and must end with
+#: unserved backlog; the sub-saturation points must complete, with p99
+#: sojourn gated at ±tolerance against the committed baseline.  The
+#: middle point replays its retirement trace against MultiNodeRef —
+#: oracle exactness UNDER the admission loop, on the gate.
+KNEE_CONFIG = dict(workload="zipfian", n_remotes=8, n_lines=16, ops=48)
+KNEE_RATES = (0.02, 0.05, 0.30)
+KNEE_OVERLOAD_FROM = 0.20          # rates >= this expect overload
+KNEE_VALIDATE_RATE = 0.05          # this point oracle-validates
+KNEE_ADMISSION = (16, 2)           # (max_inflight, reserve watermark)
+
 
 def run_fanout() -> dict:
     """Tiny fan-out exactness check: engine count == oracle == R-1."""
@@ -103,22 +125,21 @@ def run_fanout() -> dict:
 
 def run_streaming() -> dict:
     """Tiny zipfian streaming runs; deterministic throughput metrics."""
-    import jax
-    import jax.numpy as jnp
-    from repro.traffic import WORKLOADS, default_steps, run_stream, summarize
-    from repro.core.engine_mn import EngineMN
+    from repro.traffic import (EngineConfig, StreamConfig, WorkloadSpec,
+                               default_steps, run_stream, summarize)
 
     out = {}
     for workload, n_remotes, n_lines, ops, width, homes in STREAM_CONFIGS:
-        eng = EngineMN(jnp.zeros((n_lines, 2), jnp.float32),
-                       n_remotes=n_remotes, n_homes=homes)
-        wl = WORKLOADS[workload](jax.random.key(0), ops, n_remotes, n_lines)
+        ecfg = EngineConfig(remotes=n_remotes, lines=n_lines, homes=homes)
         steps = default_steps(ops, n_remotes)
+        scfg = StreamConfig(workload=WorkloadSpec(workload, ops=ops,
+                                                  seed=0),
+                            steps=steps, width=width)
         t0 = time.perf_counter()
-        run = run_stream(eng, wl, steps=steps, width=width)  # compile + run
+        run = run_stream(ecfg.build(), scfg)              # compile + run
         t_compile = time.perf_counter() - t0
         t0 = time.perf_counter()
-        run = run_stream(eng, wl, steps=steps, width=width)
+        run = run_stream(ecfg.build(), scfg)
         wall = time.perf_counter() - t0
         s = summarize(run.counters, run.msg_count)
         # zipfian keys keep their historical names so the committed
@@ -156,27 +177,27 @@ def run_wallclock(repeats: int = 3) -> dict:
     ACTIVE steps only (the generous drain-tail budget must not dilute the
     rate) — the metric of the >=1.5x acceptance criterion.
     """
-    import jax
-    import jax.numpy as jnp
-    from repro.traffic import WORKLOADS, default_steps, run_stream, summarize
-    from repro.core.engine_mn import EngineMN
+    from repro.traffic import (EngineConfig, StreamConfig, WorkloadSpec,
+                               default_steps, run_stream, summarize)
 
     cfg = WALLCLOCK_CONFIG
     n_remotes, n_lines = cfg["n_remotes"], cfg["n_lines"]
-    wl = WORKLOADS["zipfian"](jax.random.key(0), cfg["ops"], n_remotes,
-                              n_lines)
     steps = default_steps(cfg["ops"], n_remotes)
+    ecfg = EngineConfig(remotes=n_remotes, lines=n_lines,
+                        block=cfg["block"])
     out = {}
     for width in WALLCLOCK_WIDTHS:
-        eng = EngineMN(jnp.zeros((n_lines, cfg["block"]), jnp.float32),
-                       n_remotes=n_remotes)
+        eng = ecfg.build()
+        scfg = StreamConfig(workload=WorkloadSpec("zipfian",
+                                                  ops=cfg["ops"], seed=0),
+                            steps=steps, width=width)
         t0 = time.perf_counter()
-        run = run_stream(eng, wl, steps=steps, width=width)   # compile+warm
+        run = run_stream(eng, scfg)                         # compile+warm
         t_compile = time.perf_counter() - t0
         best = float("inf")
         for _ in range(repeats):
             t0 = time.perf_counter()
-            run = run_stream(eng, wl, steps=steps, width=width)
+            run = run_stream(eng, scfg)
             best = min(best, time.perf_counter() - t0)
         assert run.completed, "wallclock stream did not drain"
         s = summarize(run.counters, run.msg_count)
@@ -207,17 +228,14 @@ def run_observability(repeats: int = 5) -> dict:
     back-to-back (untraced, traced) pairs — gated at
     ``OBS_OVERHEAD_LIMIT`` — plus the semantic-identity and
     zero-violations facts the gate also enforces."""
-    import jax
-    import jax.numpy as jnp
     import numpy as np
-    from repro.core.engine_mn import EngineMN
-    from repro.traffic import (ObserveConfig, WORKLOADS, default_steps,
-                               run_stream, summarize)
+    from repro.traffic import (EngineConfig, ObserveConfig, StreamConfig,
+                               WorkloadSpec, default_steps, run_stream,
+                               summarize)
 
     cfg = OBS_CONFIG
     n_remotes, n_lines = cfg["n_remotes"], cfg["n_lines"]
-    wl = WORKLOADS["zipfian"](jax.random.key(0), cfg["ops"], n_remotes,
-                              n_lines)
+    wspec = WorkloadSpec("zipfian", ops=cfg["ops"], seed=0)
     steps = default_steps(cfg["ops"], n_remotes)
     obs_cfg = ObserveConfig(capture=True, capacity=1 << 12,
                             specs=("req_resp", "single_writer"),
@@ -225,12 +243,13 @@ def run_observability(repeats: int = 5) -> dict:
     out = {}
     for homes in OBS_HOMES:
         variants = (("untraced", None), ("traced", obs_cfg))
+        ecfg = EngineConfig(remotes=n_remotes, lines=n_lines,
+                            block=cfg["block"], homes=homes)
 
         def _measure(observe):
-            eng = EngineMN(jnp.zeros((n_lines, cfg["block"]), jnp.float32),
-                           n_remotes=n_remotes, n_homes=homes)
             t0 = time.perf_counter()
-            run = run_stream(eng, wl, steps=steps, observe=observe)
+            run = run_stream(ecfg.build(), StreamConfig(
+                workload=wspec, steps=steps, observe=observe))
             return run, time.perf_counter() - t0
 
         runs = {}
@@ -278,6 +297,61 @@ def run_observability(repeats: int = 5) -> dict:
     return out
 
 
+def run_knee() -> dict:
+    """Open-loop knee curve: p50/p99/p999 sojourn vs offered load.
+
+    Deterministic end to end (seeded arrivals, seeded workload,
+    deterministic engine), so the sub-saturation p99s gate against the
+    committed baseline like ops/step does.  The overload point measures a
+    FIXED window — exactly the arrival span — so the queue is still
+    growing when the window closes: ``backlog > 0`` is the structural
+    overload signature the gate demands (an auto budget would let the
+    finite stream drain and hide the collapse)."""
+    import numpy as np
+    from repro.traffic import (AdmissionConfig, ArrivalSpec, EngineConfig,
+                               StreamConfig, WorkloadSpec, run_stream,
+                               sojourn_summary, validate_run)
+
+    cfg = KNEE_CONFIG
+    ecfg = EngineConfig(remotes=cfg["n_remotes"], lines=cfg["n_lines"])
+    out = {}
+    for rate in KNEE_RATES:
+        arr = ArrivalSpec("poisson", rate=rate, seed=1)
+        sched = arr.materialize(cfg["ops"], cfg["n_remotes"])
+        last_arrival = int(np.asarray(sched.step).max())
+        expect_overload = rate >= KNEE_OVERLOAD_FROM
+        validate = rate == KNEE_VALIDATE_RATE
+        scfg = StreamConfig(
+            workload=WorkloadSpec(cfg["workload"], ops=cfg["ops"], seed=0),
+            arrivals=arr,
+            admission=AdmissionConfig(*KNEE_ADMISSION),
+            steps=last_arrival if expect_overload else 0,
+            collect_trace=validate)
+        t0 = time.perf_counter()
+        run = run_stream(ecfg.build(), scfg)
+        wall = time.perf_counter() - t0
+        if validate:
+            validate_run(run)   # oracle EXACT under the admission loop
+        s = sojourn_summary(run)
+        perc = s["sojourn_percentiles"]
+        out[f"rate{rate:g}"] = {
+            "offered_per_remote": rate,
+            "expect_overload": expect_overload,
+            "completed": bool(run.completed),
+            "backlog": int(s["backlog"]),
+            "sojourn_p50": perc["p50"],
+            "sojourn_p99": perc["p99"],
+            "sojourn_p999": perc["p999"],
+            "admit_wait_p99": s["admit_wait_percentiles"]["p99"],
+            "validated": bool(validate),
+            "steps": int(run.counters.steps),
+            "last_arrival": last_arrival,
+            # informational only — never gated:
+            "wall_s": round(wall, 3),
+        }
+    return out
+
+
 def collect(wallclock: bool = False) -> dict:
     import jax
     rec = {
@@ -287,6 +361,7 @@ def collect(wallclock: bool = False) -> dict:
         "fanout": run_fanout(),
         "streaming": run_streaming(),
         "observability": run_observability(),
+        "knee": run_knee(),
     }
     if wallclock:
         rec["wallclock"] = run_wallclock()
@@ -335,6 +410,29 @@ def gate(current: dict, baseline: dict, tolerance: float) -> list:
                 f"{rec['overhead_limit']:.2f} (traced "
                 f"{rec['traced_steps_per_s']:.0f} vs untraced "
                 f"{rec['untraced_steps_per_s']:.0f} steps/s)")
+    # knee gate: the open-loop service model must keep its shape — the
+    # past-saturation point detects overload (unserved backlog in a
+    # fixed window), the sub-saturation points complete with p99 sojourn
+    # within tolerance of the committed baseline.
+    for key, rec in current.get("knee", {}).items():
+        if rec["expect_overload"]:
+            if rec["backlog"] <= 0:
+                bad.append(
+                    f"knee {key}: offered {rec['offered_per_remote']} "
+                    f"past saturation but no unserved backlog — overload "
+                    f"not detected")
+            continue
+        if not rec["completed"]:
+            bad.append(f"knee {key}: sub-saturation point did not drain")
+        base = baseline.get("knee", {}).get(key) if baseline else None
+        if base is None:
+            continue
+        ceil = (1.0 + tolerance) * base["sojourn_p99"]
+        if rec["sojourn_p99"] > ceil:
+            bad.append(
+                f"knee {key}: p99 sojourn {rec['sojourn_p99']:.0f} "
+                f"regressed >{tolerance:.0%} vs baseline "
+                f"{base['sojourn_p99']:.0f} (ceiling {ceil:.0f})")
     return bad
 
 
@@ -394,6 +492,13 @@ def main() -> None:
               f"{rec['overhead_limit']:.2f}) violations "
               f"{rec['violations']} identical "
               f"{rec['identical_semantics']}")
+    for key, rec in sorted(current.get("knee", {}).items(),
+                           key=lambda kv: kv[1]["offered_per_remote"]):
+        print(f"knee {key}: p50/p99/p999 sojourn "
+              f"{rec['sojourn_p50']:.0f}/{rec['sojourn_p99']:.0f}/"
+              f"{rec['sojourn_p999']:.0f} backlog {rec['backlog']}"
+              + (" OVERLOAD" if rec["expect_overload"] else "")
+              + (" validated" if rec["validated"] else ""))
     if violations:
         for v in violations:
             print("FAIL:", v)

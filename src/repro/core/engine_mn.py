@@ -748,6 +748,27 @@ class EngineMN:
                                      n_homes, home_bw)
         self._backing = backing
 
+    @classmethod
+    def from_config(cls, cfg) -> "EngineMN":
+        """Build from a ``traffic.config.EngineConfig``-shaped object —
+        the single construction surface the CLI, smoke and bench share.
+
+        Duck-typed on attribute names (``remotes``/``lines``/``block``/
+        ``subset``/``moesi``/``credits``/``shared_credits``/``homes``/
+        ``home_bw``) so core never imports the traffic package.
+        ``subset`` is a ``SUBSETS`` name ("" lets ``moesi`` pick the full
+        protocol); ``credits`` is a uniform per-VC override (0 = the
+        transport default)."""
+        from .protocol import SUBSETS
+        subset = SUBSETS[cfg.subset] if cfg.subset else None
+        credits = None
+        if cfg.credits:
+            credits = np.asarray([cfg.credits] * tp.N_VCS, np.int32)
+        return cls(jnp.zeros((cfg.lines, cfg.block), jnp.float32),
+                   n_remotes=cfg.remotes, moesi=cfg.moesi, subset=subset,
+                   credits=credits, shared_credits=cfg.shared_credits,
+                   n_homes=cfg.homes, home_bw=cfg.home_bw)
+
     def init(self) -> EngineMNState:
         # fresh copy of the backing: the jitted hot paths DONATE the state,
         # so the first state's buffers must not alias the caller's array

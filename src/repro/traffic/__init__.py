@@ -1,29 +1,41 @@
-"""Streaming traffic subsystem: workload generators, a quiescence-free
-engine driver, hardware-style perf counters, and the in-scan
-observability plane (see docs/traffic.md and docs/observability.md).
+"""Streaming traffic subsystem: workload generators, open-loop arrival
+processes, a quiescence-free engine driver with continuous-batching
+admission, hardware-style perf counters, and the in-scan observability
+plane (see docs/traffic.md, docs/serving.md and docs/observability.md).
 
-    from repro.traffic import WORKLOADS, ObserveConfig, run_stream, \
-        summarize
+    from repro.traffic import (EngineConfig, StreamConfig, WorkloadSpec,
+                               ArrivalSpec, AdmissionConfig, run_stream,
+                               summarize, sojourn_summary)
 
-    eng = EngineMN(jnp.zeros((64, 4), jnp.float32), n_remotes=4)
-    wl = WORKLOADS["zipfian"](jax.random.key(0), 128, 4, 64)
-    run = run_stream(eng, wl, steps=1024, width=2,   # issue width W=2
-                     observe=ObserveConfig())        # trace + check + attr
+    eng = EngineConfig(remotes=8, lines=64).build()
+    run = run_stream(eng, StreamConfig(
+        workload=WorkloadSpec("zipfian", ops=256),
+        arrivals=ArrivalSpec("poisson", rate=0.05),     # open loop
+        admission=AdmissionConfig(max_inflight=32, reserve=4),
+        width=2))
     print(summarize(run.counters, run.msg_count))
-    print(run.obs.violations, run.obs.phase_percentiles())
+    print(sojourn_summary(run))     # knee-curve serving metrics
 """
-from .counters import (Counters, RetirementTrace, acc_total,
-                       assert_counts_match, hist_percentiles,
-                       replay_reference, summarize, validate_run)
+from .arrivals import ARRIVALS, ArrivalSchedule, check_schedule
+from .config import (AdmissionConfig, ArrivalSpec, EngineConfig,
+                     StreamConfig, WorkloadSpec, config_from_json,
+                     config_to_json)
+from .counters import (Counters, LAT_EDGES, RetirementTrace, SOJOURN_EDGES,
+                       acc_total, assert_counts_match, hist_percentiles,
+                       replay_reference, sojourn_summary, summarize,
+                       validate_run)
 from .driver import StreamRun, default_steps, run_stream
 from .observe import (ObserveConfig, ObsResult, OnlineViolation,
                       perfetto_events, write_perfetto)
 from .workloads import WORKLOADS, Workload
 
 __all__ = [
-    "Counters", "ObserveConfig", "ObsResult", "OnlineViolation",
-    "RetirementTrace", "StreamRun", "WORKLOADS", "Workload",
-    "acc_total", "assert_counts_match", "default_steps",
-    "hist_percentiles", "perfetto_events", "replay_reference",
-    "run_stream", "summarize", "validate_run", "write_perfetto",
+    "ARRIVALS", "AdmissionConfig", "ArrivalSchedule", "ArrivalSpec",
+    "Counters", "EngineConfig", "LAT_EDGES", "ObserveConfig", "ObsResult",
+    "OnlineViolation", "RetirementTrace", "SOJOURN_EDGES", "StreamConfig",
+    "StreamRun", "WORKLOADS", "Workload", "WorkloadSpec", "acc_total",
+    "assert_counts_match", "check_schedule", "config_from_json",
+    "config_to_json", "default_steps", "hist_percentiles",
+    "perfetto_events", "replay_reference", "run_stream", "sojourn_summary",
+    "summarize", "validate_run", "write_perfetto",
 ]

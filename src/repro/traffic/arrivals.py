@@ -1,0 +1,130 @@
+"""Open-loop arrival processes for the streaming traffic subsystem.
+
+Every generator in ``traffic.workloads`` is CLOSED-LOOP: the driver keeps
+each remote's issue window full, so the offered load always equals the
+engine's capacity and the system can never be overloaded — queueing
+collapse and the p99-under-load knee (THE serving metric of the ROADMAP's
+"heavy traffic from millions of users" north star) are structurally
+invisible.  This module supplies the missing half: a seeded **arrival
+schedule** stamping each workload slot with the engine step at which it
+becomes issuable.  The driver's admission loop (``traffic.driver``) then
+gates WHEN ops enter flight — never WHAT they do — so retirement-order
+replay against ``MultiNodeRef`` stays exact while sojourn
+(arrival -> retirement) becomes the measured latency.
+
+An ``ArrivalSchedule`` is a ``[T, R]`` int32 array, nondecreasing down
+each column: ``step[t, r]`` is the arrival step of remote ``r``'s
+``t``-th stream op.  Like the workload generators, everything is
+``jax.random`` under one key — runs are seeded and reproducible — and
+the offered load is ``rate`` ops per remote per engine step.
+
+Processes:
+
+* ``at_step0``   — every op arrives at step 0: the closed-loop control
+  (with admission unbounded, the driver's schedule is bit-identical to
+  the plain ``Workload`` replay — pinned in ``tests/test_serving.py``).
+* ``poisson``    — i.i.d. exponential interarrivals of mean ``1/rate``
+  steps (floored to integer steps), the memoryless open-loop baseline.
+* ``bursty``     — a two-phase Markov-modulated process: interarrival
+  gaps draw from a fast phase (``rate * hi_lo_ratio``) or a slow phase
+  (``rate / hi_lo_ratio``), the phase flipping with probability
+  ``p_flip`` at each arrival epoch.  Mean offered load stays ~``rate``
+  while arrivals clump — the tail-stressing traffic real serving fleets
+  see (flash crowds, batch front-ends).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ArrivalSchedule(NamedTuple):
+    """Arrival step per workload slot (the op-chain stamp).
+
+    ``step[t, r]`` is the engine step at which remote ``r``'s ``t``-th
+    stream op arrives; nondecreasing down each column (per-remote FIFO —
+    the driver's issue window is the head of this queue)."""
+
+    step: jnp.ndarray  # [T, R] int32, nondecreasing along axis 0
+
+
+def check_schedule(sched: ArrivalSchedule, ops: int, n_remotes: int
+                   ) -> None:
+    """Loud entry validation: shape, dtype, and per-column monotonicity
+    (the driver's FIFO window assumes stream order IS arrival order)."""
+    st = np.asarray(sched.step)
+    if st.shape != (ops, n_remotes):
+        raise ValueError(
+            f"arrival schedule shape {st.shape} != workload [T, R] = "
+            f"{(ops, n_remotes)}")
+    if not np.issubdtype(st.dtype, np.integer):
+        raise ValueError(
+            f"arrival schedule must be integer steps, got {st.dtype}")
+    if st.size and ((st < 0).any() or (np.diff(st, axis=0) < 0).any()):
+        raise ValueError(
+            "arrival schedule must be >= 0 and nondecreasing per remote "
+            "(stream order is FIFO arrival order)")
+
+
+def at_step0(key, ops: int, n_remotes: int, rate: float = 0.0
+             ) -> ArrivalSchedule:
+    """Everything arrives at step 0 — the closed-loop control schedule
+    (``rate`` is accepted and ignored for registry uniformity)."""
+    del key, rate
+    return ArrivalSchedule(jnp.zeros((ops, n_remotes), jnp.int32))
+
+
+def _cum_gaps(gaps: jnp.ndarray) -> ArrivalSchedule:
+    """Integer-floored interarrival gaps -> cumulative arrival steps."""
+    steps = jnp.cumsum(jnp.floor(gaps).astype(jnp.int32), axis=0)
+    return ArrivalSchedule(steps)
+
+
+def poisson(key, ops: int, n_remotes: int, rate: float = 0.1
+            ) -> ArrivalSchedule:
+    """Memoryless arrivals: exponential interarrivals of mean ``1/rate``
+    engine steps per remote (``rate`` = offered ops/step/remote)."""
+    assert rate > 0, f"poisson arrival rate must be > 0, got {rate}"
+    gaps = jax.random.exponential(key, (ops, n_remotes)) / rate
+    return _cum_gaps(gaps)
+
+
+def bursty(key, ops: int, n_remotes: int, rate: float = 0.1,
+           hi_lo_ratio: float = 4.0, p_flip: float = 0.1
+           ) -> ArrivalSchedule:
+    """Two-phase Markov-modulated arrivals (MMPP-style burstiness).
+
+    Each remote alternates between a FAST phase (arrival rate
+    ``rate * hi_lo_ratio`` — a burst) and a SLOW phase
+    (``rate / hi_lo_ratio`` — a lull); the phase flips with probability
+    ``p_flip`` at every arrival epoch, so burst lengths are geometric.
+    The phase rates are normalized so the long-run MEAN gap stays
+    ``1/rate`` exactly (raw symmetric modulation would inflate it by
+    ``(k + 1/k) / 2``) while the variance (and the p99 it drives) grows
+    with ``hi_lo_ratio``."""
+    assert rate > 0 and hi_lo_ratio >= 1.0, (rate, hi_lo_ratio)
+    k_exp, k_flip, k_init = jax.random.split(key, 3)
+    flips = jax.random.bernoulli(k_flip, p_flip, (ops, n_remotes))
+    phase0 = jax.random.bernoulli(k_init, 0.5, (1, n_remotes))
+    # phase sequence: cumulative parity of the flip indicators.
+    phase = (jnp.cumsum(flips.astype(jnp.int32), axis=0)
+             + phase0.astype(jnp.int32)) % 2
+    # E[gap] over equally-likely phases = (1/k + k) / (2 * r * norm);
+    # norm makes that exactly 1/rate, so ``rate`` IS the offered load.
+    norm = (hi_lo_ratio + 1.0 / hi_lo_ratio) / 2.0
+    r = jnp.where(phase == 0, rate * hi_lo_ratio, rate / hi_lo_ratio)
+    gaps = jax.random.exponential(k_exp, (ops, n_remotes)) / (r * norm)
+    return _cum_gaps(gaps)
+
+
+#: name -> generator, all with the uniform (key, ops, n_remotes, rate)
+#: prefix signature (process-specific knobs are keyword-defaulted) —
+#: mirrors ``workloads.WORKLOADS``.
+ARRIVALS: Dict[str, Callable[..., ArrivalSchedule]] = {
+    "at_step0": at_step0,
+    "poisson": poisson,
+    "bursty": bursty,
+}

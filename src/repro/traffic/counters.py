@@ -39,6 +39,14 @@ from ..core.protocol import LocalOp
 LAT_EDGES = np.asarray([1, 2, 4, 8, 16, 32, 64, 128, 256], np.int32)
 N_LAT_BUCKETS = len(LAT_EDGES) + 1
 
+#: sojourn (arrival -> retirement) histogram edges for OPEN-LOOP runs.
+#: Sojourn includes queue wait, which under overload grows with the run
+#: length rather than the protocol depth, so the range extends far past
+#: LAT_EDGES — a p99 in the 8192 overflow bucket is the knee curve's
+#: "past saturation" signal.
+SOJOURN_EDGES = np.asarray([1 << i for i in range(14)], np.int32)
+N_SOJ_BUCKETS = len(SOJOURN_EDGES) + 1
+
 #: the four coherence channel classes, in Counters.occ_* order.
 CHANNELS = ("req", "resp", "hreq", "hresp")
 
@@ -231,6 +239,31 @@ def summarize(ctr: Counters, msg_count: np.ndarray,
         "payload_msgs": int(payload_msgs),
         "messages": {MsgType(i).name: int(mc[i]) for i in range(16)
                      if mc[i]},
+    }
+
+
+def sojourn_summary(run) -> Dict[str, object]:
+    """Host-side digest of an OPEN-LOOP run's serving metrics.
+
+    Sojourn is arrival -> retirement (queue wait + service); admit wait is
+    arrival -> admission (the queueing component alone).  Percentiles are
+    the same conservative upper-bucket-edge bounds as
+    ``hist_percentiles`` — ``inf`` means the quantile fell past the last
+    ``SOJOURN_EDGES`` edge, i.e. the system was past saturation.
+    ``backlog`` is the number of arrived-but-never-issued ops left when
+    the step budget ran out: > 0 is the unserved-queue-growth signature
+    of overload."""
+    assert run.sojourn_hist is not None, \
+        "sojourn_summary needs an open-loop StreamRun (cfg.arrivals set)"
+    return {
+        "sojourn_percentiles":
+            hist_percentiles(run.sojourn_hist, SOJOURN_EDGES),
+        "admit_wait_percentiles":
+            hist_percentiles(run.admit_wait_hist, SOJOURN_EDGES),
+        "sojourn_hist": np.asarray(run.sojourn_hist).tolist(),
+        "admit_wait_hist": np.asarray(run.admit_wait_hist).tolist(),
+        "backlog": int(run.backlog),
+        "completed": bool(run.completed),
     }
 
 

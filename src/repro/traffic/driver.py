@@ -32,10 +32,24 @@ atomic ``MultiNodeRef`` to validate the message counters exactly; the
 replay argument is per-line retirement order, which multi-op issue leaves
 untouched (same-line ops stay in program order, cross-line ops commute in
 the atomic oracle), so counter exactness holds at every width.
+
+**Open-loop serving** (``StreamConfig.arrivals``): each workload slot
+carries an arrival step (``traffic.arrivals``), and a continuous-batching
+admission loop runs inside the same fused scan — a slot becomes an issue
+candidate only once it has ARRIVED, and (when ``StreamConfig.admission``
+caps the batch) only while global in-flight count sits below
+``max_inflight - reserve``, with the candidate set admitted FIFO by
+arrival stamp.  Admission gates WHEN an op enters flight, never what it
+does, so the retirement-order oracle replay above stays exact; what
+changes is the measurement: sojourn (arrival -> retirement) and admission
+wait fold into dedicated histograms (``SOJOURN_EDGES``) carried separately
+from ``Counters``, so a closed-loop-equivalent schedule (all arrivals at
+step 0, no cap) leaves every existing counter bit-identical.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -45,8 +59,11 @@ import numpy as np
 from ..core.engine_mn import EngineMN, EngineMNState, busy_flag_mn, step_mn
 from ..core.messages import MsgType
 from ..core.protocol import LocalOp, mn_tables
-from .counters import (Counters, RetirementTrace, make_counters,
-                       update_counters)
+from .arrivals import ArrivalSchedule, check_schedule
+from .config import (AdmissionConfig, ArrivalSpec, StreamConfig,
+                     WorkloadSpec)
+from .counters import (Counters, N_SOJ_BUCKETS, RetirementTrace,
+                       SOJOURN_EDGES, make_counters, update_counters)
 from .observe import (ObserveConfig, ObsResult, _encoded_tables,
                       compiled_specs, finalize_obs, fold_obs,
                       make_obs_carry)
@@ -56,6 +73,15 @@ from .workloads import Workload
 # planes (at most one contributing slot per (remote, line), the rest add
 # the identity) — which requires NOP to be the zero code.
 assert int(LocalOp.NOP) == 0 and int(MsgType.NOP) == 0
+
+
+class _Soj(NamedTuple):
+    """Open-loop serving telemetry, carried SEPARATELY from ``Counters``
+    so closed-loop-equivalent open-loop runs keep those bit-identical."""
+
+    born: jnp.ndarray   # [R, L] int32: arrival step of the in-flight txn
+    hist: jnp.ndarray   # [N_SOJ_BUCKETS] int32: sojourn histogram
+    admit: jnp.ndarray  # [N_SOJ_BUCKETS] int32: admission-wait histogram
 
 
 class _Carry(NamedTuple):
@@ -74,9 +100,10 @@ class _Carry(NamedTuple):
     ctr: Counters
     obs: object = None        # ObsCarry when observability is enabled;
     #                           None (an empty pytree) otherwise
+    soj: object = None        # _Soj for open-loop runs; None otherwise
 
 
-def default_steps(ops: int, n_remotes: int) -> int:
+def default_steps(ops: int, n_remotes: int, last_arrival: int = 0) -> int:
     """Step budget covering an ``ops``-per-remote stream plus drain tail.
 
     Sustained throughput saturates near 1 op/step under hot-line
@@ -84,8 +111,14 @@ def default_steps(ops: int, n_remotes: int) -> int:
     per-remote ops — a fixed multiple of ``ops`` strands wide runs with
     ``completed=False``.  (Issue width can only bring retirement EARLIER,
     so the width-1 budget is safe at every width; steps on a drained
-    engine are no-ops, so the generous tail only costs device time.)"""
-    return 2 * ops * n_remotes + 12 * ops + 64
+    engine are no-ops, so the generous tail only costs device time.)
+
+    ``last_arrival`` extends the budget for OPEN-LOOP runs: an op that
+    arrives at step ``a`` cannot retire before it, so the closed-loop
+    budget shifts out by the latest arrival stamp.  This is the ONE
+    shared auto-derivation helper — the driver (``steps=0``), the CLI
+    (``--steps 0``) and ``bench_smoke`` all call it."""
+    return 2 * ops * n_remotes + 12 * ops + 64 + int(last_arrival)
 
 
 class StreamRun(NamedTuple):
@@ -98,21 +131,32 @@ class StreamRun(NamedTuple):
     trace: Optional[RetirementTrace]
     completed: bool           # stream fully consumed AND engine quiescent
     obs: Optional[ObsResult] = None   # observability digest (observe=...)
+    # ---- open-loop serving results (cfg.arrivals set; else None/0) ------
+    sojourn_hist: Optional[np.ndarray] = None     # [N_SOJ_BUCKETS] int64
+    admit_wait_hist: Optional[np.ndarray] = None  # [N_SOJ_BUCKETS] int64
+    backlog: int = 0          # arrived-but-never-issued ops at budget end
+    #                           (> 0 = unserved queue growth: overload)
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                    hreq_shared: bool = False, n_homes: int = 1,
                    home_bw: int = 0,
-                   obs: Optional[ObserveConfig] = None):
+                   obs: Optional[ObserveConfig] = None,
+                   open_loop: bool = False, admit_cap: int = 0,
+                   admit_reserve: int = 0):
     """One fused streaming program per (subset, trace?, width, credit
-    model, home plane, observability) tuple, shared across engines; shapes
-    (R, L, T, total steps) retrace inside jit's cache.  The engine state
-    is donated — the streaming scan is the hot path, and per-step
-    reallocation of the ``[R, L]`` slabs is pure overhead.  ``obs=None``
-    (the default) leaves the traced program EXACTLY what it always was —
-    observability is compiled in only when an ``ObserveConfig`` keys a
-    separate cache entry."""
+    model, home plane, observability, admission) tuple, shared across
+    engines; shapes (R, L, T, total steps) retrace inside jit's cache.
+    The engine state is donated — the streaming scan is the hot path, and
+    per-step reallocation of the ``[R, L]`` slabs is pure overhead.
+    ``obs=None`` (the default) leaves the traced program EXACTLY what it
+    always was — observability is compiled in only when an
+    ``ObserveConfig`` keys a separate cache entry, and likewise
+    ``open_loop=False`` compiles no arrival/admission logic at all.
+    ``admit_cap``/``admit_reserve`` are STATIC (they key the program), so
+    a knee sweep varying only the arrival schedule reuses one compiled
+    program."""
     tables_mn = mn_tables(subset_name)
     step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
                                 hreq_shared=hreq_shared, n_homes=n_homes,
@@ -124,7 +168,7 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
         tab_np, start_np = _encoded_tables(comp)
 
     def run(st, wl_op, wl_line, wl_value, tsteps, delays, credits,
-            line_filt=None, type_filt=None):
+            line_filt=None, type_filt=None, arr_step=None):
         R, L = st.hreq_pending.shape
         B = st.dir.backing.shape[1]
         T = wl_op.shape[0]
@@ -133,6 +177,8 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
         wr = jnp.arange(W)
         zb = jnp.zeros((L,), bool)
         zwv = jnp.zeros((L, B), dt)
+        soj_edges = jnp.asarray(SOJOURN_EDGES)
+        soj_ids = jnp.arange(N_SOJ_BUCKETS)
 
         def body(c, t):
             # ---- fetch each remote's issue window -----------------------
@@ -148,12 +194,40 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             # one MSHR per (remote, line): a slot is serialized in-queue
             # behind an EARLIER un-issued slot on the same line, and held
             # while the remote still has a transaction in flight there.
+            # The conflict mask deliberately uses ALL queued real slots
+            # (arrived or not) so per-line program order survives any
+            # arrival schedule.
             same = s_line[:, :, None] == s_line[:, None, :]  # [R, Wk, Wj]
             earlier = wr[None, :] < wr[:, None]              # [Wk, Wj] j<k
             conflict = (real[:, None, :] & same &
                         earlier[None]).any(-1)               # [R, W]
             line_busy = c.outstanding[ar[:, None], s_line]
-            can = real & ~conflict & ~line_busy
+            if open_loop:
+                # ---- continuous-batching admission --------------------
+                # a slot is a candidate only once its stamp has ARRIVED;
+                # with a batch cap, the FIFO-by-arrival-stamp earliest
+                # candidates fill the budget the reserve watermark leaves
+                # open (rtp-llm FIFOScheduler style) — admission gates
+                # WHEN, never WHAT, so the oracle replay stays exact.
+                s_arr = arr_step[idxc, ar[:, None]]          # [R, W]
+                arrived = s_arr <= t
+                ready = real & arrived & ~conflict & ~line_busy
+                if admit_cap:
+                    inflight = c.outstanding.sum().astype(jnp.int32)
+                    budget = jnp.maximum(
+                        admit_cap - admit_reserve - inflight, 0)
+                    # stable argsort = FIFO by stamp, program order on
+                    # ties; non-candidates sort to the back.
+                    key = jnp.where(ready, s_arr,
+                                    jnp.iinfo(jnp.int32).max).ravel()
+                    order = jnp.argsort(key, stable=True)
+                    rank = jnp.zeros_like(order).at[order].set(
+                        jnp.arange(R * W))
+                    can = ready & (rank.reshape(R, W) < budget)
+                else:
+                    can = ready
+            else:
+                can = real & ~conflict & ~line_busy
             # scatter the issuable slots into the dense [R, L] op plane —
             # additive scatter: at most one slot per (remote, line)
             # contributes a non-zero, the rest add NOP/zero.
@@ -163,6 +237,9 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                 jnp.where(can, s_val, 0)[:, :, None])
             born_d = jnp.zeros((R, L), jnp.int32).at[
                 ar[:, None], s_line].add(jnp.where(can, c.slot_born, 0))
+            if open_loop:   # arrival stamp rides along for sojourn
+                soj_d = jnp.zeros((R, L), jnp.int32).at[
+                    ar[:, None], s_line].add(jnp.where(can, s_arr, 0))
 
             # ---- one engine step under sustained traffic ----------------
             if obs is None:
@@ -195,9 +272,26 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                 row = jnp.where(retired, out_idx, T)         # [R, L]
                 retire = c.retire.at[row, ar[:, None]].set(t)
 
-            # ---- slide each window past its issued prefix ---------------
+            # ---- sojourn + admission-wait histograms (open loop) --------
+            soj = c.soj
             slot_acc = can & newly[ar[:, None], s_line]      # [R, W]
-            issued = c.issued | slot_acc | (pending & is_nop)
+            if open_loop:
+                soj_born = jnp.where(newly, soj_d, soj.born)
+                s_lat = t - soj_born                         # [R, L]
+                sb = jnp.searchsorted(soj_edges, s_lat, side="right")
+                hist = soj.hist + ((sb[..., None] == soj_ids) &
+                                   retired[..., None]).sum((0, 1))
+                ab = jnp.searchsorted(soj_edges, t - s_arr, side="right")
+                admit = soj.admit + ((ab[..., None] == soj_ids) &
+                                     slot_acc[..., None]).sum((0, 1))
+                soj = _Soj(born=soj_born, hist=hist.astype(jnp.int32),
+                           admit=admit.astype(jnp.int32))
+
+            # ---- slide each window past its issued prefix ---------------
+            nop_skip = pending & is_nop
+            if open_loop:   # a NOP slot is consumed at its arrival, not
+                nop_skip = nop_skip & arrived    # before (FIFO stamps)
+            issued = c.issued | slot_acc | nop_skip
             shift = jnp.cumprod(issued.astype(jnp.int32), axis=1).sum(1)
             cursor = c.cursor + shift
             k2 = wr[None, :] + shift[:, None]                # [R, W]
@@ -234,7 +328,8 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             c2 = _Carry(st=st2, cursor=cursor, issued=issued2,
                         slot_born=slot_born,
                         outstanding=outstanding, born=born,
-                        out_idx=out_idx, retire=retire, ctr=ctr, obs=oc)
+                        out_idx=out_idx, retire=retire, ctr=ctr, obs=oc,
+                        soj=soj)
             return c2, None
 
         if collect_trace:
@@ -255,6 +350,10 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             ctr=make_counters(R),
             obs=(make_obs_carry(obs, R, L, comp)
                  if obs is not None else None),
+            soj=(_Soj(born=jnp.zeros((R, L), jnp.int32),
+                      hist=jnp.zeros((N_SOJ_BUCKETS,), jnp.int32),
+                      admit=jnp.zeros((N_SOJ_BUCKETS,), jnp.int32))
+                 if open_loop else None),
         )
         carry, _ = jax.lax.scan(body, carry0, tsteps)
         completed = (carry.cursor >= T).all() & \
@@ -264,32 +363,55 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
     return jax.jit(run, donate_argnums=0)
 
 
-def run_stream(engine: EngineMN, wl: Workload, steps: int,
+def _check_filters(engine: EngineMN,
+                   observe: Optional[ObserveConfig],
+                   line_filter, type_filter) -> None:
+    """Loud entry validation of the capture filters: a wrong-shaped or
+    wrong-dtype numpy array used to escape as a traced broadcast failure
+    deep inside the fused scan."""
+    if (line_filter is not None or type_filter is not None) \
+            and observe is None:
+        raise ValueError(
+            "line_filter/type_filter restrict the observability capture "
+            "ring — they require observe=ObserveConfig(...)")
+    for name, filt, shape, what in (
+            ("line_filter", line_filter, (engine.n_lines,),
+             "[n_lines]"),
+            ("type_filter", type_filter, (16,), "[16] (MsgType-indexed)")):
+        if filt is None:
+            continue
+        arr = np.asarray(filt)
+        if arr.shape != shape:
+            raise ValueError(
+                f"{name} must be a {what} bool mask, shape {shape}; "
+                f"got shape {arr.shape}")
+        if arr.dtype != np.bool_:
+            raise ValueError(
+                f"{name} must have bool dtype; got {arr.dtype} "
+                f"(pass np.asarray(..., bool))")
+
+
+def run_stream(engine: EngineMN, wl, steps: int = 0,
                st: Optional[EngineMNState] = None,
                collect_trace: bool = False, width: int = 1,
                observe: Optional[ObserveConfig] = None,
                line_filter: Optional[np.ndarray] = None,
                type_filter: Optional[np.ndarray] = None) -> StreamRun:
-    """Drive ``wl`` through ``engine`` for ``steps`` fused engine steps.
+    """Drive one streaming run: ``run_stream(engine, StreamConfig)``.
 
-    ``steps`` must cover the stream length PLUS the drain tail (steps on a
-    quiescent engine are no-ops, so a generous budget only costs device
-    time); ``completed`` reports whether everything retired.  With
-    ``collect_trace`` the per-step retirement linearization is returned
-    for oracle replay (tests/validation — leave it off in benchmarks).
+    The ``StreamConfig`` (``traffic.config``) is the single construction
+    surface — workload (arrays or seeded ``WorkloadSpec``), optional
+    open-loop arrival schedule + admission control, issue width, step
+    budget (0 = auto via ``default_steps``), observability and capture
+    filters, trace collection.  ``st`` optionally continues from an
+    earlier run's state; the passed-in state is CONSUMED (donated to the
+    fused program) — use the returned ``state``.
 
-    ``width`` is the per-remote ISSUE WIDTH: up to ``width`` new ops may
-    enter flight per remote per step (same-line window slots serialize
-    in-queue; see the module docstring).  The passed-in state is consumed
-    (donated to the fused program) — use the returned ``state``.
-
-    ``observe`` switches on the in-scan observability plane (EWF ring
-    capture, online NFA protocol checking, per-transaction phase
-    attribution — see ``traffic.observe``); the digest lands in
-    ``StreamRun.obs``.  ``line_filter`` ([n_lines] bool) and
-    ``type_filter`` ([16] bool, indexed by ``MsgType``) restrict which
-    wire events enter the capture ring (checking always sees everything).
-    ``observe=None`` runs the exact same cached jit program as before.
+    The legacy kwarg form ``run_stream(engine, wl, steps, st,
+    collect_trace, width, observe, line_filter, type_filter)`` still
+    works: it forwards into the exact same config path (and thus the same
+    cached jit program — pinned bit-identical in tests/test_serving.py)
+    with a ``DeprecationWarning``.
 
     The WHOLE op stream is checked against the engine's protocol subset
     BEFORE anything is submitted (one vectorized pass over the ``[T, R]``
@@ -297,33 +419,75 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
     that violates the guarantee only in the last slot of the last window
     still rejects the run up front, with the engine state untouched.
     """
-    assert width >= 1, width
+    if isinstance(wl, StreamConfig):
+        if steps or collect_trace or width != 1 or observe is not None \
+                or line_filter is not None or type_filter is not None:
+            raise TypeError(
+                "run_stream(engine, StreamConfig) takes the run knobs "
+                "from the config — set steps/width/observe/filters/"
+                "collect_trace there, not as kwargs")
+        return _run_config(engine, wl, st)
+    warnings.warn(
+        "run_stream(engine, wl, steps, ...) is deprecated; pass "
+        "run_stream(engine, StreamConfig(workload=wl, steps=..., ...))",
+        DeprecationWarning, stacklevel=2)
+    return _run_config(engine, StreamConfig(
+        workload=wl, width=width, steps=steps, observe=observe,
+        line_filter=line_filter, type_filter=type_filter,
+        collect_trace=collect_trace), st)
+
+
+def _run_config(engine: EngineMN, cfg: StreamConfig,
+                st: Optional[EngineMNState]) -> StreamRun:
+    wl = cfg.workload
+    if isinstance(wl, WorkloadSpec):
+        wl = wl.materialize(engine.n_remotes, engine.n_lines)
     if not engine.subset.check_workload(np.asarray(wl.op),
                                         n_remotes=engine.n_remotes):
         raise ValueError(
             f"workload op stream outside subset "
             f"'{engine.subset.name}' guarantee (allowed ops: "
             f"{sorted(engine.subset.allowed_ops(engine.n_remotes))})")
+    T = int(np.asarray(wl.op).shape[0])
+    _check_filters(engine, cfg.observe, cfg.line_filter, cfg.type_filter)
+
+    # ---- open-loop pieces: arrival schedule + admission ----------------
+    open_loop = cfg.arrivals is not None
+    adm = cfg.admission if cfg.admission is not None else AdmissionConfig()
+    if adm.max_inflight and not open_loop:
+        raise ValueError(
+            "admission control needs an arrival schedule — set "
+            "StreamConfig.arrivals (use arrivals.at_step0 for a "
+            "closed-loop-equivalent run)")
+    arr = None
+    last_arrival = 0
+    if open_loop:
+        arr = cfg.arrivals
+        if isinstance(arr, ArrivalSpec):
+            arr = arr.materialize(T, engine.n_remotes)
+        check_schedule(arr, T, engine.n_remotes)
+        last_arrival = int(np.asarray(arr.step).max()) if T else 0
+    steps = cfg.steps or default_steps(T, engine.n_remotes, last_arrival)
+
     st0 = engine.init() if st is None else st
     base_msgs = np.asarray(st0.msg_count, np.int64)
     base_payload = int(st0.payload_msgs)
-    fn = _jitted_stream(engine.subset.name, collect_trace, int(width),
-                        engine.shared_credits, engine.n_homes,
-                        engine.home_bw, observe)
-    if observe is None:
-        carry, completed = fn(st0, wl.op, wl.line, wl.value,
-                              jnp.arange(steps, dtype=jnp.int32),
-                              engine.delays, engine.credits)
-    else:
-        # None = capture-all: passed through as an empty pytree leaf, so
-        # the jit program specializes away the per-site filter gathers.
-        lf = None if line_filter is None else jnp.asarray(line_filter, bool)
-        tf = None if type_filter is None else jnp.asarray(type_filter, bool)
-        carry, completed = fn(st0, wl.op, wl.line, wl.value,
-                              jnp.arange(steps, dtype=jnp.int32),
-                              engine.delays, engine.credits, lf, tf)
+    fn = _jitted_stream(engine.subset.name, cfg.collect_trace,
+                        int(cfg.width), engine.shared_credits,
+                        engine.n_homes, engine.home_bw, cfg.observe,
+                        open_loop, int(adm.max_inflight), int(adm.reserve))
+    # None filters/arrivals pass through as empty pytree leaves, so the
+    # jit program specializes away the corresponding gathers entirely.
+    lf = None if cfg.line_filter is None else \
+        jnp.asarray(cfg.line_filter, bool)
+    tf = None if cfg.type_filter is None else \
+        jnp.asarray(cfg.type_filter, bool)
+    arr_dev = None if arr is None else jnp.asarray(arr.step, jnp.int32)
+    carry, completed = fn(st0, wl.op, wl.line, wl.value,
+                          jnp.arange(steps, dtype=jnp.int32),
+                          engine.delays, engine.credits, lf, tf, arr_dev)
     trace = None
-    if collect_trace:
+    if cfg.collect_trace:
         # compact O(T * R) record: the scratch row the non-retiring lanes
         # scatter into is sliced off; op/line/value come straight from
         # the workload, which the retire_step array indexes 1:1.
@@ -335,9 +499,23 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
             n_lines=engine.n_lines,
         )
     obs_res = None
-    if observe is not None:
-        obs_res = finalize_obs(observe, carry.obs,
-                               compiled_specs(observe.specs))
+    if cfg.observe is not None:
+        obs_res = finalize_obs(cfg.observe, carry.obs,
+                               compiled_specs(cfg.observe.specs))
+    soj_hist = admit_hist = None
+    backlog = 0
+    if open_loop:
+        soj_hist = np.asarray(carry.soj.hist, np.int64)
+        admit_hist = np.asarray(carry.soj.admit, np.int64)
+        # backlog = arrived-but-never-issued ops when the budget ran out:
+        # the cursor counts each remote's consumed prefix; non-contiguous
+        # issued slots still sit in the window flags.
+        arrived_total = int((np.asarray(arr.step) < steps).sum())
+        cur = np.asarray(carry.cursor, np.int64)
+        iss = np.asarray(carry.issued)
+        idx = cur[:, None] + np.arange(int(cfg.width))[None, :]
+        issued_total = int(cur.sum()) + int((iss & (idx < T)).sum())
+        backlog = arrived_total - issued_total
     return StreamRun(
         state=carry.st,
         counters=jax.device_get(carry.ctr),
@@ -346,4 +524,7 @@ def run_stream(engine: EngineMN, wl: Workload, steps: int,
         trace=trace,
         completed=bool(completed),
         obs=obs_res,
+        sojourn_hist=soj_hist,
+        admit_wait_hist=admit_hist,
+        backlog=backlog,
     )

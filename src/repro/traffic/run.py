@@ -23,6 +23,16 @@ homes``) and ``--home-bw`` caps how many NEW transactions each home
 accepts per step (0 = unbounded) — together they expose the home-
 serialization bottleneck multi-home sharding relieves.
 
+Open-loop serving (docs/serving.md): ``--arrivals poisson|bursty --rate
+R`` stamps every op with a seeded arrival step and reports sojourn
+percentiles + unserved backlog under ``serving``; ``--admit-cap N
+--admit-reserve K`` bounds the running batch with the FIFO +
+reserve-watermark admission loop.  ``--config cfg.json`` replaces the
+loose flags with one ``{engine, stream}`` JSON document (the
+``EngineConfig``/``StreamConfig`` surface of ``traffic.config``); with
+``--artifacts DIR`` the resolved config is written back to
+``DIR/config.json`` so any run can be replayed verbatim.
+
 Observability (docs/observability.md): ``--trace`` captures the in-scan
 EWF ring, ``--check-specs`` folds the online NFA protocol checkers
 through the scan (violations fail the run with a step/line/msg
@@ -44,20 +54,6 @@ import jax.numpy as jnp
 STORE_FREE_CAPABLE = ("sequential", "strided", "zipfian")
 
 
-def _build(n_lines: int, n_remotes: int, subset, credits=None,
-           shared_credits: bool = False, block: int = 2,
-           n_homes: int = 1, home_bw: int = 0):
-    import numpy as np
-    from repro.core.engine_mn import EngineMN
-    from repro.core.transport import N_VCS
-    cr = None if credits is None else np.asarray([credits] * N_VCS,
-                                                 np.int32)
-    return EngineMN(jnp.zeros((n_lines, block), jnp.float32),
-                    n_remotes=n_remotes, subset=subset, credits=cr,
-                    shared_credits=shared_credits, n_homes=n_homes,
-                    home_bw=home_bw)
-
-
 def observe_specs(subset_name: str):
     """Online spec set for a run: the two full-protocol invariants, plus
     ``readonly`` when the subset actually guarantees it (a full-protocol
@@ -68,49 +64,85 @@ def observe_specs(subset_name: str):
     return specs
 
 
-def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
-          steps: int, seed: int, moesi: bool, validate: bool,
-          width: int = 1, subset_name: str = "", credits=None,
-          shared_credits: bool = False, n_homes: int = 1,
-          home_bw: int = 0, observe: bool = False,
-          check_specs: bool = False, trace_out: str = "",
-          perfetto_out: str = ""):
-    from repro.core.protocol import ENHANCED_MESI, FULL_MOESI, SUBSETS, \
-        LocalOp
-    from repro.traffic import (WORKLOADS, run_stream, summarize,
-                               validate_run)
-    subset = SUBSETS[subset_name] if subset_name else \
-        (FULL_MOESI if moesi else ENHANCED_MESI)
-    kwargs = {}
-    if int(LocalOp.STORE) not in subset.local_ops:
+def build_configs(workload: str, n_remotes: int, n_lines: int, ops: int,
+                  steps: int, seed: int, moesi: bool, width: int = 1,
+                  subset_name: str = "", credits=None,
+                  shared_credits: bool = False, n_homes: int = 1,
+                  home_bw: int = 0, arrivals: str = "", rate: float = 0.1,
+                  arrival_seed: int = 0, admit_cap: int = 0,
+                  admit_reserve: int = 0):
+    """THE one place loose flags map onto the config dataclasses.
+
+    Everything — CLI flags, smoke cases, bench rows — funnels through
+    here (or through ``config_from_json`` for ``--config`` files), so the
+    flag surface and the ``EngineConfig``/``StreamConfig`` surface cannot
+    drift apart."""
+    from repro.core.protocol import SUBSETS, LocalOp
+    from repro.traffic import (AdmissionConfig, ArrivalSpec, EngineConfig,
+                               StreamConfig, WorkloadSpec)
+    ecfg = EngineConfig(remotes=n_remotes, lines=n_lines,
+                        subset=subset_name, moesi=moesi,
+                        credits=int(credits or 0),
+                        shared_credits=shared_credits, homes=n_homes,
+                        home_bw=home_bw)
+    params = ()
+    if subset_name and \
+            int(LocalOp.STORE) not in SUBSETS[subset_name].local_ops:
         if workload not in STORE_FREE_CAPABLE:
             raise ValueError(
-                f"subset '{subset.name}' admits no stores; use a "
+                f"subset '{subset_name}' admits no stores; use a "
                 f"store-free generator ({', '.join(STORE_FREE_CAPABLE)})")
-        kwargs["store_frac"] = 0.0
-    eng = _build(n_lines, n_remotes, subset, credits, shared_credits,
-                 n_homes=n_homes, home_bw=home_bw)
-    wl = WORKLOADS[workload](jax.random.key(seed), ops, n_remotes, n_lines,
-                             **kwargs)
-    obs_cfg = None
+        params = (("store_frac", 0.0),)
+    scfg = StreamConfig(
+        workload=WorkloadSpec(workload, ops=ops, seed=seed, params=params),
+        arrivals=(ArrivalSpec(arrivals, rate=rate, seed=arrival_seed)
+                  if arrivals else None),
+        admission=(AdmissionConfig(admit_cap, admit_reserve)
+                   if admit_cap else None),
+        width=width, steps=steps)
+    return ecfg, scfg
+
+
+def drive_configs(ecfg, scfg, validate: bool = False,
+                  observe: bool = False, check_specs: bool = False,
+                  trace_out: str = "", perfetto_out: str = ""):
+    """Run one (EngineConfig, StreamConfig) pair end to end: build the
+    engine, stream, optionally oracle-validate, and digest the result
+    (the resolved config rides along under ``"config"`` so artifacts
+    record exactly what ran)."""
+    import dataclasses
+    from repro.traffic import (run_stream, sojourn_summary, summarize,
+                               validate_run)
     if observe or check_specs or trace_out or perfetto_out:
         from repro.traffic.observe import ObserveConfig
-        obs_cfg = ObserveConfig(
+        scfg = dataclasses.replace(scfg, observe=ObserveConfig(
             capture=bool(observe or trace_out or perfetto_out),
-            specs=observe_specs(subset_name) if check_specs else (),
-            attribution=True)
+            specs=observe_specs(ecfg.subset) if check_specs else (),
+            attribution=True))
+    if validate and not scfg.collect_trace:
+        scfg = dataclasses.replace(scfg, collect_trace=True)
+    eng = ecfg.build()
     t0 = time.perf_counter()
-    run = run_stream(eng, wl, steps=steps, collect_trace=validate,
-                     width=width, observe=obs_cfg)
+    run = run_stream(eng, scfg)
     wall = time.perf_counter() - t0
     if validate:
-        validate_run(run, eng.moesi, subset=subset if subset_name else None,
-                     n_homes=n_homes)
+        validate_run(run, eng.moesi,
+                     subset=eng.subset if ecfg.subset else None,
+                     n_homes=ecfg.homes)
     out = summarize(run.counters, run.msg_count, run.payload_msgs)
-    out.update(workload=workload, n_remotes=n_remotes, n_lines=n_lines,
-               completed=run.completed, wall_s=round(wall, 3),
-               validated=bool(validate), width=width, subset=subset.name,
-               shared_credits=bool(shared_credits), homes=n_homes)
+    out.update(workload=scfg.workload.name, n_remotes=ecfg.remotes,
+               n_lines=ecfg.lines, completed=run.completed,
+               wall_s=round(wall, 3), validated=bool(validate),
+               width=scfg.width, subset=eng.subset.name,
+               shared_credits=bool(ecfg.shared_credits),
+               homes=ecfg.homes)
+    try:
+        out["config"] = {"engine": ecfg.to_json_dict(),
+                         "stream": scfg.to_json_dict()}
+    except ValueError:
+        pass    # programmatic arrays / filters: config not serializable
+    if run.sojourn_hist is not None:
+        out["serving"] = sojourn_summary(run)
     if run.obs is not None:
         out["observability"] = run.obs.metrics()
         if trace_out:
@@ -119,12 +151,41 @@ def drive(workload: str, n_remotes: int, n_lines: int, ops: int,
         if perfetto_out:
             from repro.traffic.observe import write_perfetto
             write_perfetto(run.obs.trace_buffer(), perfetto_out,
-                           n_homes=n_homes)
+                           n_homes=ecfg.homes)
         if check_specs and run.obs.violations:
             raise AssertionError(
                 "online protocol-spec violation(s): " + "; ".join(
                     str(v) for v in run.obs.violations))
     return out
+
+
+def drive(workload: str, n_remotes: int = 4, n_lines: int = 64,
+          ops: int = 128, steps: int = 0, seed: int = 0,
+          moesi: bool = True, validate: bool = False,
+          width: int = 1, subset_name: str = "", credits=None,
+          shared_credits: bool = False, n_homes: int = 1,
+          home_bw: int = 0, observe: bool = False,
+          check_specs: bool = False, trace_out: str = "",
+          perfetto_out: str = "", arrivals: str = "", rate: float = 0.1,
+          arrival_seed: int = 0, admit_cap: int = 0,
+          admit_reserve: int = 0, config_text: str = ""):
+    """Flag-style front door: map the loose knobs (or a ``--config`` JSON
+    document via ``config_text``, which overrides them) onto the config
+    dataclasses and run."""
+    if config_text:
+        from repro.traffic import config_from_json
+        ecfg, scfg = config_from_json(config_text)
+    else:
+        ecfg, scfg = build_configs(
+            workload, n_remotes, n_lines, ops, steps, seed, moesi,
+            width=width, subset_name=subset_name, credits=credits,
+            shared_credits=shared_credits, n_homes=n_homes,
+            home_bw=home_bw, arrivals=arrivals, rate=rate,
+            arrival_seed=arrival_seed, admit_cap=admit_cap,
+            admit_reserve=admit_reserve)
+    return drive_configs(ecfg, scfg, validate=validate, observe=observe,
+                         check_specs=check_specs, trace_out=trace_out,
+                         perfetto_out=perfetto_out)
 
 
 def smoke(observe: bool = False, check_specs: bool = False,
@@ -152,19 +213,30 @@ def smoke(observe: bool = False, check_specs: bool = False,
     from repro.traffic import WORKLOADS
     if artifacts:
         os.makedirs(artifacts, exist_ok=True)
-    cases = [(name, 2, 220, 1, "", 1) for name in WORKLOADS]
-    cases.append(("zipfian", 8, 900, 1, "", 1))
-    cases.append(("zipfian", 4, 500, 2, "", 1))
-    cases.append(("zipfian", 8, 900, 1, "read_only", 1))
-    cases.append(("zipfian", 8, 900, 1, "", 2))
+    cases = [(name, 2, 220, 1, "", 1, "") for name in WORKLOADS]
+    cases.append(("zipfian", 8, 900, 1, "", 1, ""))
+    cases.append(("zipfian", 4, 500, 2, "", 1, ""))
+    cases.append(("zipfian", 8, 900, 1, "read_only", 1, ""))
+    cases.append(("zipfian", 8, 900, 1, "", 2, ""))
+    # the --config surface: one JSON-driven OPEN-LOOP case (seeded Poisson
+    # arrivals + FIFO/reserve admission, H=2) validated against the oracle
+    # — keeps the config round-trip AND the admission loop's exactness on
+    # the CI keep-green path.
+    cases.append(("zipfian", 4, 0, 1, "", 2, json.dumps({
+        "engine": {"remotes": 4, "lines": 12, "homes": 2},
+        "stream": {"workload": {"name": "zipfian", "ops": 20, "seed": 7},
+                   "arrivals": {"kind": "poisson", "rate": 0.1, "seed": 3},
+                   "admission": {"max_inflight": 8, "reserve": 2}}})))
     failures = 0
     metrics = {}
-    for name, n_remotes, steps, width, subset, homes in cases:
+    for name, n_remotes, steps, width, subset, homes, cfg_text in cases:
         tag = (f" {subset}" if subset else "") + \
-            (f" h{homes}" if homes > 1 else "")
+            (f" h{homes}" if homes > 1 else "") + \
+            (" config open-loop" if cfg_text else "")
         slug = f"{name}_r{n_remotes}_w{width}" + \
             (f"_{subset}" if subset else "") + \
-            (f"_h{homes}" if homes > 1 else "")
+            (f"_h{homes}" if homes > 1 else "") + \
+            ("_cfg" if cfg_text else "")
         art = dict(
             trace_out=os.path.join(artifacts, f"{slug}.trace.json"),
             perfetto_out=os.path.join(artifacts, f"{slug}.perfetto.json"),
@@ -173,7 +245,8 @@ def smoke(observe: bool = False, check_specs: bool = False,
             out = drive(name, n_remotes=n_remotes, n_lines=12, ops=20,
                         steps=steps, seed=7, moesi=True, validate=True,
                         width=width, subset_name=subset, n_homes=homes,
-                        observe=observe, check_specs=check_specs, **art)
+                        observe=observe, check_specs=check_specs,
+                        config_text=cfg_text, **art)
             metrics[slug] = out
             obs = out.get("observability", {})
             obs_tag = (f" trace={obs['captured_total']}w "
@@ -230,6 +303,31 @@ def main() -> None:
                     help="per-home per-step cap on NEW transaction "
                          "acceptances (0 = unbounded) — the serialization "
                          "bottleneck multi-home sharding relieves")
+    ap.add_argument("--config", default="",
+                    help="JSON file holding {engine: EngineConfig, "
+                         "stream: StreamConfig} — the one config surface "
+                         "(overrides the loose flags above; the resolved "
+                         "config is written back into --artifacts)")
+    ap.add_argument("--arrivals", default="",
+                    help="OPEN-LOOP mode: arrival process stamping each "
+                         "op with an arrival step (at_step0, poisson, "
+                         "bursty; default closed loop). Sojourn "
+                         "percentiles + backlog land under 'serving'; "
+                         "see docs/serving.md")
+    ap.add_argument("--rate", type=float, default=0.1,
+                    help="offered load for --arrivals, in ops per remote "
+                         "per engine step (default 0.1)")
+    ap.add_argument("--arrival-seed", type=int, default=0,
+                    help="seed for the arrival process (independent of "
+                         "--seed so load and content vary separately)")
+    ap.add_argument("--admit-cap", type=int, default=0,
+                    help="continuous-batching admission: max transactions "
+                         "in flight across all remotes (0 = unbounded; "
+                         "requires --arrivals)")
+    ap.add_argument("--admit-reserve", type=int, default=0,
+                    help="reserve watermark held back from new "
+                         "admissions under --admit-cap (FIFO + reserve, "
+                         "rtp-llm FIFOScheduler style)")
     ap.add_argument("--validate", action="store_true",
                     help="collect the retirement trace and replay it "
                          "against the MultiNodeRef oracle")
@@ -278,22 +376,53 @@ def main() -> None:
                  f"space evenly")
     if args.home_bw < 0:
         ap.error("--home-bw must be >= 0")
+    from repro.traffic import ARRIVALS
+    if args.arrivals and args.arrivals not in ARRIVALS:
+        ap.error(f"--arrivals must be one of {sorted(ARRIVALS)}")
+    if args.admit_cap and not args.arrivals:
+        ap.error("--admit-cap requires --arrivals (admission gates "
+                 "arrived ops)")
+    if args.admit_cap < 0 or args.admit_reserve < 0 or (
+            args.admit_cap and args.admit_reserve >= args.admit_cap):
+        ap.error("--admit-reserve must leave room under --admit-cap")
     if args.smoke:
         raise SystemExit(smoke(observe=args.trace,
                                check_specs=args.check_specs,
                                artifacts=args.artifacts))
-    from repro.traffic import default_steps
-    steps = args.steps or default_steps(args.ops, args.remotes)
-    out = drive(args.workload, args.remotes, args.lines, args.ops, steps,
-                args.seed, not args.mesi, args.validate, width=args.width,
-                subset_name=args.subset, credits=args.credits or None,
+    config_text = ""
+    if args.config:
+        with open(args.config) as f:
+            config_text = f.read()
+    # --steps 0 auto-derives inside run_stream via the ONE shared
+    # default_steps helper (arrival-aware for open-loop runs).
+    out = drive(args.workload, args.remotes, args.lines, args.ops,
+                args.steps, args.seed, not args.mesi, args.validate,
+                width=args.width, subset_name=args.subset,
+                credits=args.credits or None,
                 shared_credits=args.shared_credits, n_homes=args.homes,
                 home_bw=args.home_bw,
                 observe=args.trace, check_specs=args.check_specs,
-                trace_out=args.trace_out, perfetto_out=args.perfetto)
+                trace_out=args.trace_out, perfetto_out=args.perfetto,
+                arrivals=args.arrivals, rate=args.rate,
+                arrival_seed=args.arrival_seed, admit_cap=args.admit_cap,
+                admit_reserve=args.admit_reserve, config_text=config_text)
+    if args.artifacts and "config" in out:
+        # the full EngineConfig+StreamConfig round-trip, written back so
+        # the artifact bundle records exactly what ran (and can be re-run
+        # verbatim with --config).
+        import os
+        os.makedirs(args.artifacts, exist_ok=True)
+        with open(os.path.join(args.artifacts, "config.json"), "w") as f:
+            json.dump(out["config"], f, indent=1, sort_keys=True)
     print(json.dumps(out, indent=1, default=str))
     if not out["completed"]:
-        raise SystemExit("stream did not drain within --steps")
+        # an OPEN-LOOP run that ends with arrived-but-unserved ops is a
+        # legitimate overload measurement, not a budget failure.
+        if out.get("serving", {}).get("backlog", 0) > 0:
+            print("note: overload — unserved backlog "
+                  f"{out['serving']['backlog']} at budget end")
+        else:
+            raise SystemExit("stream did not drain within --steps")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,320 @@
+"""Open-loop serving tests: arrival processes, the continuous-batching
+admission loop, the unified ``StreamConfig``/``EngineConfig`` surface,
+and the regression pins the api_redesign promised:
+
+* closed-loop equivalence — all-arrivals-at-step-0 with unbounded
+  admission leaves every existing counter BIT-IDENTICAL to the plain
+  ``Workload`` replay;
+* legacy ``run_stream(engine, wl, steps, ...)`` kwargs forward into the
+  config path and hit the SAME cached jit program, producing
+  bit-identical results (with a ``DeprecationWarning``);
+* admission-loop oracle exactness at W∈{1,2} × H∈{1,2} — gating WHEN
+  ops issue never changes WHAT they do, so retirement-order replay
+  against ``MultiNodeRef`` stays exact;
+* seeded overload — unserved backlog grows with the observation window
+  while p50 stays finite and p99 grows past the sub-saturation tail.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine_mn import EngineMN
+from repro.traffic import (ARRIVALS, AdmissionConfig, ArrivalSpec,
+                           EngineConfig, SOJOURN_EDGES, StreamConfig,
+                           WORKLOADS, WorkloadSpec, check_schedule,
+                           config_from_json, config_to_json, default_steps,
+                           hist_percentiles, run_stream, sojourn_summary,
+                           validate_run)
+from repro.traffic.driver import _jitted_stream
+
+BLOCK = 2
+R, L, T = 3, 12, 20
+SEED = 7
+
+
+def _cfg_engine(**kw):
+    return EngineConfig(remotes=R, lines=L, **kw)
+
+
+def _legacy(eng, wl, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return run_stream(eng, wl, **kw)
+
+
+def _same_counters(a, b):
+    for la, lb in zip(a.counters, b.counters):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(a.msg_count, b.msg_count)
+    assert a.payload_msgs == b.payload_msgs
+    assert a.completed == b.completed
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(ARRIVALS))
+def test_arrival_envelope(kind):
+    """[T, R] int32, >= 0, nondecreasing per remote, seeded-reproducible;
+    at_step0 is identically zero (the closed-loop control)."""
+    sched = ARRIVALS[kind](jax.random.key(3), T, R, 0.2)
+    st = np.asarray(sched.step)
+    assert st.shape == (T, R) and st.dtype == np.int32
+    assert (st >= 0).all() and (np.diff(st, axis=0) >= 0).all()
+    st2 = np.asarray(ARRIVALS[kind](jax.random.key(3), T, R, 0.2).step)
+    np.testing.assert_array_equal(st, st2)
+    if kind == "at_step0":
+        assert not st.any()
+    check_schedule(sched, T, R)
+
+
+def test_arrival_rate_sets_offered_load():
+    """Mean interarrival gap tracks 1/rate (within sampling noise) for
+    both stochastic processes — the knee sweep's x-axis is trustworthy."""
+    for kind in ("poisson", "bursty"):
+        sched = ARRIVALS[kind](jax.random.key(0), 512, 4, 0.1)
+        last = np.asarray(sched.step)[-1]
+        mean_gap = last.mean() / 512
+        assert 5.0 < mean_gap < 20.0, (kind, mean_gap)  # 1/rate = 10
+
+
+def test_check_schedule_rejects_malformed():
+    from repro.traffic import ArrivalSchedule
+    good = ARRIVALS["poisson"](jax.random.key(0), T, R, 0.5)
+    with pytest.raises(ValueError, match="shape"):
+        check_schedule(good, T, R + 1)
+    with pytest.raises(ValueError, match="integer"):
+        check_schedule(ArrivalSchedule(jnp.zeros((T, R), jnp.float32)),
+                       T, R)
+    dec = np.zeros((T, R), np.int32)
+    dec[0] = 5     # step drops 5 -> 0: not nondecreasing
+    with pytest.raises(ValueError, match="nondecreasing"):
+        check_schedule(ArrivalSchedule(jnp.asarray(dec)), T, R)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop equivalence + the legacy-path regression pin (S1).
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_equivalence_counters_bit_identical():
+    """All arrivals at step 0 + unbounded admission drives the EXACT
+    schedule of the plain Workload replay: every counter bit-identical."""
+    wl = WORKLOADS["zipfian"](jax.random.key(SEED), T, R, L)
+    base = _legacy(_cfg_engine().build(), wl, steps=360,
+                   collect_trace=True)
+    ol = run_stream(_cfg_engine().build(), StreamConfig(
+        workload=wl, arrivals=ArrivalSpec("at_step0", rate=1.0),
+        steps=360, collect_trace=True))
+    _same_counters(base, ol)
+    np.testing.assert_array_equal(base.trace.retire_step,
+                                  ol.trace.retire_step)
+    validate_run(ol)
+    assert ol.backlog == 0
+    # sojourn plumbing is live even in the control schedule
+    assert int(np.asarray(ol.sojourn_hist).sum()) == \
+        int((np.asarray(wl.op) != 0).sum())
+
+
+def test_legacy_kwargs_hit_same_cached_program_bit_identical():
+    """The deprecation shim must forward into the SAME cached jit
+    program as the StreamConfig path (no second compile) and produce a
+    bit-identical StreamRun."""
+    wl = WORKLOADS["false_sharing"](jax.random.key(SEED), T, R, L)
+    with pytest.warns(DeprecationWarning):
+        a = run_stream(_cfg_engine().build(), wl, steps=300, width=2)
+    before = _jitted_stream.cache_info()
+    b = run_stream(_cfg_engine().build(),
+                   StreamConfig(workload=wl, steps=300, width=2))
+    after = _jitted_stream.cache_info()
+    assert after.misses == before.misses, \
+        "config path compiled a second program for identical knobs"
+    assert after.hits > before.hits
+    _same_counters(a, b)
+
+
+def test_config_kwargs_conflict_rejected():
+    with pytest.raises(TypeError, match="from the config"):
+        run_stream(_cfg_engine().build(),
+                   StreamConfig(workload=WorkloadSpec(ops=4)), steps=99)
+
+
+# ---------------------------------------------------------------------------
+# Admission loop: oracle exactness (the WHEN/WHAT separation).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("width", [1, 2])
+@pytest.mark.parametrize("homes", [1, 2])
+def test_admission_loop_oracle_exact(width, homes):
+    """FIFO + reserve admission under Poisson arrivals stays EXACT
+    against the retirement-order MultiNodeRef replay at W∈{1,2} and
+    H∈{1,2} — admission gates when, never what."""
+    run = run_stream(_cfg_engine(homes=homes).build(), StreamConfig(
+        workload=WorkloadSpec("zipfian", ops=T, seed=SEED),
+        arrivals=ArrivalSpec("poisson", rate=0.2, seed=1),
+        admission=AdmissionConfig(max_inflight=4, reserve=1),
+        width=width, collect_trace=True))
+    assert run.completed
+    validate_run(run, n_homes=homes)
+    assert run.backlog == 0
+
+
+def test_admission_cap_bounds_inflight():
+    """The batch cap is a hard bound: peak MSHR occupancy never exceeds
+    max_inflight (reserve only shapes NEW admissions below it)."""
+    run = run_stream(_cfg_engine().build(), StreamConfig(
+        workload=WorkloadSpec("false_sharing", ops=2 * T, seed=SEED),
+        arrivals=ArrivalSpec("at_step0", rate=1.0),
+        admission=AdmissionConfig(max_inflight=2, reserve=1)))
+    assert run.completed
+    assert int(run.counters.mshr_peak) <= 2
+
+
+def test_admission_requires_arrivals():
+    with pytest.raises(ValueError, match="arrival schedule"):
+        run_stream(_cfg_engine().build(), StreamConfig(
+            workload=WorkloadSpec(ops=4),
+            admission=AdmissionConfig(max_inflight=4)))
+
+
+def test_admission_reserve_must_fit():
+    with pytest.raises(ValueError, match="reserve"):
+        StreamConfig(workload=WorkloadSpec(ops=4),
+                     admission=AdmissionConfig(max_inflight=2, reserve=2))
+
+
+# ---------------------------------------------------------------------------
+# Seeded overload: the knee's far side.
+# ---------------------------------------------------------------------------
+
+
+def test_overload_backlog_grows_p50_finite_p99_grows():
+    """Offered load past capacity: the unserved queue GROWS with the
+    observation window, p50 sojourn stays finite (early arrivals are
+    served) while p99 blows past the sub-saturation tail."""
+    # rate 0.5/remote spreads the 120-op streams across ~240 steps, so
+    # arrivals OUTPACE the capped service through both windows (a burst
+    # rate well past capacity but finished arriving by step 60 would let
+    # the longer window drain backlog instead of growing it).
+    def overload(steps):
+        return run_stream(_cfg_engine().build(), StreamConfig(
+            workload=WorkloadSpec("zipfian", ops=120, seed=SEED),
+            arrivals=ArrivalSpec("bursty", rate=0.5, seed=2),
+            admission=AdmissionConfig(max_inflight=3, reserve=1),
+            steps=steps))
+    short, long = overload(60), overload(180)
+    s_short, s_long = sojourn_summary(short), sojourn_summary(long)
+    assert s_short["backlog"] > 0 and not short.completed
+    assert s_long["backlog"] > s_short["backlog"], \
+        "unserved queue must grow with the window under overload"
+    sub = run_stream(_cfg_engine().build(), StreamConfig(
+        workload=WorkloadSpec("zipfian", ops=120, seed=SEED),
+        arrivals=ArrivalSpec("poisson", rate=0.02, seed=2)))
+    assert sub.completed
+    p_sub = hist_percentiles(sub.sojourn_hist, SOJOURN_EDGES)
+    p_over = s_long["sojourn_percentiles"]
+    assert np.isfinite(p_over["p50"])
+    assert p_over["p99"] > p_sub["p99"], (p_over, p_sub)
+
+
+# ---------------------------------------------------------------------------
+# Entry validation (S3): filters, steps auto-derivation.
+# ---------------------------------------------------------------------------
+
+
+def test_filter_validation_loud():
+    from repro.traffic import ObserveConfig
+    eng = _cfg_engine().build()
+    cfg = dict(workload=WorkloadSpec(ops=4), observe=ObserveConfig())
+    with pytest.raises(ValueError, match="line_filter.*shape"):
+        run_stream(eng, StreamConfig(
+            line_filter=np.zeros(L + 3, bool), **cfg))
+    with pytest.raises(ValueError, match="type_filter.*shape"):
+        run_stream(eng, StreamConfig(
+            type_filter=np.zeros(8, bool), **cfg))
+    with pytest.raises(ValueError, match="bool dtype"):
+        run_stream(eng, StreamConfig(
+            line_filter=np.zeros(L, np.int32), **cfg))
+    with pytest.raises(ValueError, match="require observe"):
+        run_stream(eng, StreamConfig(workload=WorkloadSpec(ops=4),
+                                     line_filter=np.zeros(L, bool)))
+
+
+def test_steps_zero_auto_derives_arrival_aware():
+    """steps=0 resolves via the ONE shared default_steps helper, shifted
+    out by the last arrival stamp in open-loop runs."""
+    run = run_stream(_cfg_engine().build(),
+                     StreamConfig(workload=WorkloadSpec(ops=T, seed=SEED)))
+    assert run.completed
+    assert int(run.counters.steps) == default_steps(T, R)
+    arr = ArrivalSpec("poisson", rate=0.05, seed=4)
+    sched = arr.materialize(T, R)
+    ol = run_stream(_cfg_engine().build(), StreamConfig(
+        workload=WorkloadSpec(ops=T, seed=SEED), arrivals=arr))
+    assert ol.completed
+    assert int(ol.counters.steps) == \
+        default_steps(T, R, int(np.asarray(sched.step).max()))
+
+
+# ---------------------------------------------------------------------------
+# Config surface: JSON round-trip, EngineConfig.build, CLI mapping (S2).
+# ---------------------------------------------------------------------------
+
+
+def test_config_json_roundtrip_and_unknown_keys():
+    ecfg = EngineConfig(remotes=4, lines=16, subset="read_only", homes=2,
+                        credits=8)
+    scfg = StreamConfig(
+        workload=WorkloadSpec("zipfian", ops=32, seed=3,
+                              params={"store_frac": 0.0}),
+        arrivals=ArrivalSpec("bursty", rate=0.25, seed=9,
+                             params={"hi_lo_ratio": 8.0}),
+        admission=AdmissionConfig(max_inflight=16, reserve=4), width=2)
+    e2, s2 = config_from_json(config_to_json(ecfg, scfg))
+    assert e2.to_json_dict() == ecfg.to_json_dict()
+    assert s2.to_json_dict() == scfg.to_json_dict()
+    assert s2.workload.params == (("store_frac", 0.0),)
+    with pytest.raises(ValueError, match="unknown engine config keys"):
+        config_from_json('{"engine": {"remote": 4}}')
+    with pytest.raises(ValueError, match="unknown workload"):
+        config_from_json('{"stream": {"workload": {"name": "nope"}}}')
+
+
+def test_engine_config_build_matches_direct_construction():
+    eng = EngineConfig(remotes=R, lines=L, subset="read_only", homes=2,
+                       credits=8, shared_credits=True, home_bw=2).build()
+    assert isinstance(eng, EngineMN)
+    assert eng.n_remotes == R and eng.n_lines == L
+    assert eng.subset.name == "read_only"
+    assert eng.n_homes == 2 and eng.home_bw == 2 and eng.shared_credits
+    assert int(np.asarray(eng.credits)[0]) == 8
+    with pytest.raises(ValueError, match="divide"):
+        EngineConfig(lines=10, homes=3)
+    with pytest.raises(ValueError, match="unknown subset"):
+        EngineConfig(subset="nope")
+    with pytest.raises(ValueError, match="remotes"):
+        EngineConfig(remotes=0)
+
+
+def test_cli_flags_map_onto_dataclasses_once():
+    """build_configs is the single flags->dataclasses mapping (S2): the
+    store-free guard and every engine/stream knob land in the configs."""
+    from repro.traffic.run import build_configs
+    ecfg, scfg = build_configs(
+        "zipfian", n_remotes=4, n_lines=16, ops=8, steps=0, seed=1,
+        moesi=True, subset_name="read_only", n_homes=2,
+        arrivals="poisson", rate=0.3, arrival_seed=5, admit_cap=6,
+        admit_reserve=2)
+    assert ecfg.subset == "read_only" and ecfg.homes == 2
+    assert scfg.workload.params == (("store_frac", 0.0),)
+    assert scfg.arrivals.kind == "poisson" and scfg.arrivals.rate == 0.3
+    assert scfg.admission == AdmissionConfig(6, 2)
+    with pytest.raises(ValueError, match="store-free"):
+        build_configs("producer_consumer", 4, 16, 8, 0, 1, True,
+                      subset_name="read_only")
