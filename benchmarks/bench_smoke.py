@@ -17,6 +17,14 @@ Gate rules (exit 1 on violation):
 * fan-out exactness: engine invalidations/store == oracle == R-1;
 * ops/step must not regress more than ``--tolerance`` (default 30%)
   against the committed baseline, per configuration;
+* protocol-subset efficiency: interconnect messages per retired op
+  (full_moesi / enhanced_mesi / read_only on the same zipfian stream)
+  must not inflate more than ``--tolerance`` vs baseline;
+* fleet exactness: the vmapped R x W grid and the H in {1,2,4} homes
+  sweep each run as ONE jitted program, and every member's counters
+  and message counts must be BIT-identical to a solo ``run_stream``
+  at the fleet's shared step budget (the per-point vs fleet compile
+  times ride along un-gated as the amortization record);
 * observability: the traced acceptance stream (R=64, H in {1,2}) must
   stay semantically bit-identical to the untraced one, check clean
   against the online protocol specs, and cost at most
@@ -57,8 +65,31 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 STREAM_CONFIGS = (("zipfian", 2, 16, 32, 1, 1), ("zipfian", 8, 16, 32, 1, 1),
                   ("zipfian", 32, 16, 32, 1, 1), ("zipfian", 8, 16, 32, 2, 1),
                   ("producer_consumer", 8, 16, 32, 1, 1),
+                  ("migratory", 8, 16, 32, 1, 1),
+                  ("false_sharing", 8, 16, 32, 1, 1),
                   ("zipfian", 8, 16, 32, 1, 2))
 FANOUT_REMOTES = (2, 8)
+
+#: protocol-subset message-efficiency gate: the SAME zipfian stream
+#: through each compiled protocol subset, gated on interconnect
+#: messages per retired op (the figure-of-merit customizing the stack
+#: is supposed to move).  ``read_only`` only admits loads, so its
+#: variant pins ``store_frac=0``.
+SUBSET_CONFIG = dict(n_remotes=8, n_lines=16, ops=32)
+SUBSET_VARIANTS = (("full_moesi", None), ("enhanced_mesi", None),
+                   ("read_only", {"store_frac": 0.0}))
+
+#: vmapped fleet sweep: the R x W grid batched into ONE jitted program
+#: (``repro.traffic.fleet``), every member gated BIT-identical to its
+#: solo ``run_stream`` at the fleet's shared step budget, plus the
+#: H in {1,2,4} homes sweep riding the flat-layout emulation.  The
+#: per-point vs fleet compile times are recorded (never gated — compile
+#: time is wall clock) as the amortization evidence for docs/perf.md.
+FLEET_CONFIG = dict(n_lines=16, ops=32)
+FLEET_GRID = tuple((r, w) for r in (4, 8, 16, 32) for w in (1, 2, 4))
+FLEET_HOMES = (1, 2, 4)
+FLEET_HOMES_REMOTES = 8
+FLEET_HOME_BW = 1
 
 #: the wall-clock harness config: THE acceptance stream of the hot-path
 #: overhaul (zipfian, R=64), timed at issue widths 1 and 4.
@@ -164,6 +195,163 @@ def run_streaming() -> dict:
             "compile_s": round(t_compile, 3),
         }
     return out
+
+
+def run_subsets() -> dict:
+    """Messages per retired op across protocol subsets.
+
+    Deterministic (seeded workload, seeded engine), so the ratio gates
+    against the committed baseline like ops/step does: a protocol-table
+    change that inflates interconnect traffic for the same work fails
+    CI even when throughput holds."""
+    import numpy as np
+    from repro.traffic import (EngineConfig, StreamConfig, WorkloadSpec,
+                               default_steps, run_stream, summarize)
+
+    cfg = SUBSET_CONFIG
+    steps = default_steps(cfg["ops"], cfg["n_remotes"])
+    out = {}
+    for subset, params in SUBSET_VARIANTS:
+        wspec = WorkloadSpec("zipfian", ops=cfg["ops"], seed=0,
+                             params=params or ())
+        ecfg = EngineConfig(remotes=cfg["n_remotes"],
+                            lines=cfg["n_lines"], subset=subset)
+        run = run_stream(ecfg.build(), StreamConfig(workload=wspec,
+                                                    steps=steps))
+        s = summarize(run.counters, run.msg_count)
+        msgs = int(np.asarray(run.msg_count).sum())
+        out[subset] = {
+            "completed": bool(run.completed),
+            "msgs_per_op": round(msgs / max(int(s["ops_retired"]), 1), 6),
+            "ops_per_step": round(float(s["ops_per_step"]), 6),
+            "ops_retired": int(s["ops_retired"]),
+        }
+    return out
+
+
+def _bit_identical(fleet_run, solo_run) -> bool:
+    """Counters + message counts exactly equal — the fleet contract."""
+    import numpy as np
+    if bool(fleet_run.completed) != bool(solo_run.completed):
+        return False
+    if not np.array_equal(np.asarray(fleet_run.msg_count),
+                          np.asarray(solo_run.msg_count)):
+        return False
+    for a, b in zip(fleet_run.counters, solo_run.counters):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            return False
+    return True
+
+
+def run_fleet_bench() -> dict:
+    """The vmapped fleet sweep vs per-point solo runs.
+
+    Two fleets run, each as ONE jitted program: the zipfian R x W grid
+    and the H in {1,2,4} homes sweep.  Every member is then re-run SOLO
+    (fresh engine, same shared step budget) and the gate demands the
+    fleet member's counters and message counts equal the solo run's
+    bit-for-bit — batching must be a pure execution strategy, never a
+    semantic one.  The solo first-call-minus-warm-call compile times sum
+    to the per-point compile cost the fleet amortizes; the ratio is
+    recorded for the trajectory but never gated (compile time is wall
+    clock)."""
+    from repro.traffic import (EngineConfig, FleetConfig, StreamConfig,
+                               WorkloadSpec, fleet_steps, run_fleet,
+                               run_stream, summarize)
+
+    cfg = FLEET_CONFIG
+
+    def _timed_fleet(fleet):
+        t0 = time.perf_counter()
+        runs = run_fleet(fleet)                       # compile + run
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        runs = run_fleet(fleet)
+        warm = time.perf_counter() - t0
+        return runs, max(cold - warm, 0.0), warm
+
+    def _timed_solo(ecfg, scfg):
+        run = run_stream(ecfg.build(), scfg)          # compile + warm
+        t0 = time.perf_counter()
+        run = run_stream(ecfg.build(), scfg)
+        warm = time.perf_counter() - t0
+        return run, warm
+
+    def _solo_compile(ecfg, scfg):
+        t0 = time.perf_counter()
+        run_stream(ecfg.build(), scfg)
+        return time.perf_counter() - t0
+
+    # --- R x W grid, one program -----------------------------------
+    members = tuple(
+        (EngineConfig(remotes=r, lines=cfg["n_lines"]),
+         StreamConfig(workload=WorkloadSpec("zipfian", ops=cfg["ops"],
+                                            seed=0), width=w))
+        for r, w in FLEET_GRID)
+    fleet = FleetConfig(members=members)
+    steps = fleet_steps(fleet)
+    fruns, fleet_compile, fleet_warm = _timed_fleet(fleet)
+
+    grid = {}
+    solo_compile_total = 0.0
+    for (ecfg, scfg), (r, w), frun in zip(members, FLEET_GRID, fruns):
+        solo_cfg = StreamConfig(workload=scfg.workload, width=w,
+                                steps=steps)
+        cold = _solo_compile(ecfg, solo_cfg)
+        solo, warm = _timed_solo(ecfg, solo_cfg)
+        point_compile = max(cold - warm, 0.0)
+        solo_compile_total += point_compile
+        s = summarize(frun.counters, frun.msg_count)
+        grid[f"r{r}_w{w}"] = {
+            "completed": bool(frun.completed),
+            "bit_identical_to_solo": _bit_identical(frun, solo),
+            "ops_per_step": round(float(s["ops_per_step"]), 6),
+            "max_wait": int(max(s["max_wait"])),
+            "ops_retired": int(s["ops_retired"]),
+            # informational only — never gated:
+            "compile_s": round(point_compile, 3),
+            "wall_s": round(warm, 3),
+        }
+
+    # --- homes sweep H in {1,2,4}, one program ---------------------
+    hmembers = tuple(
+        (EngineConfig(remotes=FLEET_HOMES_REMOTES, lines=cfg["n_lines"],
+                      homes=h, home_bw=FLEET_HOME_BW),
+         StreamConfig(workload=WorkloadSpec("zipfian", ops=cfg["ops"],
+                                            seed=0)))
+        for h in FLEET_HOMES)
+    hfleet = FleetConfig(members=hmembers)
+    hsteps = fleet_steps(hfleet)
+    hruns, homes_compile, _ = _timed_fleet(hfleet)
+
+    homes = {}
+    for (ecfg, scfg), h, frun in zip(hmembers, FLEET_HOMES, hruns):
+        solo_cfg = StreamConfig(workload=scfg.workload, steps=hsteps)
+        solo, warm = _timed_solo(ecfg, solo_cfg)
+        s = summarize(frun.counters, frun.msg_count)
+        homes[f"h{h}"] = {
+            "completed": bool(frun.completed),
+            "bit_identical_to_solo": _bit_identical(frun, solo),
+            "ops_per_step": round(float(s["ops_per_step"]), 6),
+            "max_wait": int(max(s["max_wait"])),
+            "ops_retired": int(s["ops_retired"]),
+        }
+
+    return {
+        "grid": grid,
+        "homes": homes,
+        # informational only — never gated (compile time is wall clock):
+        "compile": {
+            "points": len(FLEET_GRID),
+            "steps": steps,
+            "per_point_total_s": round(solo_compile_total, 3),
+            "fleet_s": round(fleet_compile, 3),
+            "homes_fleet_s": round(homes_compile, 3),
+            "fleet_wall_s": round(fleet_warm, 3),
+            "amortization_x": round(
+                solo_compile_total / max(fleet_compile, 1e-9), 2),
+        },
+    }
 
 
 def run_wallclock(repeats: int = 3) -> dict:
@@ -355,11 +543,13 @@ def run_knee() -> dict:
 def collect(wallclock: bool = False) -> dict:
     import jax
     rec = {
-        "schema": 2,
+        "schema": 3,
         "jax_version": jax.__version__,
         "generated_unix": int(time.time()),
         "fanout": run_fanout(),
         "streaming": run_streaming(),
+        "subsets": run_subsets(),
+        "fleet": run_fleet_bench(),
         "observability": run_observability(),
         "knee": run_knee(),
     }
@@ -390,6 +580,46 @@ def gate(current: dict, baseline: dict, tolerance: float) -> list:
                 f"streaming {key}: ops/step {rec['ops_per_step']:.4f} "
                 f"regressed >{tolerance:.0%} vs baseline "
                 f"{base['ops_per_step']:.4f} (floor {floor:.4f})")
+    # subset gate: every subset completes, and messages per retired op
+    # must not INFLATE more than tolerance vs baseline — a protocol-
+    # table change that buys nothing but extra interconnect traffic
+    # fails even when ops/step holds.
+    for key, rec in current.get("subsets", {}).items():
+        if not rec["completed"]:
+            bad.append(f"subsets {key}: stream did not complete")
+        base = baseline.get("subsets", {}).get(key) if baseline else None
+        if base is None:
+            continue
+        ceil = (1.0 + tolerance) * base["msgs_per_op"]
+        if rec["msgs_per_op"] > ceil:
+            bad.append(
+                f"subsets {key}: msgs/op {rec['msgs_per_op']:.4f} "
+                f"inflated >{tolerance:.0%} vs baseline "
+                f"{base['msgs_per_op']:.4f} (ceiling {ceil:.4f})")
+    # fleet gate: batching is an execution strategy, never a semantic
+    # one — every member must complete AND be bit-identical to its solo
+    # run; ops/step gates against baseline like streaming.  The compile
+    # amortization numbers are recorded but NOT gated (wall clock).
+    fl = current.get("fleet", {})
+    for section in ("grid", "homes"):
+        for key, rec in fl.get(section, {}).items():
+            tag = f"fleet {section} {key}"
+            if not rec["completed"]:
+                bad.append(f"{tag}: did not complete")
+            if not rec["bit_identical_to_solo"]:
+                bad.append(f"{tag}: fleet member diverged from its solo "
+                           f"run (counters / message counts not "
+                           f"bit-identical)")
+            base = (baseline.get("fleet", {}).get(section, {}).get(key)
+                    if baseline else None)
+            if base is None:
+                continue
+            floor = (1.0 - tolerance) * base["ops_per_step"]
+            if rec["ops_per_step"] < floor:
+                bad.append(
+                    f"{tag}: ops/step {rec['ops_per_step']:.4f} "
+                    f"regressed >{tolerance:.0%} vs baseline "
+                    f"{base['ops_per_step']:.4f} (floor {floor:.4f})")
     # observability gate: absolute rules, no baseline needed — the traced
     # program must not perturb semantics, must check clean, and must stay
     # within the committed overhead budget.
@@ -485,7 +715,27 @@ def main() -> None:
         base = (baseline or {}).get("streaming", {}).get(key, {})
         print(f"streaming {key}: ops/step {rec['ops_per_step']:.4f} "
               f"(baseline {base.get('ops_per_step', float('nan')):.4f}) "
-              f"max_wait {rec['max_wait']} wall {rec['wall_s']}s")
+              f"max_wait {rec['max_wait']} wall {rec['wall_s']}s "
+              f"compile {rec['compile_s']}s")
+    for key, rec in sorted(current.get("subsets", {}).items()):
+        print(f"subsets {key}: msgs/op {rec['msgs_per_op']:.4f} "
+              f"ops/step {rec['ops_per_step']:.4f}")
+    fl = current.get("fleet", {})
+    for section in ("grid", "homes"):
+        for key, rec in sorted(fl.get(section, {}).items()):
+            print(f"fleet {section} {key}: ops/step "
+                  f"{rec['ops_per_step']:.4f} bit_identical "
+                  f"{rec['bit_identical_to_solo']}")
+    if fl:
+        c = fl["compile"]
+        print(f"fleet compile: {c['points']} points, per-point total "
+              f"{c['per_point_total_s']}s vs fleet {c['fleet_s']}s "
+              f"({c['amortization_x']}x amortization; homes fleet "
+              f"{c['homes_fleet_s']}s)")
+    for key, rec in sorted(current.get("wallclock", {}).items()):
+        print(f"wallclock {key}: {rec['steps_per_s']} steps/s "
+              f"sustained {rec['sustained_ops_per_s']} ops/s "
+              f"compile {rec['compile_s']}s")
     for key, rec in sorted(current.get("observability", {}).items()):
         print(f"observability {key}: overhead "
               f"{rec['overhead_ratio']:.3f}x (limit "

@@ -444,6 +444,55 @@ def bench_issue_width(remotes=ISSUE_WIDTH_REMOTES, widths=ISSUE_WIDTHS,
     return rows
 
 
+def bench_fleet_compile(remotes=(8, 32), widths=(1, 2), n_lines: int = 16,
+                        ops: int = 32) -> List[Row]:
+    """Compile amortization of the vmapped sim fleet: the R x W sweep of
+    ``bench_issue_width``'s shape run as ONE jitted program
+    (``repro.traffic.fleet``) vs one compile per point.  The per-point
+    compile (~3-5 s each on this container) is what bounded how wide the
+    sweeps above could go; the fleet program compiles once regardless of
+    sweep width.  Every member is asserted bit-identical to its solo run
+    — batching is an execution strategy, never a semantic one."""
+    import numpy as np
+    from repro.traffic import (EngineConfig, FleetConfig, StreamConfig,
+                               WorkloadSpec, fleet_steps, run_fleet,
+                               run_stream)
+
+    members = tuple(
+        (EngineConfig(remotes=r, lines=n_lines),
+         StreamConfig(workload=WorkloadSpec("zipfian", ops=ops, seed=0),
+                      width=w))
+        for r in remotes for w in widths)
+    fleet = FleetConfig(members=members)
+    steps = fleet_steps(fleet)
+    t0 = time.perf_counter()
+    runs = run_fleet(fleet)                                 # compile+run
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    runs = run_fleet(fleet)
+    warm = time.perf_counter() - t0
+    fleet_compile = max(cold - warm, 0.0)
+    solo_total = 0.0
+    for (ecfg, scfg), frun in zip(members, runs):
+        solo_cfg = StreamConfig(workload=scfg.workload, width=scfg.width,
+                                steps=steps)
+        t0 = time.perf_counter()
+        solo = run_stream(ecfg.build(), solo_cfg)
+        c = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_stream(ecfg.build(), solo_cfg)
+        solo_total += max(c - (time.perf_counter() - t0), 0.0)
+        assert np.array_equal(np.asarray(frun.msg_count),
+                              np.asarray(solo.msg_count)), \
+            "fleet member diverged from its solo run"
+    return [(f"fleet/compile_{len(members)}pt", fleet_compile * 1e6,
+             f"one vmapped program: compile {fleet_compile:.2f}s vs "
+             f"per-point total {solo_total:.2f}s "
+             f"({solo_total / max(fleet_compile, 1e-9):.1f}x amortized); "
+             f"warm fleet run {warm:.2f}s for {len(members)} members x "
+             f"{steps} steps; members bit-identical to solo")]
+
+
 # ---------------------------------------------------------------------------
 # §3.4 specialization: protocol-size table (2-node + N-remote)
 # ---------------------------------------------------------------------------
@@ -603,5 +652,6 @@ def bench_subsets(remotes=SUBSET_BENCH_REMOTES, n_lines: int = 16,
 
 
 ALL = [bench_protocol_size, bench_subsets, bench_interconnect,
-       bench_fanout, bench_streaming, bench_issue_width, bench_select,
-       bench_pointer_chase, bench_regex, bench_locality]
+       bench_fanout, bench_streaming, bench_issue_width,
+       bench_fleet_compile, bench_select, bench_pointer_chase,
+       bench_regex, bench_locality]

@@ -192,13 +192,20 @@ def make_engine_state(backing: jnp.ndarray) -> EngineState:
     )
 
 
-def _count(msg_count, payload_msgs, mask, msg, has_payload):
+def _count(msg_count, payload_msgs, mask, msg, has_payload,
+           backend: str = "xla"):
     """Accumulate delivered-message counts by type.
 
     One-hot compare + reduce instead of a scatter-add: XLA:CPU lowers
     scatter to a serial per-element loop, which at ``[R, L]`` sizes made
     the message counters ~45% of the whole N-remote step — the dense
-    compare vectorizes and counts identically."""
+    compare vectorizes and counts identically.  ``backend="pallas"``
+    routes the fold through the ``kernels.coherency_step.count_fold``
+    kernel (bit-identical integer arithmetic)."""
+    if backend == "pallas":
+        from ..kernels import ops as _kops
+        delta, pay = _kops.count_fold(mask, msg, has_payload)
+        return msg_count + delta, payload_msgs + pay
     eq = msg.astype(jnp.int32)[..., None] == jnp.arange(16)
     axes = tuple(range(eq.ndim - 1))
     msg_count = msg_count + (eq & mask[..., None]).sum(axes)

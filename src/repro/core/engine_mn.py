@@ -46,6 +46,7 @@ support it.
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -74,6 +75,24 @@ MAX_REMOTES = MAX_NODE + 1
 #: Outside the MsgType value range, so it can never collide with a parked
 #: request.
 HOME_TXN = 100
+
+#: Step-kernel backends: "xla" is the original jnp hot path (the default —
+#: every committed baseline and bisimulation is pinned against it);
+#: "pallas" lowers the step's inner plane (credit ranking, arbitration
+#: winner select, counter folds) through ``repro.kernels.coherency_step``
+#: — bit-identical integer arithmetic, interpret mode on CPU, real Mosaic
+#: lowering on TPU.  ``REPRO_KERNEL_BACKEND`` selects the default.
+KERNEL_BACKENDS = ("xla", "pallas")
+
+
+def resolve_kernel_backend(kernel_backend: str = "") -> str:
+    """"" -> the ``REPRO_KERNEL_BACKEND`` env var -> "xla"."""
+    kb = kernel_backend or os.environ.get("REPRO_KERNEL_BACKEND", "") \
+        or "xla"
+    if kb not in KERNEL_BACKENDS:
+        raise ValueError(f"kernel_backend must be one of "
+                         f"{KERNEL_BACKENDS}, got '{kb}'")
+    return kb
 
 
 # ---------------------------------------------------------------------------
@@ -293,7 +312,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
             want_read: jnp.ndarray, want_write: jnp.ndarray,
             wval: jnp.ndarray, delays: jnp.ndarray, credits: jnp.ndarray,
             hreq_shared: bool = False, n_homes: int = 1, home_bw: int = 0,
-            emit_events: bool = False):
+            emit_events: bool = False, kernel_backend: str = "xla",
+            home_group=None, home_bw_t=None):
     """One fused engine step over all remotes and lines.
 
     PROTOCOL-PARAMETRIC: ``tables_mn`` is baked from a ``ProtocolSubset``
@@ -335,7 +355,25 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     ``traffic.observe``.  False (the default) leaves the returned tuple
     AND the traced program exactly as before: the event planes are values
     the step computes anyway, the flag only controls whether they are
-    returned."""
+    returned.
+
+    ``kernel_backend`` (static) selects the inner-plane implementation:
+    "xla" (default) keeps every jnp expression below bit-for-bit as
+    committed; "pallas" routes the credit ranking, the arbitration winner
+    select and the counter folds through ``repro.kernels.coherency_step``
+    — same integer arithmetic, tested BIT-exact, interpret mode off-TPU.
+
+    ``home_group``/``home_bw_t`` (TRACED int32 scalars, fleet use only —
+    require ``n_homes == 1``/``home_bw == 0``) emulate the H-home fold's
+    per-slice acceptance cap over the FLAT layout, so a vmapped fleet can
+    sweep H without per-member fold shapes: VC parity follows the folded
+    plane-local line index and new-transaction acceptance is capped per
+    home slice of ``home_group`` interleaved lines.  ``home_group = 1``
+    with ``home_bw_t = 0`` is bit-identical to the defaults."""
+    if home_group is not None:
+        assert n_homes == 1 and not home_bw, \
+            "home_group emulation composes with the FLAT layout only " \
+            "(static n_homes/home_bw must stay at their defaults)"
     if n_homes > 1:
         flat_in = st
         st = _fold_state_mn(st, n_homes)
@@ -349,11 +387,18 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     lines = jnp.arange(L)
     rids = jnp.arange(R)
     # hoisted loop-invariant lookups: one delay gather per VC pair, shared
-    # by every ready/deliver site on that class.
-    dly_req = delays[tp.vc_of(lines, tp.CLASS_REMOTE_REQ)]
-    dly_resp = delays[tp.vc_of(lines, tp.CLASS_HOME_RESP)]
-    dly_hreq = delays[tp.vc_of(lines, tp.CLASS_HOME_REQ)]
-    dly_hresp = delays[tp.vc_of(lines, tp.CLASS_REMOTE_RESP)]
+    # by every ready/deliver site on that class.  VC parity follows the
+    # engine's OWN line axis: global line parity in the flat layout, but
+    # plane-local parity (parity of ``l // H``) under the H-home fold —
+    # the folded body sees only the reshaped axis.  The ``home_group``
+    # emulation reproduces exactly that assignment over the flat layout
+    # (``home_group = 1`` degenerates to global parity, bit-identical).
+    par = (lines & 1) if home_group is None \
+        else ((lines // home_group) & 1)
+    dly_req = delays[2 * tp.CLASS_REMOTE_REQ + par]
+    dly_resp = delays[2 * tp.CLASS_HOME_RESP + par]
+    dly_hreq = delays[2 * tp.CLASS_HOME_REQ + par]
+    dly_hresp = delays[2 * tp.CLASS_REMOTE_RESP + par]
 
     # accumulate new home-side wants.
     want_read = st.want_read | want_read
@@ -376,7 +421,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
                         ch_hresp_in.dirty, ch_hresp_in.payload)
     hreq_pending = jnp.where(hr_arr, nop, st.hreq_pending)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, hr_arr,
-                                     ch_hresp_in.msg, ch_hresp_in.dirty)
+                                     ch_hresp_in.msg, ch_hresp_in.dirty,
+                                     backend=kernel_backend)
 
     # ---- 3. voluntary downgrades arrive at the home ----------------------
     ready_req = _ready(ch_req, dly_req)
@@ -388,7 +434,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
         jnp.full(pop_vol.shape, int(MnAbsorb.VOL_I), jnp.int8),
         ch_req.dirty, ch_req.payload)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, pop_vol,
-                                     ch_req.msg, ch_req.dirty)
+                                     ch_req.msg, ch_req.dirty,
+                                     backend=kernel_backend)
     # observability site 2: voluntary downgrades as absorbed (pre-pop).
     vol_msg, vol_dirty = ch_req.msg, ch_req.dirty
 
@@ -417,12 +464,34 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # align with the rotation period and park the same priority order at
     # every free instant — the pointer rotates per GRANT, which cannot
     # alias.)
-    prio = (jnp.arange(R + 1)[:, None] - st.arb_rr[..., None, :]) % (R + 1)
     ready_all = jnp.concatenate([req_ready, home_ready[..., None, :]],
                                 axis=-2)
-    winner = jnp.argmin(jnp.where(ready_all, prio, R + 1), axis=-2)
+    if kernel_backend == "pallas":
+        from ..kernels import ops as _kops
+        winner = _kops.arb_winner(ready_all, st.arb_rr)
+    else:
+        prio = (jnp.arange(R + 1)[:, None] - st.arb_rr[..., None, :]) \
+            % (R + 1)
+        winner = jnp.argmin(jnp.where(ready_all, prio, R + 1), axis=-2)
     accept_line = any_req & line_free
-    if home_bw:
+    if home_group is not None:
+        # Fleet emulation of the folded per-home acceptance cap: lines
+        # interleave across ``home_group`` homes by address (``l % hg``),
+        # each home ranks ITS accepted lines in the folded plane's
+        # rotating order (plane position ``l // hg``, origin rotating by
+        # step), and keeps the first ``home_bw_t``.  ``home_bw_t = 0``
+        # disables the cap (rank < L+1 always holds).
+        hg = home_group
+        Lh = L // hg
+        off = st.step_no % Lh
+        h_of = lines % hg
+        rot = (lines // hg - off) % Lh
+        same = h_of[:, None] == h_of[None, :]
+        earl = rot[None, :] < rot[:, None]
+        rank = (accept_line[..., None, :] & same & earl).sum(-1)
+        cap = jnp.where(home_bw_t > 0, home_bw_t, jnp.int32(L + 1))
+        accept_line = accept_line & (rank < cap)
+    elif home_bw:
         # Directory-slice pipeline bandwidth: each home parks at most
         # ``home_bw`` NEW transactions per step (in-flight ones proceed
         # unthrottled — this caps ACCEPTANCE, so it only delays, never
@@ -447,7 +516,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     txn_node = jnp.where(accept_line, winner, st.txn_node)
     msg_count, payload_msgs = _count(
         msg_count, payload_msgs, accept_line & ~home_win, win_msg,
-        jnp.zeros(accept_line.shape, bool))
+        jnp.zeros(accept_line.shape, bool), backend=kernel_backend)
 
     # ---- 5. fan-out: emit one HOME_DOWNGRADE_* per conflicting sharer ----
     active_txn = txn_msg != nop
@@ -473,7 +542,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     ch_hreq, acc_h = tp.submit(ch_hreq, tp.CLASS_HOME_REQ, send_h, needed,
                                jnp.zeros(send_h.shape, bool),
                                jnp.zeros_like(st.ch_hreq.payload), credits,
-                               shared=hreq_shared)
+                               shared=hreq_shared,
+                               backend=kernel_backend)
     hreq_pending = jnp.where(acc_h, needed, hreq_pending)
 
     # ---- 6. grant parked requests whose preconditions now hold -----------
@@ -515,7 +585,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     carries = (resp == int(MsgType.RESP_DATA)) | \
               (resp == int(MsgType.RESP_DATA_DIRTY))
     msg_count, payload_msgs = _count(msg_count, payload_msgs,
-                                     resp != nop, resp, carries)
+                                     resp != nop, resp, carries,
+                                     backend=kernel_backend)
 
     # ---- 7. grant responses arrive at the remotes ------------------------
     ch_resp_in = ch_resp
@@ -536,7 +607,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
         tables, agents, h_arr, ch_hreq_in.msg)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, h_arr,
                                      ch_hreq_in.msg,
-                                     jnp.zeros(h_arr.shape, bool))
+                                     jnp.zeros(h_arr.shape, bool),
+                                     backend=kernel_backend)
     ch_hresp, _ = tp.submit(ch_hresp, tp.CLASS_REMOTE_RESP, hresp != nop,
                             hresp, hresp_dirty, hresp_pay, credits,
                             unbounded=True)
@@ -563,7 +635,8 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     req_of = jnp.asarray(tables.loc_request)[o, rs].astype(jnp.int8)
     would_emit = req_of != nop
     acc_pre = tp.credit_accept(ch_req, tp.CLASS_REMOTE_REQ,
-                               would_emit & (ch_req.msg == nop), credits)
+                               would_emit & (ch_req.msg == nop), credits,
+                               backend=kernel_backend)
     eff_op = jnp.where(would_emit & ~acc_pre, jnp.int8(int(LocalOp.NOP)),
                        eff_op)
     eff_val = jnp.where(parked[..., None], agents.pending_val, op_val)
@@ -625,20 +698,34 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     return new, out
 
 
-@functools.lru_cache(maxsize=None)
 def _jitted_step_mn(subset_name: str, hreq_shared: bool = False,
-                    n_homes: int = 1, home_bw: int = 0):
-    """One compiled step per (protocol subset, credit model, home plan),
-    shared across engine instances (shape changes retrace inside
-    jax.jit's own cache).
+                    n_homes: int = 1, home_bw: int = 0,
+                    kernel_backend: str = "xla"):
+    """One compiled step per (protocol subset, credit model, home plan,
+    kernel backend), shared across engine instances (shape changes
+    retrace inside jax.jit's own cache).
+
+    A plain normalization wrapper over the lru-cached impl, so the
+    historical 4-argument call and the 5-argument call with the default
+    backend land on the SAME cache entry (lru_cache keys on the raw call
+    signature, which would otherwise split them).
 
     The incoming state is DONATED: the ``[R, L]`` channel/MSHR/directory
     slabs update in place instead of reallocating every step.  Callers must
     treat a stepped state as consumed (every in-repo driver rebinds)."""
+    return _jitted_step_mn_impl(subset_name, hreq_shared, n_homes,
+                                home_bw, kernel_backend)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step_mn_impl(subset_name: str, hreq_shared: bool,
+                         n_homes: int, home_bw: int,
+                         kernel_backend: str):
     tables_mn = mn_tables(subset_name)
     return jax.jit(functools.partial(step_mn, tables_mn.base, tables_mn,
                                      hreq_shared=hreq_shared,
-                                     n_homes=n_homes, home_bw=home_bw),
+                                     n_homes=n_homes, home_bw=home_bw,
+                                     kernel_backend=kernel_backend),
                    donate_argnums=0)
 
 
@@ -657,13 +744,16 @@ def busy_flag_mn(st: EngineMNState) -> jnp.ndarray:
 
 @functools.lru_cache(maxsize=None)
 def _jitted_run_ops_mn(subset_name: str, hreq_shared: bool = False,
-                       n_homes: int = 1, home_bw: int = 0):
+                       n_homes: int = 1, home_bw: int = 0,
+                       kernel_backend: str = "xla"):
     """One fused submit-and-drain program per (subset, credit model, home
-    plan), shared across EngineMN instances like ``_jitted_step_mn``."""
+    plan, kernel backend), shared across EngineMN instances like
+    ``_jitted_step_mn``."""
     tables_mn = mn_tables(subset_name)
     step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
                                 hreq_shared=hreq_shared,
-                                n_homes=n_homes, home_bw=home_bw)
+                                n_homes=n_homes, home_bw=home_bw,
+                                kernel_backend=kernel_backend)
 
     def run(st, opv, vv, delays, credits, max_rounds):
         L, B = st.dir.backing.shape
@@ -713,6 +803,11 @@ class EngineMN:
     MSHR plane and credit pools (see docs/multinode.md, "Sharding the
     home").  ``home_bw`` caps new transactions accepted per home per step
     (0 = unbounded), modeling the directory-slice pipeline bandwidth.
+
+    ``kernel_backend`` selects the step's inner-plane implementation
+    ("xla" default / "pallas" — see ``KERNEL_BACKENDS``); "" defers to
+    the ``REPRO_KERNEL_BACKEND`` environment variable, then "xla".  Both
+    backends are BIT-identical (docs/perf.md, "Kernel backends").
     """
 
     def __init__(self, backing: jnp.ndarray, n_remotes: int,
@@ -721,7 +816,8 @@ class EngineMN:
                  credits: Optional[np.ndarray] = None,
                  subset: Optional[ProtocolSubset] = None,
                  shared_credits: bool = False,
-                 n_homes: int = 1, home_bw: int = 0):
+                 n_homes: int = 1, home_bw: int = 0,
+                 kernel_backend: str = ""):
         assert 1 <= n_remotes <= MAX_REMOTES, \
             f"EWF v2 carries 6-bit node ids (n_remotes={n_remotes})"
         self.n_remotes = n_remotes
@@ -740,12 +836,14 @@ class EngineMN:
             f"home_bw={home_bw} must be >= 0 (0 = unbounded acceptance)"
         self.n_homes = n_homes
         self.home_bw = home_bw
+        self.kernel_backend = resolve_kernel_backend(kernel_backend)
         self.delays = jnp.asarray(
             delays if delays is not None else tp.DEFAULT_DELAYS)
         self.credits = jnp.asarray(
             credits if credits is not None else tp.DEFAULT_CREDITS)
         self._step = _jitted_step_mn(subset.name, shared_credits,
-                                     n_homes, home_bw)
+                                     n_homes, home_bw,
+                                     self.kernel_backend)
         self._backing = backing
 
     @classmethod
@@ -767,7 +865,8 @@ class EngineMN:
         return cls(jnp.zeros((cfg.lines, cfg.block), jnp.float32),
                    n_remotes=cfg.remotes, moesi=cfg.moesi, subset=subset,
                    credits=credits, shared_credits=cfg.shared_credits,
-                   n_homes=cfg.homes, home_bw=cfg.home_bw)
+                   n_homes=cfg.homes, home_bw=cfg.home_bw,
+                   kernel_backend=getattr(cfg, "kernel_backend", ""))
 
     def init(self) -> EngineMNState:
         # fresh copy of the backing: the jitted hot paths DONATE the state,
@@ -829,6 +928,7 @@ class EngineMN:
         vals[L,B], rounds, still_busy) with done/vals reduced over the
         remote axis (at most one remote acts per line per call)."""
         return _jitted_run_ops_mn(self.subset.name, self.shared_credits,
-                                  self.n_homes, self.home_bw)(
+                                  self.n_homes, self.home_bw,
+                                  self.kernel_backend)(
             st, opv, op_val, self.delays, self.credits,
             jnp.asarray(max_rounds, jnp.int32))

@@ -95,7 +95,8 @@ def occupancy(ch: Channel, msg_class: int) -> jnp.ndarray:
 
 def credit_accept(ch: Channel, msg_class: int, cand: jnp.ndarray,
                   credits: jnp.ndarray, *,
-                  shared: bool = False) -> jnp.ndarray:
+                  shared: bool = False,
+                  backend: str = "xla") -> jnp.ndarray:
     """[..., L] mask of candidates within their VC's credit.
 
     A candidate is in credit iff its VC's current occupancy plus the number
@@ -117,13 +118,18 @@ def credit_accept(ch: Channel, msg_class: int, cand: jnp.ndarray,
     shared-credit question for the home's R-1 invalidation fan-out — the
     per-row accounting gives the home R independent budgets, a real
     shared link would not.
+
+    ``backend="pallas"`` routes the per-row ranking through the
+    ``kernels.coherency_step.credit_rank`` Pallas kernel — BIT-identical
+    to the default XLA expressions (integer arithmetic); the shared-pool
+    path always uses the jnp expressions.
     """
     L = ch.msg.shape[-1]
     odd = (jnp.arange(L) & 1).astype(bool)                      # [L]
     active = ch.msg != int(MsgType.NOP)
-    c_o = jnp.where(odd, cand, False).astype(jnp.int32)
-    c_e = jnp.where(odd, False, cand).astype(jnp.int32)
     if shared and ch.msg.ndim > 1:
+        c_o = jnp.where(odd, cand, False).astype(jnp.int32)
+        c_e = jnp.where(odd, False, cand).astype(jnp.int32)
         occ_o = jnp.where(odd, active, False).sum(
             axis=(-2, -1), keepdims=True)
         occ_e = jnp.where(odd, False, active).sum(
@@ -132,12 +138,18 @@ def credit_accept(ch: Channel, msg_class: int, cand: jnp.ndarray,
         flat_e = c_e.reshape(c_e.shape[:-2] + (-1,))
         rank_o = (jnp.cumsum(flat_o, axis=-1) - flat_o).reshape(cand.shape)
         rank_e = (jnp.cumsum(flat_e, axis=-1) - flat_e).reshape(cand.shape)
+        occ_rank = jnp.where(odd, occ_o + rank_o, occ_e + rank_e)
+    elif backend == "pallas":
+        from ..kernels import ops as _kops
+        occ_rank = _kops.credit_rank(active, cand)
     else:
+        c_o = jnp.where(odd, cand, False).astype(jnp.int32)
+        c_e = jnp.where(odd, False, cand).astype(jnp.int32)
         occ_o = jnp.where(odd, active, False).sum(-1, keepdims=True)
         occ_e = jnp.where(odd, False, active).sum(-1, keepdims=True)
         rank_o = jnp.cumsum(c_o, axis=-1) - c_o    # candidates before me
         rank_e = jnp.cumsum(c_e, axis=-1) - c_e
-    occ_rank = jnp.where(odd, occ_o + rank_o, occ_e + rank_e)
+        occ_rank = jnp.where(odd, occ_o + rank_o, occ_e + rank_e)
     vc_credit = credits[vc_of(jnp.arange(L), msg_class)]        # [L]
     return cand & (occ_rank < vc_credit)
 
@@ -162,7 +174,8 @@ def submit(ch: Channel, msg_class: int, want: jnp.ndarray, msg: jnp.ndarray,
            dirty: jnp.ndarray, payload: jnp.ndarray,
            credits: jnp.ndarray, *,
            unbounded: bool = False,
-           shared: bool = False) -> tuple[Channel, jnp.ndarray]:
+           shared: bool = False,
+           backend: str = "xla") -> tuple[Channel, jnp.ndarray]:
     """Try to enqueue messages for lines where ``want`` is set.
 
     Returns the updated channel and the mask of ACCEPTED lines.  A submit is
@@ -181,7 +194,8 @@ def submit(ch: Channel, msg_class: int, want: jnp.ndarray, msg: jnp.ndarray,
     free = ch.msg == int(MsgType.NOP)
     cand = want & free                                          # [..., L]
     accept = cand if unbounded else credit_accept(ch, msg_class, cand,
-                                                  credits, shared=shared)
+                                                  credits, shared=shared,
+                                                  backend=backend)
     return place(ch, accept, msg, dirty, payload), accept
 
 

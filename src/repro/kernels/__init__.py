@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer (the ops/ref contract).
+
+Each compute hot-spot lives in three places:
+
+* ``<name>.py``  — the Pallas kernel itself (``pl.pallas_call`` schedule;
+  ``interpret=True`` on non-TPU backends, real Mosaic lowering on TPU);
+* ``ref.py``     — the pure-jnp oracle, the semantic ground truth the
+  kernel is tested against;
+* ``ops.py``     — the ONE public entry point per kernel: picks interpret
+  mode automatically, handles padding/fallback shapes, and routes to the
+  ref when ``use_kernel=False``.
+
+Callers import ``repro.kernels.ops`` only.  Two kernel families:
+
+* paper operators (select/regex/probe/attention/rglru) — float kernels,
+  tested allclose (``tests/test_kernels.py``);
+* the coherency-step inner plane (``coherency_step.py``: credit_rank,
+  arb_winner, count_fold, lat_hist) — integer kernels reached by the
+  engine only under ``kernel_backend="pallas"``, tested BIT-exact against
+  the engine's own XLA expressions (``tests/test_coherency_kernels.py``,
+  ``tests/test_kernel_ops.py``).
+"""

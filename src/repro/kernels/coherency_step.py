@@ -1,0 +1,238 @@
+"""Pallas kernels for the coherency engine's per-step inner plane.
+
+The four patterns XLA:CPU lowers worst in the ``EngineMN`` hot path (see
+docs/perf.md), each as a Pallas kernel with its pure-jnp oracle in
+``ref.py`` (the ops/ref contract of this package):
+
+* ``credit_rank``  — parity-split credit ranking
+  (``transport.credit_accept``): per initiator row, occupancy + earlier-
+  candidate rank against the line's odd/even VC.
+* ``arb_winner``   — per-line rotating-priority arbitration winner select
+  (``core.engine_mn.step_mn`` phase 4) over the ``[P, L]`` participant
+  plane (P = R remotes + the home).
+* ``count_fold``   — the delivered-message one-hot counter fold
+  (``core.engine._count``; the former ~45%-of-step scatter).
+* ``lat_hist``     — the retirement-latency histogram fold
+  (``traffic.counters.update_counters``).
+
+Everything here is integer/boolean arithmetic, so the contract with the
+refs is BIT-EXACT equality — in interpret mode on CPU (what CI runs) and
+under real Mosaic lowering on TPU.  The kernels avoid TPU-hostile
+primitives on purpose: cumulative sums become small integer matmuls
+against in-kernel iota masks (MXU-friendly), argmin becomes an
+encode/min/decode over ``score * (P+1) + p`` (exact because priorities
+are a permutation per line and ties only occur at the not-ready fill
+value, where min-of-encoding picks the lowest participant id — the same
+first-minimum rule as ``jnp.argmin``), and ``searchsorted`` becomes a
+static unrolled ``sum(lat >= edge)``.
+
+The engine reaches these only when its ``kernel_backend`` is "pallas"
+(``REPRO_KERNEL_BACKEND`` env or ``EngineConfig.kernel_backend``); the
+default backend keeps the original XLA expressions, bit-identical to
+every committed baseline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, mult: int):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, width), n
+
+
+# ---------------------------------------------------------------------------
+# credit_rank
+# ---------------------------------------------------------------------------
+
+
+def _credit_rank_kernel(act_ref, cand_ref, out_ref, *, L: int):
+    act = act_ref[:].astype(jnp.int32)                    # [bn, L]
+    cnd = cand_ref[:].astype(jnp.int32)
+    j = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)    # source line
+    i = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)    # ranked line
+    same = ((j & 1) == (i & 1)).astype(jnp.int32)         # same VC parity
+    earlier = same * (j < i).astype(jnp.int32)
+    # rank[n, i] = sum_j active[n, j] * same[j, i]
+    #            + sum_j cand[n, j]  * (same & j < i)[j, i]
+    # — the parity-split occupancy + exclusive running rank as two integer
+    # matmuls (exact in int32; MXU-shaped on TPU instead of a cumsum).
+    dn = (((1,), (0,)), ((), ()))
+    out_ref[:] = (
+        jax.lax.dot_general(act, same, dn,
+                            preferred_element_type=jnp.int32)
+        + jax.lax.dot_general(cnd, earlier, dn,
+                              preferred_element_type=jnp.int32))
+
+
+def credit_rank(active: jnp.ndarray, cand: jnp.ndarray, *,
+                block_rows: int = 128, interpret=None) -> jnp.ndarray:
+    """[..., L] int32 — Pallas twin of ``ref.credit_rank_ref``."""
+    shape = active.shape
+    L = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    act2 = active.reshape(rows, L)
+    cnd2 = cand.reshape(rows, L)
+    bn = min(block_rows, max(rows, 1))
+    act2, _ = _pad_rows(act2, bn)
+    cnd2, _ = _pad_rows(cnd2, bn)
+    out = pl.pallas_call(
+        functools.partial(_credit_rank_kernel, L=L),
+        grid=(act2.shape[0] // bn,),
+        in_specs=[pl.BlockSpec((bn, L), lambda b: (b, 0)),
+                  pl.BlockSpec((bn, L), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((bn, L), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((act2.shape[0], L), jnp.int32),
+        interpret=_interpret() if interpret is None else interpret,
+    )(act2, cnd2)
+    return out[:rows].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# arb_winner
+# ---------------------------------------------------------------------------
+
+
+def _arb_winner_kernel(ready_ref, rr_ref, out_ref, *, P: int):
+    ready = ready_ref[0]                                  # [P, L]
+    rr = rr_ref[:]                                        # [1, L] int32
+    p = jax.lax.broadcasted_iota(jnp.int32, ready.shape, 0)
+    prio = (p - rr) % P                                   # permutation/line
+    score = jnp.where(ready, prio, P)
+    # encode (score, participant) into one key: distinct ready scores
+    # dominate; the only ties are at the fill score P, where min picks the
+    # smallest p — jnp.argmin's first-minimum rule.
+    enc = score * (P + 1) + p
+    out_ref[:] = (jnp.min(enc, axis=0, keepdims=True) % (P + 1)
+                  ).astype(jnp.int32)
+
+
+def arb_winner(ready_all: jnp.ndarray, arb_rr: jnp.ndarray, *,
+               interpret=None) -> jnp.ndarray:
+    """[..., L] int32 — Pallas twin of ``ref.arb_winner_ref``.
+
+    ``ready_all`` is ``[..., P, L]`` (P = R+1 participants), ``arb_rr``
+    ``[..., L]``; leading axes (the multi-home fold's H) become the grid.
+    """
+    P, L = ready_all.shape[-2:]
+    lead = ready_all.shape[:-2]
+    n = 1
+    for d in lead:
+        n *= d
+    ready3 = ready_all.reshape(n, P, L)
+    rr2 = arb_rr.reshape(n, L).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_arb_winner_kernel, P=P),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, P, L), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, L), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((1, L), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, L), jnp.int32),
+        interpret=_interpret() if interpret is None else interpret,
+    )(ready3, rr2)
+    return out.reshape(lead + (L,))
+
+
+# ---------------------------------------------------------------------------
+# count_fold
+# ---------------------------------------------------------------------------
+
+
+def _count_fold_kernel(msg_ref, mask_ref, pay_ref, cnt_ref, pay_out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cnt_ref[:] = jnp.zeros_like(cnt_ref)
+        pay_out_ref[:] = jnp.zeros_like(pay_out_ref)
+
+    msg = msg_ref[:].reshape(-1, 1)                       # [bk, 1] int32
+    mask = mask_ref[:].reshape(-1, 1)                     # [bk, 1] bool
+    types = jax.lax.broadcasted_iota(jnp.int32, (msg.shape[0], 16), 1)
+    eq = (msg == types) & mask
+    cnt_ref[:] += eq.astype(jnp.int32).sum(0, keepdims=True)
+    pay_out_ref[:] += (mask_ref[:] & pay_ref[:]).astype(jnp.int32).sum(
+        keepdims=True)
+
+
+def count_fold(mask: jnp.ndarray, msg: jnp.ndarray,
+               has_payload: jnp.ndarray, *, block: int = 2048,
+               interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(delta [16] int32, payload delta [] int32) — Pallas twin of
+    ``ref.count_fold_ref``.  The grid walks flattened blocks sequentially,
+    accumulating into one resident output tile (masked padding adds 0)."""
+    flat_msg = msg.reshape(1, -1).astype(jnp.int32)
+    flat_mask = mask.reshape(1, -1)
+    flat_pay = has_payload.reshape(1, -1)
+    n = flat_msg.shape[1]
+    bk = min(block, max(n, 1))
+    pad = (-n) % bk
+    if pad:
+        width = [(0, 0), (0, pad)]
+        flat_msg = jnp.pad(flat_msg, width)
+        flat_mask = jnp.pad(flat_mask, width)
+        flat_pay = jnp.pad(flat_pay, width)
+    cnt, pay = pl.pallas_call(
+        _count_fold_kernel,
+        grid=(flat_msg.shape[1] // bk,),
+        in_specs=[pl.BlockSpec((1, bk), lambda b: (0, b)),
+                  pl.BlockSpec((1, bk), lambda b: (0, b)),
+                  pl.BlockSpec((1, bk), lambda b: (0, b))],
+        out_specs=[pl.BlockSpec((1, 16), lambda b: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda b: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, 16), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=_interpret() if interpret is None else interpret,
+    )(flat_msg, flat_mask, flat_pay)
+    return cnt[0], pay[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# lat_hist
+# ---------------------------------------------------------------------------
+
+
+def _lat_hist_kernel(lat_ref, ret_ref, out_ref, *, edges: Tuple[int, ...],
+                     nb: int):
+    lat = lat_ref[:]                                      # [br, L] int32
+    ret = ret_ref[:]
+    bucket = jnp.zeros_like(lat)
+    for e in edges:     # static unroll == searchsorted(side="right")
+        bucket = bucket + (lat >= e).astype(jnp.int32)
+    cols = [((bucket == b) & ret).astype(jnp.int32).sum(-1, keepdims=True)
+            for b in range(nb)]
+    out_ref[:] = jnp.concatenate(cols, axis=-1)
+
+
+def lat_hist(lat: jnp.ndarray, retired: jnp.ndarray,
+             edges: Tuple[int, ...], *, block_rows: int = 64,
+             interpret=None) -> jnp.ndarray:
+    """[R, NB] int32 — Pallas twin of ``ref.lat_hist_ref`` (2-D input)."""
+    R, L = lat.shape
+    nb = len(edges) + 1
+    br = min(block_rows, max(R, 1))
+    lat2, _ = _pad_rows(lat.astype(jnp.int32), br)
+    ret2, _ = _pad_rows(retired, br)
+    out = pl.pallas_call(
+        functools.partial(_lat_hist_kernel, edges=tuple(edges), nb=nb),
+        grid=(lat2.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, L), lambda b: (b, 0)),
+                  pl.BlockSpec((br, L), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((br, nb), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((lat2.shape[0], nb), jnp.int32),
+        interpret=_interpret() if interpret is None else interpret,
+    )(lat2, ret2)
+    return out[:R]

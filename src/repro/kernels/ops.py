@@ -13,6 +13,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import coherency_step as _coh
 from . import ref as _ref
 from .flash_attention import flash_attention as _flash
 from .hash_probe import hash_probe as _probe
@@ -101,3 +102,45 @@ def rglru(x: jnp.ndarray, a: jnp.ndarray, *, chunk: int = 128,
         return _ref.rglru_scan_ref(x, a)
     return _rglru(x, a, chunk=chunk, block_d=block_d,
                   interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Coherency-step kernels (core/engine_mn.py hot path; integer arithmetic,
+# so ``use_kernel=False`` is BIT-identical, not merely allclose — the
+# refs ARE the engine's default XLA expressions).  The engine dispatches
+# here only under ``kernel_backend="pallas"``.
+# ---------------------------------------------------------------------------
+
+
+def credit_rank(active: jnp.ndarray, cand: jnp.ndarray, *,
+                use_kernel: bool = True) -> jnp.ndarray:
+    """Parity-split credit rank [..., L] int32 (transport.credit_accept)."""
+    if not use_kernel or active.shape[-1] == 0:
+        return _ref.credit_rank_ref(active, cand)
+    return _coh.credit_rank(active, cand, interpret=_interpret())
+
+
+def arb_winner(ready_all: jnp.ndarray, arb_rr: jnp.ndarray, *,
+               use_kernel: bool = True) -> jnp.ndarray:
+    """Rotating-priority winner [..., L] int32 (step_mn phase 4)."""
+    if not use_kernel or ready_all.shape[-1] == 0:
+        return _ref.arb_winner_ref(ready_all, arb_rr)
+    return _coh.arb_winner(ready_all, arb_rr, interpret=_interpret())
+
+
+def count_fold(mask: jnp.ndarray, msg: jnp.ndarray,
+               has_payload: jnp.ndarray, *, use_kernel: bool = True
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Delivered-message fold -> (delta [16], payload delta []) int32."""
+    if not use_kernel or msg.size == 0:
+        return _ref.count_fold_ref(mask, msg, has_payload)
+    return _coh.count_fold(mask, msg, has_payload, interpret=_interpret())
+
+
+def lat_hist(lat: jnp.ndarray, retired: jnp.ndarray,
+             edges: Tuple[int, ...], *, use_kernel: bool = True
+             ) -> jnp.ndarray:
+    """Latency-histogram delta [R, NB] int32 (counters.update_counters)."""
+    if not use_kernel or lat.shape[-1] == 0:
+        return _ref.lat_hist_ref(lat, retired, edges)
+    return _coh.lat_hist(lat, retired, tuple(edges), interpret=_interpret())

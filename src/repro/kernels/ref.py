@@ -206,6 +206,76 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# coherency_step: the coherency engine's per-step inner plane
+# (core/engine_mn.py hot path).  These refs are the EXACT jnp expressions
+# the engine's default XLA backend runs — all-integer/boolean arithmetic,
+# so the kernel contract is BIT-EXACT equality, not allclose
+# (tests/test_coherency_kernels.py).
+# ---------------------------------------------------------------------------
+
+
+def credit_rank_ref(active: jnp.ndarray, cand: jnp.ndarray) -> jnp.ndarray:
+    """[..., L] int32 parity-split credit rank (``transport.credit_accept``).
+
+    For each leading-axis initiator row: a candidate's rank against its
+    odd/even VC is the VC's current occupancy plus the number of EARLIER
+    candidates (stable line order) on the same parity.  The acceptance
+    test is then ``cand & (rank < credits[vc])``, applied by the caller.
+    """
+    L = active.shape[-1]
+    odd = (jnp.arange(L) & 1).astype(bool)
+    c_o = jnp.where(odd, cand, False).astype(jnp.int32)
+    c_e = jnp.where(odd, False, cand).astype(jnp.int32)
+    occ_o = jnp.where(odd, active, False).sum(-1, keepdims=True)
+    occ_e = jnp.where(odd, False, active).sum(-1, keepdims=True)
+    rank_o = jnp.cumsum(c_o, axis=-1) - c_o
+    rank_e = jnp.cumsum(c_e, axis=-1) - c_e
+    return jnp.where(odd, occ_o + rank_o, occ_e + rank_e)
+
+
+def arb_winner_ref(ready_all: jnp.ndarray, arb_rr: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """[..., L] int32 rotating-priority winner select (``step_mn`` phase 4).
+
+    ``ready_all`` is ``[..., P, L]`` over the P = R+1 arbitration
+    participants (R remotes + the home); ``arb_rr`` is the per-line
+    rotating pointer.  Participant p's priority on a line is
+    ``(p - arb_rr) % P``; the winner is the ready participant of minimum
+    priority (ties — only the not-ready fill value P — resolve to the
+    LOWEST participant id, matching ``jnp.argmin``'s first-minimum rule).
+    """
+    P = ready_all.shape[-2]
+    prio = (jnp.arange(P)[:, None] - arb_rr[..., None, :]) % P
+    return jnp.argmin(jnp.where(ready_all, prio, P), axis=-2)
+
+
+def count_fold_ref(mask: jnp.ndarray, msg: jnp.ndarray,
+                   has_payload: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Delivered-message fold (``engine._count``): one-hot compare +
+    reduce over ALL leading axes.  Returns (delta [16] int32, payload
+    delta [] int32) — the caller accumulates."""
+    eq = msg.astype(jnp.int32)[..., None] == jnp.arange(16)
+    axes = tuple(range(eq.ndim - 1))
+    return ((eq & mask[..., None]).sum(axes),
+            (mask & has_payload).sum())
+
+
+def lat_hist_ref(lat: jnp.ndarray, retired: jnp.ndarray,
+                 edges: Tuple[int, ...]) -> jnp.ndarray:
+    """[R, NB] int32 retirement-latency histogram delta
+    (``traffic.counters.update_counters``): bucket i holds lat in
+    [edge[i-1], edge[i]), last bucket overflows; only ``retired`` lanes
+    count.  ``searchsorted(edges, lat, side='right')`` is exactly
+    ``sum_e (lat >= e)`` for sorted integer edges."""
+    e = jnp.asarray(edges, jnp.int32)
+    nb = len(edges) + 1
+    bucket = jnp.searchsorted(e, lat, side="right")
+    onehot = bucket[..., None] == jnp.arange(nb)
+    return (onehot & retired[..., None]).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
 # rglru_scan: RG-LRU gated linear recurrence (recurrentgemma)
 # ---------------------------------------------------------------------------
 

@@ -18,24 +18,26 @@ plane (see docs/traffic.md, docs/serving.md and docs/observability.md).
 """
 from .arrivals import ARRIVALS, ArrivalSchedule, check_schedule
 from .config import (AdmissionConfig, ArrivalSpec, EngineConfig,
-                     StreamConfig, WorkloadSpec, config_from_json,
-                     config_to_json)
+                     FleetConfig, StreamConfig, WorkloadSpec,
+                     config_from_json, config_to_json)
 from .counters import (Counters, LAT_EDGES, RetirementTrace, SOJOURN_EDGES,
                        acc_total, assert_counts_match, hist_percentiles,
                        replay_reference, sojourn_summary, summarize,
                        validate_run)
 from .driver import StreamRun, default_steps, run_stream
+from .fleet import fleet_steps, run_fleet
 from .observe import (ObserveConfig, ObsResult, OnlineViolation,
                       perfetto_events, write_perfetto)
 from .workloads import WORKLOADS, Workload
 
 __all__ = [
     "ARRIVALS", "AdmissionConfig", "ArrivalSchedule", "ArrivalSpec",
-    "Counters", "EngineConfig", "LAT_EDGES", "ObserveConfig", "ObsResult",
-    "OnlineViolation", "RetirementTrace", "SOJOURN_EDGES", "StreamConfig",
-    "StreamRun", "WORKLOADS", "Workload", "WorkloadSpec", "acc_total",
-    "assert_counts_match", "check_schedule", "config_from_json",
-    "config_to_json", "default_steps", "hist_percentiles",
-    "perfetto_events", "replay_reference", "run_stream", "sojourn_summary",
-    "summarize", "validate_run", "write_perfetto",
+    "Counters", "EngineConfig", "FleetConfig", "LAT_EDGES",
+    "ObserveConfig", "ObsResult", "OnlineViolation", "RetirementTrace",
+    "SOJOURN_EDGES", "StreamConfig", "StreamRun", "WORKLOADS", "Workload",
+    "WorkloadSpec", "acc_total", "assert_counts_match", "check_schedule",
+    "config_from_json", "config_to_json", "default_steps", "fleet_steps",
+    "hist_percentiles", "perfetto_events", "replay_reference",
+    "run_fleet", "run_stream", "sojourn_summary", "summarize",
+    "validate_run", "write_perfetto",
 ]

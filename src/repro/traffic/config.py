@@ -126,9 +126,15 @@ class EngineConfig:
     shared_credits: bool = False
     homes: int = 1
     home_bw: int = 0
+    kernel_backend: str = ""    # ""/"xla"/"pallas"; "" -> env -> "xla"
 
     def __post_init__(self):
-        from ..core.engine_mn import MAX_REMOTES
+        from ..core.engine_mn import KERNEL_BACKENDS, MAX_REMOTES
+        if self.kernel_backend and \
+                self.kernel_backend not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"kernel_backend must be '' or one of {KERNEL_BACKENDS}, "
+                f"got '{self.kernel_backend}'")
         if not 1 <= self.remotes <= MAX_REMOTES:
             raise ValueError(f"remotes must be in 1..{MAX_REMOTES} "
                              f"(EWF v2 node-id field), got {self.remotes}")
@@ -221,6 +227,101 @@ class StreamConfig:
             obs["specs"] = list(obs["specs"])
             d["observe"] = obs
         return d
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FleetConfig:
+    """One compiled program for a whole sweep (``traffic.fleet``).
+
+    ``members`` is the sweep's point list — ``(EngineConfig,
+    StreamConfig)`` pairs, one per sweep point — and ``run_fleet`` vmaps
+    ONE streaming program over all of them: members may differ in
+    remotes, width, workload, homes and home_bw (those become traced
+    per-member data — padded workload columns, a traced width cap, the
+    engine's ``home_group``/``home_bw_t`` emulation operands), so an
+    R x W grid or an H in {1,2,4} sweep compiles ONCE instead of once
+    per point.  Every per-member result is BIT-identical to running that
+    member solo (``tests/test_fleet.py``), provided the solo run uses
+    the fleet's shared ``steps`` budget.
+
+    What must stay uniform is exactly what the traced program cannot
+    batch over: shapes (``lines``/``block``) and static program
+    structure (``subset``/``moesi``/``credits``/``kernel_backend``,
+    ``collect_trace``).  Open-loop members (arrivals/admission),
+    observability and capture filters are out of scope — those key the
+    program per member, which is the per-point compile the fleet exists
+    to amortize.
+
+    ``homes > 1`` members ride on the flat-layout emulation, which is
+    exact only while VC credits never bind (the folded engine splits
+    credit parity by plane-local line index): effective credits
+    (``credits`` or the transport default) must cover ``lines``.
+
+    ``steps = 0`` auto-derives the shared budget as the max of the
+    members' ``driver.default_steps`` — every member retires within it.
+    """
+
+    members: Tuple[Tuple[EngineConfig, StreamConfig], ...] = ()
+    steps: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "members", tuple(
+            (e, s) for e, s in self.members))
+        if not self.members:
+            raise ValueError("FleetConfig needs at least one member")
+        if self.steps < 0:
+            raise ValueError(f"steps must be >= 0 (0 = auto), "
+                             f"got {self.steps}")
+        e0, s0 = self.members[0]
+        for i, (e, s) in enumerate(self.members):
+            for f in ("lines", "block", "subset", "moesi", "credits",
+                      "kernel_backend"):
+                if getattr(e, f) != getattr(e0, f):
+                    raise ValueError(
+                        f"fleet member {i}: '{f}' must be uniform across "
+                        f"the fleet ({getattr(e, f)!r} != "
+                        f"{getattr(e0, f)!r}) — it shapes the one traced "
+                        f"program")
+            if e.shared_credits:
+                raise ValueError(
+                    f"fleet member {i}: shared_credits is not supported "
+                    f"in fleets (its credit ranking is order-sensitive "
+                    f"across the whole [R, L] slab)")
+            if e.homes > 1 and (e.credits or 64) < e.lines:
+                raise ValueError(
+                    f"fleet member {i}: homes={e.homes} requires "
+                    f"effective credits >= lines ({e.lines}) — the flat "
+                    f"H-emulation is exact only while credits never bind")
+            if not isinstance(s.workload, WorkloadSpec):
+                raise ValueError(
+                    f"fleet member {i}: fleet members need a seeded "
+                    f"WorkloadSpec (regenerated at the member's own "
+                    f"[R, L]), not raw Workload arrays")
+            if s.workload.ops != s0.workload.ops:
+                raise ValueError(
+                    f"fleet member {i}: workload ops must be uniform "
+                    f"({s.workload.ops} != {s0.workload.ops}) — the "
+                    f"fleet shares one [T, R] stream plane (a shorter "
+                    f"member would pad with NOPs that dilute its "
+                    f"active-step accounting)")
+            if s.arrivals is not None or (
+                    s.admission is not None and s.admission.max_inflight):
+                raise ValueError(
+                    f"fleet member {i}: open-loop members (arrivals/"
+                    f"admission) are not fleet-batchable")
+            if s.observe is not None or s.line_filter is not None or \
+                    s.type_filter is not None:
+                raise ValueError(
+                    f"fleet member {i}: observability/capture filters "
+                    f"key the program per member and cannot ride a "
+                    f"fleet")
+            if s.steps:
+                raise ValueError(
+                    f"fleet member {i}: per-member steps must be 0 — the "
+                    f"fleet runs ONE shared budget (FleetConfig.steps)")
+            if s.collect_trace != s0.collect_trace:
+                raise ValueError(
+                    f"fleet member {i}: collect_trace must be uniform")
 
 
 def _check_keys(d: dict, allowed, what: str) -> None:

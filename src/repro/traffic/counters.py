@@ -115,7 +115,8 @@ def make_counters(n_remotes: int) -> Counters:
 def update_counters(ctr: Counters, st, *, retired: jnp.ndarray,
                     lat: jnp.ndarray, outstanding: jnp.ndarray,
                     head_wait: jnp.ndarray,
-                    step_active: jnp.ndarray) -> Counters:
+                    step_active: jnp.ndarray,
+                    backend: str = "xla") -> Counters:
     """Fold one engine step's events into the counters (traced).
 
     Args:
@@ -126,10 +127,18 @@ def update_counters(ctr: Counters, st, *, retired: jnp.ndarray,
       outstanding: [R, L] transactions still in flight after this step.
       head_wait: [R] wait of each remote's not-yet-accepted head op.
       step_active: [] bool — stream unconsumed or engine non-quiescent.
+      backend: "pallas" routes the latency-histogram fold through the
+        ``kernels.coherency_step.lat_hist`` kernel (bit-identical).
     """
-    bucket = jnp.searchsorted(jnp.asarray(LAT_EDGES), lat, side="right")
-    onehot = bucket[..., None] == jnp.arange(N_LAT_BUCKETS)
-    hist = ctr.lat_hist + (onehot & retired[..., None]).sum(axis=1)
+    if backend == "pallas":
+        from ..kernels import ops as _kops
+        hist = ctr.lat_hist + _kops.lat_hist(
+            lat, retired, tuple(int(e) for e in LAT_EDGES))
+    else:
+        bucket = jnp.searchsorted(jnp.asarray(LAT_EDGES), lat,
+                                  side="right")
+        onehot = bucket[..., None] == jnp.arange(N_LAT_BUCKETS)
+        hist = ctr.lat_hist + (onehot & retired[..., None]).sum(axis=1)
 
     # the starvation bound: worst of (retired latency, in-flight wait,
     # head-of-stream wait) — a starved request never retires, so the live

@@ -144,23 +144,34 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                    home_bw: int = 0,
                    obs: Optional[ObserveConfig] = None,
                    open_loop: bool = False, admit_cap: int = 0,
-                   admit_reserve: int = 0):
+                   admit_reserve: int = 0,
+                   kernel_backend: str = "xla",
+                   fleet: bool = False):
     """One fused streaming program per (subset, trace?, width, credit
-    model, home plane, observability, admission) tuple, shared across
-    engines; shapes (R, L, T, total steps) retrace inside jit's cache.
-    The engine state is donated — the streaming scan is the hot path, and
-    per-step reallocation of the ``[R, L]`` slabs is pure overhead.
-    ``obs=None`` (the default) leaves the traced program EXACTLY what it
-    always was — observability is compiled in only when an
-    ``ObserveConfig`` keys a separate cache entry, and likewise
+    model, home plane, observability, admission, kernel backend) tuple,
+    shared across engines; shapes (R, L, T, total steps) retrace inside
+    jit's cache.  The engine state is donated — the streaming scan is the
+    hot path, and per-step reallocation of the ``[R, L]`` slabs is pure
+    overhead.  ``obs=None`` (the default) leaves the traced program
+    EXACTLY what it always was — observability is compiled in only when
+    an ``ObserveConfig`` keys a separate cache entry, and likewise
     ``open_loop=False`` compiles no arrival/admission logic at all.
     ``admit_cap``/``admit_reserve`` are STATIC (they key the program), so
     a knee sweep varying only the arrival schedule reuses one compiled
-    program."""
+    program.
+
+    ``fleet=True`` (``traffic.fleet``) vmaps the SAME per-member program
+    over a leading sweep axis and takes three extra TRACED per-member
+    operands: ``width_cap`` (the member's real issue width — ``width``
+    then is the fleet-wide max, slots past the cap never activate),
+    ``home_group``/``home_bw_t`` (the engine's flat-layout H-home
+    emulation).  A fleet member's body is bit-identical to its solo
+    program at the same step budget."""
     tables_mn = mn_tables(subset_name)
     step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
                                 hreq_shared=hreq_shared, n_homes=n_homes,
-                                home_bw=home_bw)
+                                home_bw=home_bw,
+                                kernel_backend=kernel_backend)
     nop_op = jnp.int8(int(LocalOp.NOP))
     W = width
     if obs is not None:
@@ -168,7 +179,8 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
         tab_np, start_np = _encoded_tables(comp)
 
     def run(st, wl_op, wl_line, wl_value, tsteps, delays, credits,
-            line_filt=None, type_filt=None, arr_step=None):
+            line_filt=None, type_filt=None, arr_step=None,
+            width_cap=None, home_group=None, home_bw_t=None):
         R, L = st.hreq_pending.shape
         B = st.dir.backing.shape[1]
         T = wl_op.shape[0]
@@ -184,6 +196,12 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             # ---- fetch each remote's issue window -----------------------
             idx = c.cursor[:, None] + wr[None, :]            # [R, W]
             active = idx < T
+            if fleet:
+                # window slots past the member's real width never
+                # activate — the member behaves exactly as if its window
+                # were width_cap wide while the fleet compiles one W-max
+                # shaped program.
+                active = active & (wr[None, :] < width_cap)
             idxc = jnp.minimum(idx, T - 1)
             s_op = wl_op[idxc, ar[:, None]]                  # [R, W]
             s_line = wl_line[idxc, ar[:, None]]
@@ -242,12 +260,15 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                     ar[:, None], s_line].add(jnp.where(can, s_arr, 0))
 
             # ---- one engine step under sustained traffic ----------------
+            hk = {"home_group": home_group,
+                  "home_bw_t": home_bw_t} if fleet else {}
             if obs is None:
                 st2, out = step_fn(c.st, opd, vald, zb, zb, zwv, delays,
-                                   credits)
+                                   credits, **hk)
             else:
                 st2, out, ev = step_fn(c.st, opd, vald, zb, zb, zwv,
-                                       delays, credits, emit_events=True)
+                                       delays, credits, emit_events=True,
+                                       **hk)
 
             # ---- adopt newly accepted ops, detect retirements -----------
             newly = out.accepted                       # [R, L]
@@ -295,7 +316,11 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             shift = jnp.cumprod(issued.astype(jnp.int32), axis=1).sum(1)
             cursor = c.cursor + shift
             k2 = wr[None, :] + shift[:, None]                # [R, W]
-            in_w = k2 < W
+            # a slot sliding in from past the member's window is FRESH
+            # (born now) — under a fleet the boundary is the member's
+            # width_cap, not the compiled W-max, or masked slots' stale
+            # born stamps would leak into real slots' latency metrics.
+            in_w = (k2 < width_cap) if fleet else (k2 < W)
             k2c = jnp.minimum(k2, W - 1)
             issued2 = jnp.where(in_w,
                                 jnp.take_along_axis(issued, k2c, axis=1),
@@ -314,7 +339,8 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             ctr = update_counters(c.ctr, st2, retired=retired, lat=lat,
                                   outstanding=outstanding,
                                   head_wait=head_wait,
-                                  step_active=step_active)
+                                  step_active=step_active,
+                                  backend=kernel_backend)
 
             # ---- observability plane (in-scan; compiled in only when
             # ---- an ObserveConfig keys this program) --------------------
@@ -360,6 +386,14 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
             ~carry.outstanding.any() & ~busy_flag_mn(carry.st)
         return carry, completed
 
+    if fleet:
+        # one compiled program for the whole sweep: members batch over a
+        # leading axis (state/workload/delays/credits/caps), the step
+        # vector is shared.  Filters/arrivals are out of fleet scope
+        # (validated by FleetConfig) and pass through as None.
+        vm = jax.vmap(run, in_axes=(0, 0, 0, 0, None, 0, 0, None, None,
+                                    None, 0, 0, 0))
+        return jax.jit(vm, donate_argnums=0)
     return jax.jit(run, donate_argnums=0)
 
 
@@ -475,7 +509,8 @@ def _run_config(engine: EngineMN, cfg: StreamConfig,
     fn = _jitted_stream(engine.subset.name, cfg.collect_trace,
                         int(cfg.width), engine.shared_credits,
                         engine.n_homes, engine.home_bw, cfg.observe,
-                        open_loop, int(adm.max_inflight), int(adm.reserve))
+                        open_loop, int(adm.max_inflight), int(adm.reserve),
+                        engine.kernel_backend)
     # None filters/arrivals pass through as empty pytree leaves, so the
     # jit program specializes away the corresponding gathers entirely.
     lf = None if cfg.line_filter is None else \

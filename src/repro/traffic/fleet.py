@@ -1,0 +1,157 @@
+"""Vmapped sim fleets: one compiled program per bench sweep.
+
+``bench_smoke``/``paper_benches`` sweeps used to pay one trace+compile of
+the fused streaming scan PER POINT — an R x W grid or an H in {1,2,4}
+homes sweep recompiled a structurally identical program once per member,
+and compile time dominated CI wall clock.  ``run_fleet`` batches the
+whole sweep into ONE jitted program: ``jax.vmap`` over the driver's
+``run`` body, members stacked on a leading sweep axis.
+
+What makes the members batchable (see ``config.FleetConfig`` for the
+exact rules):
+
+* **remotes** — every member runs at the fleet-wide R-max; narrower
+  members pad their workload with NOP columns and their state with idle
+  remotes.  Padded remotes are never ready, so arbitration picks the
+  same winners (the rotating pointer stays within the real participant
+  range and cyclic priority order is modulus-invariant there), and they
+  drain their NOP streams faster than any real remote, so the
+  active-step accounting is untouched — per-member counters are
+  BIT-identical to the solo run.
+* **width** — one W-max window; a traced per-member ``width_cap`` masks
+  the slots past the member's real width (activation AND the
+  fresh-slot boundary, so no stale born stamps leak into latencies).
+* **homes / home_bw** — members ride the engine's flat-layout H-home
+  emulation (``step_mn``'s ``home_group``/``home_bw_t`` operands): VC
+  parity follows the folded plane-local line index and per-home
+  acceptance is capped in the folded rotating order, bit-identical to
+  the ``[H, R, L/H]`` fold while VC credits never bind (which
+  ``FleetConfig`` validates).
+
+Per-member results are bit-identical to solo ``run_stream`` runs AT THE
+FLEET'S SHARED STEP BUDGET (``tests/test_fleet.py`` pins this): the
+budget is the max of the members' ``default_steps``, and a solo run you
+compare against must use the same number (counter fields like ``steps``
+count the whole scan).
+
+``run_fleet`` returns plain per-member ``StreamRun`` records; the
+returned ``state`` is the member's R-max-padded flat engine state (rows
+past the member's real remote count are idle).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine_mn import make_engine_mn_state
+from .config import FleetConfig
+from .counters import RetirementTrace
+from .driver import StreamRun, _jitted_stream, default_steps
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def fleet_steps(fleet: FleetConfig) -> int:
+    """The shared step budget ``run_fleet`` will use — exposed so solo
+    comparison/benchmark runs can pin the SAME budget."""
+    if fleet.steps:
+        return fleet.steps
+    return max(default_steps(s.workload.ops, e.remotes)
+               for e, s in fleet.members)
+
+
+def run_fleet(fleet: FleetConfig) -> List[StreamRun]:
+    """Run every member of the sweep in one jitted, vmapped program.
+
+    Compiles once for the whole fleet (per (subset, trace?, W-max,
+    backend, S/R-max/L/T shape) key — a second fleet with the same
+    shapes reuses the program), then reads each member's results back
+    out of the stacked carry.  See the module docstring for the
+    bit-identity contract.
+    """
+    members = fleet.members
+    engines = [e.build() for e, _ in members]
+    e0, s0 = members[0]
+    R_max = max(e.remotes for e, _ in members)
+    W_max = max(s.width for _, s in members)
+    steps = fleet_steps(fleet)
+
+    # materialize + subset-check each member's workload at its own
+    # [T, R_m], then pad to the fleet plane with NOP columns.
+    wls = []
+    for eng, (e, s) in zip(engines, members):
+        wl = s.workload.materialize(e.remotes, e.lines)
+        if not eng.subset.check_workload(np.asarray(wl.op),
+                                         n_remotes=e.remotes):
+            raise ValueError(
+                f"fleet member workload outside subset "
+                f"'{eng.subset.name}' guarantee (allowed ops: "
+                f"{sorted(eng.subset.allowed_ops(e.remotes))})")
+        wls.append(wl)
+    T = int(np.asarray(wls[0].op).shape[0])
+
+    def pad_cols(a):
+        a = np.asarray(a)
+        out = np.zeros((T, R_max), a.dtype)
+        out[:, :a.shape[1]] = a
+        return out
+
+    wl_op = jnp.asarray(np.stack([pad_cols(w.op) for w in wls]))
+    wl_line = jnp.asarray(np.stack([pad_cols(w.line) for w in wls]))
+    wl_value = jnp.asarray(np.stack([pad_cols(w.value) for w in wls]))
+
+    # fresh R-max states (padded remotes start — and stay — idle), plus
+    # the per-member traced knobs.
+    st = _stack([make_engine_mn_state(
+        jnp.zeros((e.lines, e.block), jnp.float32), R_max)
+        for e, _ in members])
+    delays = jnp.stack([eng.delays for eng in engines])
+    credits = jnp.stack([eng.credits for eng in engines])
+    width_cap = jnp.asarray([s.width for _, s in members], jnp.int32)
+    home_group = jnp.asarray([e.homes for e, _ in members], jnp.int32)
+    home_bw_t = jnp.asarray([e.home_bw for e, _ in members], jnp.int32)
+
+    # the multi-home plane is EMULATED (home_group), so the program keys
+    # on the flat layout; shared_credits/obs/open-loop are out of fleet
+    # scope by FleetConfig validation.
+    fn = _jitted_stream(engines[0].subset.name, s0.collect_trace, W_max,
+                        False, 1, 0, None, False, 0, 0,
+                        engines[0].kernel_backend, True)
+    carry, completed = fn(st, wl_op, wl_line, wl_value,
+                          jnp.arange(steps, dtype=jnp.int32),
+                          delays, credits, None, None, None,
+                          width_cap, home_group, home_bw_t)
+
+    completed = np.asarray(completed)
+    retire = np.asarray(carry.retire) if s0.collect_trace else None
+    runs = []
+    for i, (eng, (e, s), wl) in enumerate(zip(engines, members, wls)):
+        R_m = e.remotes
+        member = lambda x: x[i]
+        ctr = jax.device_get(jax.tree_util.tree_map(member, carry.ctr))
+        # the three per-remote counter planes carry padded rows (all
+        # zero except lat_hist's never-touched rows) — slice them off so
+        # the record is indistinguishable from the solo run's.
+        ctr = ctr._replace(lat_hist=ctr.lat_hist[:R_m],
+                           max_wait=ctr.max_wait[:R_m],
+                           retired=ctr.retired[:R_m])
+        trace = None
+        if s0.collect_trace:
+            trace = RetirementTrace(
+                retire_step=retire[i][:-1, :R_m],
+                op=np.asarray(wl.op), line=np.asarray(wl.line),
+                value=np.asarray(wl.value), n_lines=e.lines)
+        runs.append(StreamRun(
+            state=jax.tree_util.tree_map(member, carry.st),
+            counters=ctr,
+            msg_count=np.asarray(carry.st.msg_count[i], np.int64),
+            payload_msgs=int(carry.st.payload_msgs[i]),
+            trace=trace,
+            completed=bool(completed[i]),
+        ))
+    return runs

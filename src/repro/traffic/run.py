@@ -70,7 +70,7 @@ def build_configs(workload: str, n_remotes: int, n_lines: int, ops: int,
                   shared_credits: bool = False, n_homes: int = 1,
                   home_bw: int = 0, arrivals: str = "", rate: float = 0.1,
                   arrival_seed: int = 0, admit_cap: int = 0,
-                  admit_reserve: int = 0):
+                  admit_reserve: int = 0, kernel_backend: str = ""):
     """THE one place loose flags map onto the config dataclasses.
 
     Everything — CLI flags, smoke cases, bench rows — funnels through
@@ -84,7 +84,7 @@ def build_configs(workload: str, n_remotes: int, n_lines: int, ops: int,
                         subset=subset_name, moesi=moesi,
                         credits=int(credits or 0),
                         shared_credits=shared_credits, homes=n_homes,
-                        home_bw=home_bw)
+                        home_bw=home_bw, kernel_backend=kernel_backend)
     params = ()
     if subset_name and \
             int(LocalOp.STORE) not in SUBSETS[subset_name].local_ops:
@@ -168,7 +168,8 @@ def drive(workload: str, n_remotes: int = 4, n_lines: int = 64,
           check_specs: bool = False, trace_out: str = "",
           perfetto_out: str = "", arrivals: str = "", rate: float = 0.1,
           arrival_seed: int = 0, admit_cap: int = 0,
-          admit_reserve: int = 0, config_text: str = ""):
+          admit_reserve: int = 0, config_text: str = "",
+          kernel_backend: str = ""):
     """Flag-style front door: map the loose knobs (or a ``--config`` JSON
     document via ``config_text``, which overrides them) onto the config
     dataclasses and run."""
@@ -182,7 +183,7 @@ def drive(workload: str, n_remotes: int = 4, n_lines: int = 64,
             shared_credits=shared_credits, n_homes=n_homes,
             home_bw=home_bw, arrivals=arrivals, rate=rate,
             arrival_seed=arrival_seed, admit_cap=admit_cap,
-            admit_reserve=admit_reserve)
+            admit_reserve=admit_reserve, kernel_backend=kernel_backend)
     return drive_configs(ecfg, scfg, validate=validate, observe=observe,
                          check_specs=check_specs, trace_out=trace_out,
                          perfetto_out=perfetto_out)
@@ -303,6 +304,13 @@ def main() -> None:
                     help="per-home per-step cap on NEW transaction "
                          "acceptances (0 = unbounded) — the serialization "
                          "bottleneck multi-home sharding relieves")
+    ap.add_argument("--kernel-backend", default="",
+                    help="step-kernel backend: 'xla' (default) keeps "
+                         "today's pure-XLA step program; 'pallas' runs "
+                         "the credit-rank/arbitration/counter-fold plane "
+                         "as Pallas kernels (bit-identical; interpret "
+                         "mode on CPU).  Empty defers to the "
+                         "REPRO_KERNEL_BACKEND env var")
     ap.add_argument("--config", default="",
                     help="JSON file holding {engine: EngineConfig, "
                          "stream: StreamConfig} — the one config surface "
@@ -405,7 +413,8 @@ def main() -> None:
                 trace_out=args.trace_out, perfetto_out=args.perfetto,
                 arrivals=args.arrivals, rate=args.rate,
                 arrival_seed=args.arrival_seed, admit_cap=args.admit_cap,
-                admit_reserve=args.admit_reserve, config_text=config_text)
+                admit_reserve=args.admit_reserve, config_text=config_text,
+                kernel_backend=args.kernel_backend)
     if args.artifacts and "config" in out:
         # the full EngineConfig+StreamConfig round-trip, written back so
         # the artifact bundle records exactly what ran (and can be re-run

@@ -1,0 +1,173 @@
+"""Coherency-step Pallas kernels: BIT-exact agreement with the engine's
+XLA expressions (``kernels/ref.py`` holds those expressions verbatim),
+plus whole-engine pallas-vs-xla bisimulation on seeded schedules.
+
+These are integer kernels, so every comparison is assert_array_equal —
+never allclose.  On CPU the kernels execute in interpret mode (the CI
+path); on TPU the same tests exercise the real Mosaic lowering.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine_mn import (EngineMN, KERNEL_BACKENDS,
+                                  resolve_kernel_backend)
+from repro.core.protocol import LocalOp
+from repro.kernels import coherency_step as coh
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.traffic import (EngineConfig, StreamConfig, WorkloadSpec,
+                           run_stream, validate_run)
+from repro.traffic.counters import LAT_EDGES
+
+SEED = 1234
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel bit-exactness on random planes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(16,), (8, 16), (4, 8, 16), (3, 33),
+                                   (64, 128)])
+def test_credit_rank_bit_exact(shape):
+    rng = np.random.default_rng(SEED)
+    active = jnp.asarray(rng.random(shape) < 0.4)
+    cand = jnp.asarray((rng.random(shape) < 0.3)) & ~active
+    got = coh.credit_rank(active, cand, interpret=True)
+    want = kref.credit_rank_ref(active, cand)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == want.dtype
+
+
+@pytest.mark.parametrize("P,L,lead", [(3, 16, ()), (9, 16, ()),
+                                      (65, 32, ()), (5, 8, (4,))])
+def test_arb_winner_bit_exact(P, L, lead):
+    rng = np.random.default_rng(SEED + P)
+    ready = jnp.asarray(rng.random(lead + (P, L)) < 0.3)
+    arb = jnp.asarray(rng.integers(0, P, lead + (L,)).astype(np.int32))
+    got = coh.arb_winner(ready, arb, interpret=True)
+    want = kref.arb_winner_ref(ready, arb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(8, 16), (4, 8, 16), (5, 7)])
+def test_count_fold_bit_exact(shape):
+    rng = np.random.default_rng(SEED)
+    mask = jnp.asarray(rng.random(shape) < 0.5)
+    msg = jnp.asarray(rng.integers(0, 16, shape).astype(np.int8))
+    pay = jnp.asarray(rng.random(shape) < 0.5)
+    gc, gp = coh.count_fold(mask, msg, pay, interpret=True)
+    wc, wp = kref.count_fold_ref(mask, msg, pay)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    assert int(gp) == int(wp)
+
+
+@pytest.mark.parametrize("R,L", [(4, 16), (8, 32), (3, 7)])
+def test_lat_hist_bit_exact(R, L):
+    rng = np.random.default_rng(SEED)
+    # include negative latencies (an un-born in-flight lane) and values
+    # straddling every bucket edge.
+    lat = jnp.asarray(rng.integers(-4, 600, (R, L)).astype(np.int32))
+    retired = jnp.asarray(rng.random((R, L)) < 0.5)
+    edges = tuple(int(e) for e in LAT_EDGES)
+    got = coh.lat_hist(lat, retired, edges, interpret=True)
+    want = kref.lat_hist_ref(lat, retired, edges)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Seeded-schedule bisimulation: the full engine under kernel_backend=
+# "pallas" must match the default XLA engine bit-for-bit, state and all.
+# ---------------------------------------------------------------------------
+
+
+def _drive(backend, moesi):
+    L, B, R = 16, 2, 6
+    rng = np.random.default_rng(SEED)
+    backing = jnp.asarray(rng.normal(size=(L, B)).astype(np.float32))
+    eng = EngineMN(backing, n_remotes=R, moesi=moesi,
+                   kernel_backend=backend)
+    st = eng.init()
+    for t in range(30):
+        op = np.zeros((R, L), np.int8)
+        for r in range(R):
+            op[r, rng.integers(0, L)] = rng.choice(
+                [int(LocalOp.LOAD), int(LocalOp.STORE)])
+        st, _ = eng.step(st, jnp.asarray(op),
+                         jnp.full((R, L, B), float(t), jnp.float32))
+    return eng.drain(st, 256)
+
+
+@pytest.mark.parametrize("moesi", [True, False])
+def test_engine_pallas_vs_xla_bit_identical(moesi):
+    st_x = _drive("xla", moesi)
+    st_p = _drive("pallas", moesi)
+    for path, (x, p) in zip(
+            jax.tree_util.tree_leaves_with_path(st_x),
+            zip(jax.tree_util.tree_leaves(st_x),
+                jax.tree_util.tree_leaves(st_p))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(p),
+                                      err_msg=str(path[0]))
+
+
+def test_stream_pallas_vs_xla_bit_identical():
+    """The full streaming pipeline (driver scan + counters) under the
+    pallas backend — counters, message counts and the retirement trace
+    all bit-identical, and the oracle replay still validates."""
+    cfg = StreamConfig(workload=WorkloadSpec("zipfian", ops=24, seed=7),
+                       width=2, collect_trace=True)
+    a = run_stream(EngineConfig(remotes=6, lines=16).build(), cfg)
+    b = run_stream(EngineConfig(remotes=6, lines=16,
+                                kernel_backend="pallas").build(), cfg)
+    assert a.completed and b.completed
+    np.testing.assert_array_equal(a.msg_count, b.msg_count)
+    assert a.payload_msgs == b.payload_msgs
+    np.testing.assert_array_equal(a.trace.retire_step, b.trace.retire_step)
+    for f, (x, y) in zip(a.counters._fields, zip(a.counters, b.counters)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f)
+    validate_run(b)
+
+
+# ---------------------------------------------------------------------------
+# Backend selection plumbing.
+# ---------------------------------------------------------------------------
+
+
+def test_backend_resolution_and_validation():
+    assert KERNEL_BACKENDS == ("xla", "pallas")
+    assert resolve_kernel_backend("") == "xla"
+    assert resolve_kernel_backend("pallas") == "pallas"
+    with pytest.raises(ValueError, match="kernel_backend"):
+        resolve_kernel_backend("cuda")
+    with pytest.raises(ValueError, match="kernel_backend"):
+        EngineConfig(kernel_backend="cuda")
+    old = os.environ.get("REPRO_KERNEL_BACKEND")
+    try:
+        os.environ["REPRO_KERNEL_BACKEND"] = "pallas"
+        assert resolve_kernel_backend("") == "pallas"
+        # an explicit argument wins over the environment
+        assert resolve_kernel_backend("xla") == "xla"
+        eng = EngineMN(jnp.zeros((8, 2), jnp.float32), n_remotes=2)
+        assert eng.kernel_backend == "pallas"
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_KERNEL_BACKEND", None)
+        else:
+            os.environ["REPRO_KERNEL_BACKEND"] = old
+
+
+def test_default_backend_is_xla_and_shares_cache():
+    """The default engine must keep compiling the EXACT pre-kernel
+    program: same lru-cache entry for the 4-arg historical call and the
+    explicit-backend call."""
+    from repro.core.engine_mn import _jitted_step_mn
+    eng = EngineMN(jnp.zeros((8, 2), jnp.float32), n_remotes=2)
+    assert eng.kernel_backend == "xla"
+    assert _jitted_step_mn(eng.subset.name, False, 1, 0) is eng._step
+    assert _jitted_step_mn(eng.subset.name, False, 1, 0, "xla") \
+        is eng._step

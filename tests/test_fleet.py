@@ -1,0 +1,146 @@
+"""Vmapped sim fleets: per-member results must be BIT-identical to solo
+``run_stream`` runs at the fleet's shared step budget, across the two
+sweep families the benches batch (R x W grids, H in {1,2,4} homes), plus
+the FleetConfig validation surface.
+"""
+import numpy as np
+import pytest
+
+from repro.traffic import (EngineConfig, FleetConfig, StreamConfig,
+                           WorkloadSpec, fleet_steps, run_fleet,
+                           run_stream, validate_run)
+
+L = 16
+OPS = 20
+SEED = 9
+
+
+def _members_rw():
+    out = []
+    for r in (2, 4, 6):
+        for w in (1, 2):
+            out.append((EngineConfig(remotes=r, lines=L),
+                        StreamConfig(workload=WorkloadSpec(
+                            "zipfian", ops=OPS, seed=SEED), width=w,
+                            collect_trace=True)))
+    return tuple(out)
+
+
+def _assert_same(fleet_run, solo_run):
+    assert fleet_run.completed and solo_run.completed
+    np.testing.assert_array_equal(fleet_run.msg_count, solo_run.msg_count)
+    assert fleet_run.payload_msgs == solo_run.payload_msgs
+    for f, (a, b) in zip(solo_run.counters._fields,
+                         zip(fleet_run.counters, solo_run.counters)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f)
+    if solo_run.trace is not None:
+        np.testing.assert_array_equal(fleet_run.trace.retire_step,
+                                      solo_run.trace.retire_step)
+
+
+def test_fleet_rw_grid_bit_identical_to_solo():
+    """A 3x2 R x W grid runs as ONE program; every member's counters,
+    message counts and retirement trace equal the solo run's, and the
+    retirement linearizations still replay into the atomic oracle."""
+    fleet = FleetConfig(members=_members_rw())
+    steps = fleet_steps(fleet)
+    runs = run_fleet(fleet)
+    assert len(runs) == 6
+    for (e, s), fr in zip(fleet.members, runs):
+        solo = run_stream(e.build(), StreamConfig(
+            workload=s.workload, width=s.width, steps=steps,
+            collect_trace=True))
+        _assert_same(fr, solo)
+        validate_run(fr)
+
+
+def test_fleet_homes_sweep_bit_identical_to_folded_solo():
+    """H in {1,2,4} (with a per-home bandwidth cap) rides the flat-layout
+    emulation — per-member results equal the real [H, R, L/H] folded
+    engine's, which the solo path runs."""
+    members = tuple(
+        (EngineConfig(remotes=6, lines=L, homes=h, home_bw=1),
+         StreamConfig(workload=WorkloadSpec("zipfian", ops=OPS,
+                                            seed=SEED + 1)))
+        for h in (1, 2, 4))
+    fleet = FleetConfig(members=members)
+    steps = fleet_steps(fleet)
+    for (e, s), fr in zip(members, run_fleet(fleet)):
+        solo = run_stream(e.build(), StreamConfig(workload=s.workload,
+                                                  steps=steps))
+        _assert_same(fr, solo)
+
+
+def test_fleet_mixed_workloads_and_subset():
+    """Members may differ in workload family and seed; the static
+    program shape (subset) stays shared."""
+    members = tuple(
+        (EngineConfig(remotes=4, lines=L, subset="read_only"),
+         StreamConfig(workload=WorkloadSpec(name, ops=OPS, seed=s,
+                                            params={"store_frac": 0.0}
+                                            if name == "zipfian" else ())))
+        for name, s in (("zipfian", 0), ("zipfian", 1)))
+    fleet = FleetConfig(members=members)
+    steps = fleet_steps(fleet)
+    for (e, s), fr in zip(members, run_fleet(fleet)):
+        _assert_same(fr, run_stream(e.build(), StreamConfig(
+            workload=s.workload, steps=steps)))
+
+
+def test_fleet_explicit_steps_budget():
+    fleet = FleetConfig(members=_members_rw()[:2], steps=500)
+    assert fleet_steps(fleet) == 500
+    for fr in run_fleet(fleet):
+        assert int(fr.counters.steps) == 500
+
+
+def test_fleet_config_validation():
+    e = EngineConfig(remotes=2, lines=L)
+    s = StreamConfig(workload=WorkloadSpec("zipfian", ops=OPS))
+    with pytest.raises(ValueError, match="at least one member"):
+        FleetConfig(members=())
+    with pytest.raises(ValueError, match="uniform"):
+        FleetConfig(members=((e, s),
+                             (EngineConfig(remotes=2, lines=2 * L), s)))
+    with pytest.raises(ValueError, match="shared_credits"):
+        FleetConfig(members=((EngineConfig(remotes=2, lines=L,
+                                           shared_credits=True), s),))
+    with pytest.raises(ValueError, match="credits"):
+        FleetConfig(members=((EngineConfig(remotes=2, lines=L, homes=2,
+                                           credits=4), s),))
+    with pytest.raises(ValueError, match="WorkloadSpec"):
+        from repro.traffic import WORKLOADS
+        import jax
+        wl = WORKLOADS["zipfian"](jax.random.key(0), OPS, 2, L)
+        FleetConfig(members=((e, StreamConfig(workload=wl)),))
+    with pytest.raises(ValueError, match="ops must be uniform"):
+        FleetConfig(members=(
+            (e, s), (e, StreamConfig(workload=WorkloadSpec(
+                "zipfian", ops=OPS + 1)))))
+    with pytest.raises(ValueError, match="open-loop"):
+        from repro.traffic import ArrivalSpec
+        FleetConfig(members=((e, StreamConfig(
+            workload=WorkloadSpec("zipfian", ops=OPS),
+            arrivals=ArrivalSpec("at_step0", rate=1.0))),))
+    with pytest.raises(ValueError, match="per-member steps"):
+        FleetConfig(members=((e, StreamConfig(
+            workload=WorkloadSpec("zipfian", ops=OPS), steps=100)),))
+    with pytest.raises(ValueError, match="observability"):
+        from repro.traffic import ObserveConfig
+        FleetConfig(members=((e, StreamConfig(
+            workload=WorkloadSpec("zipfian", ops=OPS),
+            observe=ObserveConfig())),))
+
+
+def test_fleet_pallas_backend_matches_xla_fleet():
+    """kernel_backend is a uniform fleet knob; the pallas fleet's members
+    equal the xla fleet's bit-for-bit."""
+    def mk(backend):
+        return FleetConfig(members=tuple(
+            (EngineConfig(remotes=r, lines=L, kernel_backend=backend),
+             StreamConfig(workload=WorkloadSpec("zipfian", ops=OPS,
+                                                seed=SEED)))
+            for r in (2, 4)))
+    for a, b in zip(run_fleet(mk("xla")), run_fleet(mk("pallas"))):
+        _assert_same(a, b)
