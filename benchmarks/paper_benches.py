@@ -275,34 +275,63 @@ def bench_streaming(remotes=FANOUT_REMOTES, n_lines: int = 32,
     driver (``repro.traffic``) — the paper's "extensive microbenchmarks"
     under overlapping traffic rather than drain-to-quiescence rounds.  The
     max-wait column is the starvation bound the rotating MN arbitration
-    guarantees (fixed-priority arbitration leaves it unbounded); the
-    compile column is the per-R trace+compile of the fused scan."""
-    from repro.core.engine_mn import EngineMN
-    from repro.traffic import WORKLOADS, default_steps, run_stream, summarize
+    guarantees (fixed-priority arbitration leaves it unbounded).
+
+    The full R sweep rides ONE vmapped fleet program
+    (``repro.traffic.fleet``) instead of a per-R trace+compile; per-R
+    counters are read out of the stacked carry and asserted bit-identical
+    to solo runs at the fleet's shared step budget (the solo runs also
+    supply the per-R us/step column — per-member wall time is not
+    separable inside one program — and the per-R compile total the
+    closing amortization row compares against)."""
+    from repro.traffic import (EngineConfig, FleetConfig, StreamConfig,
+                               WorkloadSpec, fleet_steps, run_fleet,
+                               run_stream, summarize)
+    # one stream length for every member: the fleet batches on a shared
+    # [T, R_max] workload plane (narrower members pad with NOP columns).
+    n_ops = ops or 48
+    members = tuple(
+        (EngineConfig(remotes=r, lines=n_lines, block=block),
+         StreamConfig(workload=WorkloadSpec("zipfian", ops=n_ops, seed=0)))
+        for r in remotes)
+    fleet = FleetConfig(members=members)
+    steps = fleet_steps(fleet)
+    t0 = time.perf_counter()
+    runs = run_fleet(fleet)                                  # compile+run
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    runs = run_fleet(fleet)
+    warm = time.perf_counter() - t0
+    fleet_compile = max(cold - warm, 0.0)
     rows: List[Row] = []
-    for n_remotes in remotes:
-        # shrink the per-remote stream as R grows: total work R*ops is
-        # what the step budget (and wall time) scales with.
-        n_ops = ops or (96 if n_remotes <= 16 else 48)
-        eng = EngineMN(jnp.zeros((n_lines, block), jnp.float32),
-                       n_remotes=n_remotes)
-        wl = WORKLOADS["zipfian"](jax.random.key(0), n_ops, n_remotes,
-                                  n_lines)
-        steps = default_steps(n_ops, n_remotes)
+    solo_total = 0.0
+    for (ecfg, scfg), frun in zip(members, runs):
+        solo_cfg = StreamConfig(workload=scfg.workload, steps=steps)
         t0 = time.perf_counter()
-        run_stream(eng, wl, steps=steps)          # warm the fused scan
-        t_compile = time.perf_counter() - t0
+        solo = run_stream(ecfg.build(), solo_cfg)
+        c_solo = time.perf_counter() - t0
         t0 = time.perf_counter()
-        run = run_stream(eng, wl, steps=steps)
+        solo = run_stream(ecfg.build(), solo_cfg)
         dt = time.perf_counter() - t0
-        assert run.completed
-        s = summarize(run.counters, run.msg_count)
-        rows.append((f"stream/zipf_n{n_remotes}", dt * 1e6 / s["steps"],
+        solo_total += max(c_solo - dt, 0.0)
+        assert frun.completed and solo.completed
+        for f, (a, b) in zip(frun.counters._fields,
+                             zip(frun.counters, solo.counters)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                f"fleet member diverged from its solo run ({f})"
+        s = summarize(frun.counters, frun.msg_count)
+        rows.append((f"stream/zipf_n{ecfg.remotes}", dt * 1e6 / s["steps"],
                      f"{s['ops_per_step']:.3f} ops/step sustained; "
                      f"{s['inval_per_excl_grant']:.2f} invals/excl grant; "
                      f"max_wait {max(s['max_wait'])} steps; peak req "
-                     f"occupancy {s['peak_occupancy']['req']}; "
-                     f"compile {t_compile:.2f}s"))
+                     f"occupancy {s['peak_occupancy']['req']}"))
+    rows.append((f"stream/fleet_{len(members)}R", fleet_compile * 1e6,
+                 f"full R sweep as ONE vmapped program: compile "
+                 f"{fleet_compile:.2f}s vs per-R total {solo_total:.2f}s "
+                 f"({solo_total / max(fleet_compile, 1e-9):.1f}x "
+                 f"amortized); warm fleet run {warm:.2f}s for "
+                 f"{len(members)} members x {steps} steps; members "
+                 f"bit-identical to solo"))
     rows.append(("stream/model", 0.0,
                  "sustained ops/step rises with R then SATURATES (~1) as "
                  "hot-line serialization + fan-out eat the extra stream; "

@@ -37,6 +37,16 @@ class AgentState(NamedTuple):
     misses: jnp.ndarray         # [] int32
 
 
+def plane_shape(agents: AgentState) -> tuple:
+    """(R, L) of a batched-agent state: the canonical dense plane shape.
+
+    The engines derive R/L from here rather than from directory/MSHR
+    slabs, whose layout changes under the bit-packed planes
+    (``EngineConfig.packed``) while the agent plane stays dense.
+    """
+    return agents.remote_state.shape[-2:]
+
+
 def make_agent(n_lines: int, block: int, dtype=jnp.float32) -> AgentState:
     return AgentState(
         remote_state=jnp.zeros((n_lines,), jnp.int8),

@@ -213,6 +213,8 @@ class EngineMNState(NamedTuple):
     ch_hreq: tp.Channel          # [R, L] home -> remote downgrades (fan-out)
     ch_hresp: tp.Channel         # [R, L] remote -> home downgrade replies
     hreq_pending: jnp.ndarray    # [R, L] int8: outstanding HOME_DOWNGRADE_*
+    #                              (packed: [2, L, W] uint32 — plane 0 =
+    #                              HD_S pending, plane 1 = HD_I pending)
     txn_msg: jnp.ndarray         # [L] int8: parked request type (NOP = none)
     txn_node: jnp.ndarray        # [L] int32: parked requester id
     arb_rr: jnp.ndarray          # [L] int32: rotating arbitration pointer
@@ -262,8 +264,8 @@ class StepEvents(NamedTuple):
     hd_msg: jnp.ndarray       # [R, L] int8
 
 
-def make_engine_mn_state(backing: jnp.ndarray, n_remotes: int
-                         ) -> EngineMNState:
+def make_engine_mn_state(backing: jnp.ndarray, n_remotes: int,
+                         packed: bool = False) -> EngineMNState:
     L, B = backing.shape
     R = n_remotes
 
@@ -274,11 +276,16 @@ def make_engine_mn_state(backing: jnp.ndarray, n_remotes: int
     agent = ag.make_agent(L, B, backing.dtype)
     agents = ag.AgentState(*(jnp.broadcast_to(a, (R,) + a.shape)
                              for a in agent))
+    # packed: directory view and the home-downgrade MSHR mask live as
+    # [2, L, W] uint32 word planes (hreq_pending plane 0 = HD_S pending,
+    # plane 1 = HD_I pending) instead of dense [R, L] int8.
+    hreq = (jnp.zeros((2, L, dmn.n_words(R)), jnp.uint32) if packed
+            else jnp.zeros((R, L), jnp.int8))
     return EngineMNState(
-        dir=dmn.make_directory_mn(backing, R),
+        dir=dmn.make_directory_mn(backing, R, packed=packed),
         agents=agents,
         ch_req=mk(), ch_resp=mk(), ch_hreq=mk(), ch_hresp=mk(),
-        hreq_pending=jnp.zeros((R, L), jnp.int8),
+        hreq_pending=hreq,
         txn_msg=jnp.zeros((L,), jnp.int8),
         txn_node=jnp.zeros((L,), jnp.int32),
         arb_rr=jnp.zeros((L,), jnp.int32),
@@ -382,7 +389,18 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
         want_write = _f_l(want_write, n_homes)
         wval = _f_l(wval, n_homes)
     nop = jnp.int8(int(MsgType.NOP))
-    R, L = st.hreq_pending.shape[-2:]
+    # R/L come from the (always dense) agent plane: the directory/MSHR
+    # slabs change layout under the bit-packed planes.  ``packed`` is a
+    # trace-time constant — jit keys on avals, so the dense state compiles
+    # the EXACT pre-packing program and the packed state its own.
+    R, L = ag.plane_shape(st.agents)
+    packed = st.hreq_pending.dtype == jnp.uint32
+
+    def _pend_or(hp):
+        # OR of the two pending word planes ([..., 2, L, W] -> [..., L, W]):
+        # "any HOME_DOWNGRADE_* outstanding" per (remote bit, line).
+        return hp[..., 0, :, :] | hp[..., 1, :, :]
+
     msg_count, payload_msgs = st.msg_count, st.payload_msgs
     lines = jnp.arange(L)
     rids = jnp.arange(R)
@@ -414,12 +432,25 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     ch_hresp_in = ch_hresp
     ch_hresp, hr_arr = tp.deliver(ch_hresp, tp.CLASS_REMOTE_RESP, delays,
                                   delay_l=dly_hresp)
-    rep_kind = jnp.where(
-        st.hreq_pending == int(MsgType.HOME_DOWNGRADE_S),
-        jnp.int8(int(MnAbsorb.REPLY_S)), jnp.int8(int(MnAbsorb.REPLY_I)))
+    if packed:
+        # plane 0 of the packed MSHR mask is "HOME_DOWNGRADE_S pending";
+        # absorb reads rep_kind only under hr_arr, and a reply can only
+        # arrive for a sent (= pending) downgrade, so the bit IS the kind.
+        rep_kind = jnp.where(
+            dmn.unpack_mask(st.hreq_pending[..., 0, :, :], R),
+            jnp.int8(int(MnAbsorb.REPLY_S)), jnp.int8(int(MnAbsorb.REPLY_I)))
+    else:
+        rep_kind = jnp.where(
+            st.hreq_pending == int(MsgType.HOME_DOWNGRADE_S),
+            jnp.int8(int(MnAbsorb.REPLY_S)), jnp.int8(int(MnAbsorb.REPLY_I)))
     dstate = dmn.absorb(tables_mn, st.dir, hr_arr, rep_kind,
-                        ch_hresp_in.dirty, ch_hresp_in.payload)
-    hreq_pending = jnp.where(hr_arr, nop, st.hreq_pending)
+                        ch_hresp_in.dirty, ch_hresp_in.payload,
+                        backend=kernel_backend)
+    if packed:
+        hreq_pending = st.hreq_pending & \
+            ~dmn.pack_mask(hr_arr)[..., None, :, :]
+    else:
+        hreq_pending = jnp.where(hr_arr, nop, st.hreq_pending)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, hr_arr,
                                      ch_hresp_in.msg, ch_hresp_in.dirty,
                                      backend=kernel_backend)
@@ -432,7 +463,7 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     dstate = dmn.absorb(
         tables_mn, dstate, pop_vol,
         jnp.full(pop_vol.shape, int(MnAbsorb.VOL_I), jnp.int8),
-        ch_req.dirty, ch_req.payload)
+        ch_req.dirty, ch_req.payload, backend=kernel_backend)
     msg_count, payload_msgs = _count(msg_count, payload_msgs, pop_vol,
                                      ch_req.msg, ch_req.dirty,
                                      backend=kernel_backend)
@@ -446,9 +477,12 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     # fan-out invalidation could cross the previous requester's grant (the
     # delivered response would resurrect a sharer the directory just wrote
     # off).  Per-line serialization, as in the 2-node engine's step 6/7.
-    resp_in_flight = (ch_resp.msg != nop).any(axis=-2)
-    line_free = (st.txn_msg == nop) & \
-        ~(hreq_pending != nop).any(axis=-2) & ~resp_in_flight
+    resp_in_flight = tp.any_in_flight(ch_resp)
+    if packed:
+        pend_any = dmn.any_bits(_pend_or(hreq_pending), kernel_backend)
+    else:
+        pend_any = (hreq_pending != nop).any(axis=-2)
+    line_free = (st.txn_msg == nop) & ~pend_any & ~resp_in_flight
     # The home is arbitration participant R: an outstanding want competes
     # for the line's transaction slot like any remote request, so it
     # bounded-waits under sustained streaming instead of waiting for the
@@ -527,38 +561,72 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
     node_c = jnp.minimum(txn_node, R - 1)
     # an UPGRADE whose requester was concurrently invalidated is doomed to
     # a NACK — suppress its fan-out so the new owner keeps the line.
-    req_view_now = dmn._take_remote(dstate.view, node_c).astype(jnp.int32)
+    req_view_now = dmn.view_of(dstate, node_c)
     doomed = active_txn & (txn_msg == int(MsgType.REQ_UPGRADE)) & \
         (req_view_now != int(RemoteView.S))
-    needed_r = dmn.needed_downgrades(dstate,
-                                     active_txn & ~doomed & ~is_home_txn,
-                                     txn_msg, node_c)
-    # a parked HOME transaction fans out through the SAME machinery: reads
-    # recall a dirty owner to S, writes invalidate every sharer.
-    needed_h = dmn.home_needed_downgrades(dstate, want_read & is_home_txn,
-                                          want_write & is_home_txn)
-    needed = jnp.where(is_home_txn[..., None, :], needed_h, needed_r)
-    send_h = (needed != nop) & (hreq_pending == nop)
+    if packed:
+        # fan-out sets as word planes: recall (HD_S) / invalidate (HD_I)
+        # targets are one AND-NOT-hot each over the presence/exclusive
+        # planes, then widened to the dense [R, L] lane mask the (dense)
+        # transport submit needs.  The planes are per-line disjoint, so
+        # the HD_S-wins combine below matches the dense expression.
+        ns_w, ni_w = dmn.needed_words(
+            dstate, active_txn & ~doomed & ~is_home_txn, txn_msg, node_c,
+            kernel_backend)
+        nsh_w, nih_w = dmn.home_needed_words(
+            dstate, want_read & is_home_txn, want_write & is_home_txn)
+        iht = is_home_txn[..., None]
+        need_s_w = jnp.where(iht, nsh_w, ns_w)
+        need_i_w = jnp.where(iht, nih_w, ni_w)
+        needed = jnp.where(
+            dmn.unpack_mask(need_s_w, R),
+            jnp.int8(int(MsgType.HOME_DOWNGRADE_S)),
+            jnp.where(dmn.unpack_mask(need_i_w, R),
+                      jnp.int8(int(MsgType.HOME_DOWNGRADE_I)), nop))
+        send_h = (needed != nop) & \
+            ~dmn.unpack_mask(_pend_or(hreq_pending), R)
+    else:
+        needed_r = dmn.needed_downgrades(
+            dstate, active_txn & ~doomed & ~is_home_txn, txn_msg, node_c)
+        # a parked HOME transaction fans out through the SAME machinery:
+        # reads recall a dirty owner to S, writes invalidate every sharer.
+        needed_h = dmn.home_needed_downgrades(
+            dstate, want_read & is_home_txn, want_write & is_home_txn)
+        needed = jnp.where(is_home_txn[..., None, :], needed_h, needed_r)
+        send_h = (needed != nop) & (hreq_pending == nop)
     ch_hreq, acc_h = tp.submit(ch_hreq, tp.CLASS_HOME_REQ, send_h, needed,
                                jnp.zeros(send_h.shape, bool),
                                jnp.zeros_like(st.ch_hreq.payload), credits,
                                shared=hreq_shared,
                                backend=kernel_backend)
-    hreq_pending = jnp.where(acc_h, needed, hreq_pending)
+    if packed:
+        # acc_h ⊆ send_h ⊆ pending-free, and every accepted lane sits in
+        # exactly one of the two word planes — OR-in is the masked store.
+        acc_w = dmn.pack_mask(acc_h)
+        hreq_pending = jnp.stack(
+            [hreq_pending[..., 0, :, :] | (acc_w & need_s_w),
+             hreq_pending[..., 1, :, :] | (acc_w & need_i_w)], axis=-3)
+    else:
+        hreq_pending = jnp.where(acc_h, needed, hreq_pending)
 
     # ---- 6. grant parked requests whose preconditions now hold -----------
     in_flight_vol = ((ch_req.msg == int(MsgType.VOL_DOWNGRADE_I)) |
                      (ch_req.msg == int(MsgType.VOL_DOWNGRADE_S))
                      ).any(axis=-2)
-    in_flight_h = (ch_hreq.msg != nop).any(axis=-2) | \
-                  (ch_hresp.msg != nop).any(axis=-2)
+    in_flight_h = tp.any_in_flight(ch_hreq) | tp.any_in_flight(ch_hresp)
     # `needed` must be EMPTY, not merely pending-free: a fan-out submission
     # refused for credit leaves hreq_pending == NOP with the sharer's view
     # intact — granting then would hand out exclusivity while the line is
     # still shared.  (Home transactions complete under the same guard.)
-    complete = active_txn & ~(needed != nop).any(axis=-2) & \
-        ~(hreq_pending != nop).any(axis=-2) & \
-        ~in_flight_vol & ~in_flight_h
+    if packed:
+        complete = active_txn & \
+            ~dmn.any_bits(need_s_w | need_i_w, kernel_backend) & \
+            ~dmn.any_bits(_pend_or(hreq_pending), kernel_backend) & \
+            ~in_flight_vol & ~in_flight_h
+    else:
+        complete = active_txn & ~(needed != nop).any(axis=-2) & \
+            ~(hreq_pending != nop).any(axis=-2) & \
+            ~in_flight_vol & ~in_flight_h
     complete_r = complete & ~is_home_txn
     dstate, resp, resp_pay = dmn.grant(tables_mn, dstate, complete_r,
                                        txn_msg, node_c)
@@ -614,7 +682,11 @@ def step_mn(tables: DenseTables, tables_mn: DenseTablesMN,
                             unbounded=True)
 
     # ---- 9. remotes submit local ops (fresh + parked retries) ------------
-    locked = (hreq_pending != nop) | (ch_hreq.msg != nop)
+    if packed:
+        locked = dmn.unpack_mask(_pend_or(hreq_pending), R) | \
+            (ch_hreq.msg != nop)
+    else:
+        locked = (hreq_pending != nop) | (ch_hreq.msg != nop)
     parked = (agents.pending_op != int(LocalOp.NOP)) & \
              (agents.pending_req == nop)
     eff_op = jnp.where(parked, agents.pending_op, op)
@@ -808,6 +880,16 @@ class EngineMN:
     ("xla" default / "pallas" — see ``KERNEL_BACKENDS``); "" defers to
     the ``REPRO_KERNEL_BACKEND`` environment variable, then "xla".  Both
     backends are BIT-identical (docs/perf.md, "Kernel backends").
+
+    ``packed=True`` stores the directory view and the home-downgrade MSHR
+    mask as ``[2, L, ceil(R/32)]`` uint32 word planes (presence/exclusive
+    bits; HD_S/HD_I pending bits) instead of dense ``[R, L]`` int8 — the
+    sharer reductions become word ops, cutting per-step directory memory
+    traffic up to 32x at R=64 while staying bit-identical on counters,
+    traces and oracle replay (docs/perf.md, "Packed directory planes").
+    The layout is carried by the STATE's dtypes, so the jitted step needs
+    no extra static argument and the dense default keeps the exact
+    pre-packing cached program.
     """
 
     def __init__(self, backing: jnp.ndarray, n_remotes: int,
@@ -817,7 +899,7 @@ class EngineMN:
                  subset: Optional[ProtocolSubset] = None,
                  shared_credits: bool = False,
                  n_homes: int = 1, home_bw: int = 0,
-                 kernel_backend: str = ""):
+                 kernel_backend: str = "", packed: bool = False):
         assert 1 <= n_remotes <= MAX_REMOTES, \
             f"EWF v2 carries 6-bit node ids (n_remotes={n_remotes})"
         self.n_remotes = n_remotes
@@ -837,6 +919,7 @@ class EngineMN:
         self.n_homes = n_homes
         self.home_bw = home_bw
         self.kernel_backend = resolve_kernel_backend(kernel_backend)
+        self.packed = bool(packed)
         self.delays = jnp.asarray(
             delays if delays is not None else tp.DEFAULT_DELAYS)
         self.credits = jnp.asarray(
@@ -866,14 +949,15 @@ class EngineMN:
                    n_remotes=cfg.remotes, moesi=cfg.moesi, subset=subset,
                    credits=credits, shared_credits=cfg.shared_credits,
                    n_homes=cfg.homes, home_bw=cfg.home_bw,
-                   kernel_backend=getattr(cfg, "kernel_backend", ""))
+                   kernel_backend=getattr(cfg, "kernel_backend", ""),
+                   packed=getattr(cfg, "packed", False))
 
     def init(self) -> EngineMNState:
         # fresh copy of the backing: the jitted hot paths DONATE the state,
         # so the first state's buffers must not alias the caller's array
         # (donation would delete it out from under a later init()).
         return make_engine_mn_state(jnp.array(self._backing),
-                                    self.n_remotes)
+                                    self.n_remotes, packed=self.packed)
 
     def step(self, st: EngineMNState, op=None, op_val=None,
              want_read=None, want_write=None, wval=None

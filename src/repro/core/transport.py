@@ -205,6 +205,13 @@ def tick(ch: Channel) -> Channel:
     return ch._replace(age=jnp.where(active, ch.age + 1, ch.age))
 
 
+def any_in_flight(ch: Channel) -> jnp.ndarray:
+    """[..., L] bool — any message in flight per line across the channel's
+    remote axis (the per-line completion/lock reduction the engines run
+    each step; shared by the dense and packed directory layouts)."""
+    return (ch.msg != int(MsgType.NOP)).any(axis=-2)
+
+
 def deliver(ch: Channel, msg_class: int, delays: jnp.ndarray,
             delay_l: jnp.ndarray = None) -> tuple[Channel, jnp.ndarray]:
     """Pop messages whose age has reached their VC's delay.

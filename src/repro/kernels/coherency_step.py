@@ -14,6 +14,11 @@ docs/perf.md), each as a Pallas kernel with its pure-jnp oracle in
   (``core.engine._count``; the former ~45%-of-step scatter).
 * ``lat_hist``     — the retirement-latency histogram fold
   (``traffic.counters.update_counters``).
+* ``packed_any`` / ``packed_fanout`` — the bit-packed directory-plane
+  reductions (``core.directory_mn`` under ``EngineConfig.packed``):
+  per-line any-sharer via popcount over the ``[L, W]`` uint32 word
+  plane, and the recall/invalidate fan-out sets as one AND-NOT-hot per
+  plane.
 
 Everything here is integer/boolean arithmetic, so the contract with the
 refs is BIT-EXACT equality — in interpret mode on CPU (what CI runs) and
@@ -236,3 +241,94 @@ def lat_hist(lat: jnp.ndarray, retired: jnp.ndarray,
         interpret=_interpret() if interpret is None else interpret,
     )(lat2, ret2)
     return out[:R]
+
+
+# ---------------------------------------------------------------------------
+# packed_any
+# ---------------------------------------------------------------------------
+
+
+def _packed_any_kernel(words_ref, out_ref):
+    w = words_ref[:]                                      # [bn, W] uint32
+    cnt = jax.lax.population_count(w).astype(jnp.int32)
+    out_ref[:] = (cnt.sum(-1, keepdims=True) > 0).astype(jnp.int32)
+
+
+def packed_any(words: jnp.ndarray, *, block_rows: int = 256,
+               interpret=None) -> jnp.ndarray:
+    """[..., L] bool — Pallas twin of ``ref.packed_any_ref``: per-line
+    popcount-over-words > 0 on a packed ``[..., L, W]`` uint32 plane."""
+    shape = words.shape
+    W = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    w2 = words.reshape(rows, W)
+    bn = min(block_rows, max(rows, 1))
+    w2, _ = _pad_rows(w2, bn)
+    out = pl.pallas_call(
+        _packed_any_kernel,
+        grid=(w2.shape[0] // bn,),
+        in_specs=[pl.BlockSpec((bn, W), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((bn, 1), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((w2.shape[0], 1), jnp.int32),
+        interpret=_interpret() if interpret is None else interpret,
+    )(w2)
+    return out[:rows, 0].reshape(shape[:-1]) != 0
+
+
+# ---------------------------------------------------------------------------
+# packed_fanout
+# ---------------------------------------------------------------------------
+
+
+def _packed_fanout_kernel(pres_ref, excl_ref, node_ref, sh_ref, ex_ref,
+                          rec_ref, inv_ref, *, W: int):
+    pres = pres_ref[:]                                    # [bn, W] uint32
+    excl = excl_ref[:]
+    node = node_ref[:]                                    # [bn, 1] int32
+    widx = jax.lax.broadcasted_iota(jnp.int32, (pres.shape[0], W), 1)
+    hot = jnp.where(widx == node // 32,
+                    jnp.uint32(1) << (node % 32).astype(jnp.uint32),
+                    jnp.uint32(0))
+    rec_ref[:] = jnp.where(sh_ref[:], excl & ~hot, jnp.uint32(0))
+    inv_ref[:] = jnp.where(ex_ref[:], pres & ~hot, jnp.uint32(0))
+
+
+def packed_fanout(pres: jnp.ndarray, excl: jnp.ndarray,
+                  node: jnp.ndarray, shared_req: jnp.ndarray,
+                  excl_req: jnp.ndarray, *, block_rows: int = 256,
+                  interpret=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(recall_w, inval_w) ``[..., L, W]`` uint32 — Pallas twin of
+    ``ref.packed_fanout_ref`` (the packed directory fan-out sets)."""
+    shape = pres.shape
+    W = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    p2 = pres.reshape(rows, W)
+    e2 = excl.reshape(rows, W)
+    n2 = node.reshape(rows, 1).astype(jnp.int32)
+    s2 = shared_req.reshape(rows, 1)
+    x2 = excl_req.reshape(rows, 1)
+    bn = min(block_rows, max(rows, 1))
+    p2, _ = _pad_rows(p2, bn)
+    e2, _ = _pad_rows(e2, bn)
+    n2, _ = _pad_rows(n2, bn)
+    s2, _ = _pad_rows(s2, bn)
+    x2, _ = _pad_rows(x2, bn)
+    rec, inv = pl.pallas_call(
+        functools.partial(_packed_fanout_kernel, W=W),
+        grid=(p2.shape[0] // bn,),
+        in_specs=[pl.BlockSpec((bn, W), lambda b: (b, 0)),
+                  pl.BlockSpec((bn, W), lambda b: (b, 0)),
+                  pl.BlockSpec((bn, 1), lambda b: (b, 0)),
+                  pl.BlockSpec((bn, 1), lambda b: (b, 0)),
+                  pl.BlockSpec((bn, 1), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((bn, W), lambda b: (b, 0)),
+                   pl.BlockSpec((bn, W), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((p2.shape[0], W), jnp.uint32),
+                   jax.ShapeDtypeStruct((p2.shape[0], W), jnp.uint32)],
+        interpret=_interpret() if interpret is None else interpret,
+    )(p2, e2, n2, s2, x2)
+    return rec[:rows].reshape(shape), inv[:rows].reshape(shape)

@@ -144,3 +144,24 @@ def lat_hist(lat: jnp.ndarray, retired: jnp.ndarray,
     if not use_kernel or lat.shape[-1] == 0:
         return _ref.lat_hist_ref(lat, retired, edges)
     return _coh.lat_hist(lat, retired, tuple(edges), interpret=_interpret())
+
+
+def packed_any(words: jnp.ndarray, *, use_kernel: bool = True
+               ) -> jnp.ndarray:
+    """Per-line any-bit reduction [..., L] bool over a packed [..., L, W]
+    uint32 plane (directory_mn.any_bits)."""
+    if not use_kernel or words.shape[-1] == 0:
+        return _ref.packed_any_ref(words)
+    return _coh.packed_any(words, interpret=_interpret())
+
+
+def packed_fanout(pres: jnp.ndarray, excl: jnp.ndarray, node: jnp.ndarray,
+                  shared_req: jnp.ndarray, excl_req: jnp.ndarray, *,
+                  use_kernel: bool = True
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(recall_w, inval_w) packed fan-out sets (directory_mn.needed_words)."""
+    if not use_kernel or pres.shape[-1] == 0:
+        return _ref.packed_fanout_ref(pres, excl, node, shared_req,
+                                      excl_req)
+    return _coh.packed_fanout(pres, excl, node, shared_req, excl_req,
+                              interpret=_interpret())

@@ -275,6 +275,39 @@ def lat_hist_ref(lat: jnp.ndarray, retired: jnp.ndarray,
     return (onehot & retired[..., None]).sum(axis=1)
 
 
+def packed_any_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """[..., L] bool — any bit set per line of a packed ``[..., L, W]``
+    uint32 plane (``directory_mn.any_bits``: the packed ``no_sharers`` /
+    pending-home-request reductions)."""
+    return (words != 0).any(axis=-1)
+
+
+def packed_fanout_ref(pres: jnp.ndarray, excl: jnp.ndarray,
+                      node: jnp.ndarray, shared_req: jnp.ndarray,
+                      excl_req: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Packed fan-out target sets (``directory_mn.needed_words``).
+
+    ``pres``/``excl`` are the ``[..., L, W]`` presence/exclusive word
+    planes, ``node`` the per-line winning requester id, ``shared_req`` /
+    ``excl_req`` the per-line request-kind masks.  Returns
+    ``(recall_w, inval_w)`` word planes: recall (HOME_DOWNGRADE_S) goes
+    to EM holders other than the requester on a shared read; invalidate
+    (HOME_DOWNGRADE_I) to all non-I holders other than the requester on
+    an exclusive/upgrade request — one AND-NOT-hot per plane instead of
+    an ``[R, L]`` one-hot compare.
+    """
+    W = pres.shape[-1]
+    sel = jnp.arange(W) == (node // 32)[..., None]
+    hot = jnp.where(
+        sel, jnp.uint32(1) << (node % 32).astype(jnp.uint32)[..., None],
+        jnp.uint32(0))
+    recall_w = jnp.where(shared_req[..., None], excl & ~hot,
+                         jnp.uint32(0))
+    inval_w = jnp.where(excl_req[..., None], pres & ~hot, jnp.uint32(0))
+    return recall_w, inval_w
+
+
 # ---------------------------------------------------------------------------
 # rglru_scan: RG-LRU gated linear recurrence (recurrentgemma)
 # ---------------------------------------------------------------------------

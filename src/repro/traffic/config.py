@@ -127,6 +127,7 @@ class EngineConfig:
     homes: int = 1
     home_bw: int = 0
     kernel_backend: str = ""    # ""/"xla"/"pallas"; "" -> env -> "xla"
+    packed: bool = False        # bit-packed directory/MSHR word planes
 
     def __post_init__(self):
         from ..core.engine_mn import KERNEL_BACKENDS, MAX_REMOTES
@@ -259,10 +260,20 @@ class FleetConfig:
 
     ``steps = 0`` auto-derives the shared budget as the max of the
     members' ``driver.default_steps`` — every member retires within it.
+
+    ``mesh_devices > 0`` runs the fleet data-parallel over that many
+    host devices (``shard_map`` over a 1-D "fleet" mesh): members are
+    independent, so per-member results stay bit-identical to the
+    single-device fleet — and to solo runs.  The member axis pads to a
+    device multiple by repeating members (their results are dropped on
+    readout, like PR 9's NOP remote columns).  Use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to expose
+    N host-CPU devices (what CI's multi-device smoke job does).
     """
 
     members: Tuple[Tuple[EngineConfig, StreamConfig], ...] = ()
     steps: int = 0
+    mesh_devices: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "members", tuple(
@@ -272,10 +283,13 @@ class FleetConfig:
         if self.steps < 0:
             raise ValueError(f"steps must be >= 0 (0 = auto), "
                              f"got {self.steps}")
+        if self.mesh_devices < 0:
+            raise ValueError(f"mesh_devices must be >= 0 (0 = single "
+                             f"device), got {self.mesh_devices}")
         e0, s0 = self.members[0]
         for i, (e, s) in enumerate(self.members):
             for f in ("lines", "block", "subset", "moesi", "credits",
-                      "kernel_backend"):
+                      "kernel_backend", "packed"):
                 if getattr(e, f) != getattr(e0, f):
                     raise ValueError(
                         f"fleet member {i}: '{f}' must be uniform across "

@@ -146,7 +146,8 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
                    open_loop: bool = False, admit_cap: int = 0,
                    admit_reserve: int = 0,
                    kernel_backend: str = "xla",
-                   fleet: bool = False):
+                   fleet: bool = False,
+                   mesh_devices: int = 0):
     """One fused streaming program per (subset, trace?, width, credit
     model, home plane, observability, admission, kernel backend) tuple,
     shared across engines; shapes (R, L, T, total steps) retrace inside
@@ -166,7 +167,15 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
     then is the fleet-wide max, slots past the cap never activate),
     ``home_group``/``home_bw_t`` (the engine's flat-layout H-home
     emulation).  A fleet member's body is bit-identical to its solo
-    program at the same step budget."""
+    program at the same step budget.
+
+    ``mesh_devices > 0`` (fleet only) additionally shards the vmapped
+    member axis across that many host devices via ``shard_map`` over a
+    1-D "fleet" mesh — members are data-parallel and fully independent,
+    so each device runs the identical per-member program on its slice
+    and results stay bit-identical to the single-device fleet (gated in
+    ``tests/test_multidevice.py``).  The member axis must be a multiple
+    of ``mesh_devices`` (``run_fleet`` pads by repeating members)."""
     tables_mn = mn_tables(subset_name)
     step_fn = functools.partial(step_mn, tables_mn.base, tables_mn,
                                 hreq_shared=hreq_shared, n_homes=n_homes,
@@ -181,7 +190,9 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
     def run(st, wl_op, wl_line, wl_value, tsteps, delays, credits,
             line_filt=None, type_filt=None, arr_step=None,
             width_cap=None, home_group=None, home_bw_t=None):
-        R, L = st.hreq_pending.shape
+        # the agent plane is dense under every directory layout (packed
+        # states carry [2, L, W] uint32 slabs instead of [R, L] int8).
+        R, L = st.agents.remote_state.shape
         B = st.dir.backing.shape[1]
         T = wl_op.shape[0]
         dt = st.dir.backing.dtype
@@ -393,6 +404,26 @@ def _jitted_stream(subset_name: str, collect_trace: bool, width: int,
         # (validated by FleetConfig) and pass through as None.
         vm = jax.vmap(run, in_axes=(0, 0, 0, 0, None, 0, 0, None, None,
                                     None, 0, 0, 0))
+        if mesh_devices:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+            mesh = Mesh(np.array(jax.devices()[:mesh_devices]),
+                        ("fleet",))
+
+            def sharded(st, wl_op, wl_line, wl_value, tsteps, delays,
+                        credits, width_cap, home_group, home_bw_t):
+                # per-member computation is independent — each device
+                # runs the identical vmapped program over its member
+                # slice, so the output is bit-identical to one device.
+                return vm(st, wl_op, wl_line, wl_value, tsteps, delays,
+                          credits, None, None, None, width_cap,
+                          home_group, home_bw_t)
+
+            fp = P("fleet")
+            fn = shard_map(sharded, mesh=mesh,
+                           in_specs=(fp,) * 4 + (P(),) + (fp,) * 5,
+                           out_specs=fp, check_rep=False)
+            return jax.jit(fn, donate_argnums=0)
         return jax.jit(vm, donate_argnums=0)
     return jax.jit(run, donate_argnums=0)
 

@@ -34,6 +34,14 @@ budget is the max of the members' ``default_steps``, and a solo run you
 compare against must use the same number (counter fields like ``steps``
 count the whole scan).
 
+``FleetConfig.mesh_devices > 0`` shards the member axis across host
+devices (``shard_map`` over a 1-D "fleet" mesh in the driver): members
+are independent, so each device runs the identical vmapped program on
+its slice and per-member results stay bit-identical to the
+single-device fleet.  Ragged member counts pad to a device multiple by
+repeating the last member — the pad rows compute and are dropped on
+readout, exactly like the NOP remote columns.
+
 ``run_fleet`` returns plain per-member ``StreamRun`` records; the
 returned ``state`` is the member's R-max-padded flat engine state (rows
 past the member's real remote count are idle).
@@ -80,6 +88,15 @@ def run_fleet(fleet: FleetConfig) -> List[StreamRun]:
     R_max = max(e.remotes for e, _ in members)
     W_max = max(s.width for _, s in members)
     steps = fleet_steps(fleet)
+    mesh_n = int(fleet.mesh_devices)
+    if mesh_n:
+        avail = len(jax.devices())
+        if mesh_n > avail:
+            raise ValueError(
+                f"mesh_devices={mesh_n} but only {avail} device(s) are "
+                f"visible — on CPU expose more with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{mesh_n} before importing jax")
 
     # materialize + subset-check each member's workload at its own
     # [T, R_m], then pad to the fleet plane with NOP columns.
@@ -108,7 +125,8 @@ def run_fleet(fleet: FleetConfig) -> List[StreamRun]:
     # fresh R-max states (padded remotes start — and stay — idle), plus
     # the per-member traced knobs.
     st = _stack([make_engine_mn_state(
-        jnp.zeros((e.lines, e.block), jnp.float32), R_max)
+        jnp.zeros((e.lines, e.block), jnp.float32), R_max,
+        packed=e0.packed)
         for e, _ in members])
     delays = jnp.stack([eng.delays for eng in engines])
     credits = jnp.stack([eng.credits for eng in engines])
@@ -116,16 +134,37 @@ def run_fleet(fleet: FleetConfig) -> List[StreamRun]:
     home_group = jnp.asarray([e.homes for e, _ in members], jnp.int32)
     home_bw_t = jnp.asarray([e.home_bw for e, _ in members], jnp.int32)
 
+    n_real = len(members)
+    if mesh_n and n_real % mesh_n:
+        # pad the member axis to a device multiple by repeating the last
+        # member; pad rows compute independently and are never read back.
+        pad = mesh_n - n_real % mesh_n
+        rep = lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])])
+        st = jax.tree_util.tree_map(rep, st)
+        wl_op, wl_line, wl_value = rep(wl_op), rep(wl_line), rep(wl_value)
+        delays, credits = rep(delays), rep(credits)
+        width_cap, home_group = rep(width_cap), rep(home_group)
+        home_bw_t = rep(home_bw_t)
+
     # the multi-home plane is EMULATED (home_group), so the program keys
     # on the flat layout; shared_credits/obs/open-loop are out of fleet
     # scope by FleetConfig validation.
     fn = _jitted_stream(engines[0].subset.name, s0.collect_trace, W_max,
                         False, 1, 0, None, False, 0, 0,
-                        engines[0].kernel_backend, True)
-    carry, completed = fn(st, wl_op, wl_line, wl_value,
-                          jnp.arange(steps, dtype=jnp.int32),
-                          delays, credits, None, None, None,
-                          width_cap, home_group, home_bw_t)
+                        engines[0].kernel_backend, True, mesh_n)
+    if mesh_n:
+        # the sharded entry point takes no filter/arrival operands (they
+        # are out of fleet scope and shard_map specs cover real args).
+        carry, completed = fn(st, wl_op, wl_line, wl_value,
+                              jnp.arange(steps, dtype=jnp.int32),
+                              delays, credits,
+                              width_cap, home_group, home_bw_t)
+    else:
+        carry, completed = fn(st, wl_op, wl_line, wl_value,
+                              jnp.arange(steps, dtype=jnp.int32),
+                              delays, credits, None, None, None,
+                              width_cap, home_group, home_bw_t)
 
     completed = np.asarray(completed)
     retire = np.asarray(carry.retire) if s0.collect_trace else None

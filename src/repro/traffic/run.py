@@ -70,7 +70,8 @@ def build_configs(workload: str, n_remotes: int, n_lines: int, ops: int,
                   shared_credits: bool = False, n_homes: int = 1,
                   home_bw: int = 0, arrivals: str = "", rate: float = 0.1,
                   arrival_seed: int = 0, admit_cap: int = 0,
-                  admit_reserve: int = 0, kernel_backend: str = ""):
+                  admit_reserve: int = 0, kernel_backend: str = "",
+                  packed: bool = False):
     """THE one place loose flags map onto the config dataclasses.
 
     Everything — CLI flags, smoke cases, bench rows — funnels through
@@ -84,7 +85,8 @@ def build_configs(workload: str, n_remotes: int, n_lines: int, ops: int,
                         subset=subset_name, moesi=moesi,
                         credits=int(credits or 0),
                         shared_credits=shared_credits, homes=n_homes,
-                        home_bw=home_bw, kernel_backend=kernel_backend)
+                        home_bw=home_bw, kernel_backend=kernel_backend,
+                        packed=packed)
     params = ()
     if subset_name and \
             int(LocalOp.STORE) not in SUBSETS[subset_name].local_ops:
@@ -169,7 +171,7 @@ def drive(workload: str, n_remotes: int = 4, n_lines: int = 64,
           perfetto_out: str = "", arrivals: str = "", rate: float = 0.1,
           arrival_seed: int = 0, admit_cap: int = 0,
           admit_reserve: int = 0, config_text: str = "",
-          kernel_backend: str = ""):
+          kernel_backend: str = "", packed: bool = False):
     """Flag-style front door: map the loose knobs (or a ``--config`` JSON
     document via ``config_text``, which overrides them) onto the config
     dataclasses and run."""
@@ -183,7 +185,8 @@ def drive(workload: str, n_remotes: int = 4, n_lines: int = 64,
             shared_credits=shared_credits, n_homes=n_homes,
             home_bw=home_bw, arrivals=arrivals, rate=rate,
             arrival_seed=arrival_seed, admit_cap=admit_cap,
-            admit_reserve=admit_reserve, kernel_backend=kernel_backend)
+            admit_reserve=admit_reserve, kernel_backend=kernel_backend,
+            packed=packed)
     return drive_configs(ecfg, scfg, validate=validate, observe=observe,
                          check_specs=check_specs, trace_out=trace_out,
                          perfetto_out=perfetto_out)
@@ -311,6 +314,19 @@ def main() -> None:
                          "as Pallas kernels (bit-identical; interpret "
                          "mode on CPU).  Empty defers to the "
                          "REPRO_KERNEL_BACKEND env var")
+    ap.add_argument("--packed", action="store_true",
+                    help="bit-packed directory planes: store the sharer "
+                         "set and the home-downgrade MSHR mask as "
+                         "[2, L, ceil(R/32)] uint32 word planes instead "
+                         "of dense [R, L] int8 (bit-identical results; "
+                         "up to 32x less per-step directory traffic at "
+                         "R=64 — docs/perf.md)")
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="run the stream as a one-member device-sharded "
+                         "fleet over this many host devices (shard_map; "
+                         "0 = plain single-device run).  On CPU expose "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--config", default="",
                     help="JSON file holding {engine: EngineConfig, "
                          "stream: StreamConfig} — the one config surface "
@@ -384,6 +400,16 @@ def main() -> None:
                  f"space evenly")
     if args.home_bw < 0:
         ap.error("--home-bw must be >= 0")
+    if args.mesh_devices < 0:
+        ap.error("--mesh-devices must be >= 0")
+    if args.mesh_devices and (
+            args.arrivals or args.trace or args.check_specs or
+            args.validate or args.config or args.smoke or
+            args.shared_credits):
+        ap.error("--mesh-devices runs the stream as a fleet member: "
+                 "arrivals/observability/validate/config/smoke/"
+                 "shared-credits are out of fleet scope (run them "
+                 "single-device)")
     from repro.traffic import ARRIVALS
     if args.arrivals and args.arrivals not in ARRIVALS:
         ap.error(f"--arrivals must be one of {sorted(ARRIVALS)}")
@@ -397,6 +423,29 @@ def main() -> None:
         raise SystemExit(smoke(observe=args.trace,
                                check_specs=args.check_specs,
                                artifacts=args.artifacts))
+    if args.mesh_devices:
+        # one-member device-sharded fleet: the same config surface, run
+        # through shard_map (bit-identical to the single-device run —
+        # tests/test_multidevice.py gates it).
+        from repro.traffic import FleetConfig, run_fleet, summarize
+        ecfg, scfg = build_configs(
+            args.workload, args.remotes, args.lines, args.ops, 0,
+            args.seed, not args.mesi, width=args.width,
+            subset_name=args.subset, credits=args.credits or None,
+            n_homes=args.homes, home_bw=args.home_bw,
+            kernel_backend=args.kernel_backend, packed=args.packed)
+        fleet = FleetConfig(members=((ecfg, scfg),), steps=args.steps,
+                            mesh_devices=args.mesh_devices)
+        run = run_fleet(fleet)[0]
+        out = summarize(run.counters, run.msg_count, run.payload_msgs)
+        out["config"] = {"engine": ecfg.to_json_dict(),
+                        "stream": scfg.to_json_dict(),
+                        "mesh_devices": args.mesh_devices}
+        out["completed"] = run.completed
+        print(json.dumps(out, indent=1, default=str))
+        if not run.completed:
+            raise SystemExit("stream did not drain within --steps")
+        return
     config_text = ""
     if args.config:
         with open(args.config) as f:
@@ -414,7 +463,7 @@ def main() -> None:
                 arrivals=args.arrivals, rate=args.rate,
                 arrival_seed=args.arrival_seed, admit_cap=args.admit_cap,
                 admit_reserve=args.admit_reserve, config_text=config_text,
-                kernel_backend=args.kernel_backend)
+                kernel_backend=args.kernel_backend, packed=args.packed)
     if args.artifacts and "config" in out:
         # the full EngineConfig+StreamConfig round-trip, written back so
         # the artifact bundle records exactly what ran (and can be re-run

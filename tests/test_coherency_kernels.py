@@ -171,3 +171,128 @@ def test_default_backend_is_xla_and_shares_cache():
     assert _jitted_step_mn(eng.subset.name, False, 1, 0) is eng._step
     assert _jitted_step_mn(eng.subset.name, False, 1, 0, "xla") \
         is eng._step
+
+
+# ---------------------------------------------------------------------------
+# Packed directory planes: word-level helpers, the two packed kernels,
+# and full packed-vs-dense engine bisimulation against the oracle.
+# ---------------------------------------------------------------------------
+
+from repro.core import directory_mn as dmn  # noqa: E402
+
+
+@pytest.mark.parametrize("R,L", [(8, 16), (33, 8), (64, 32)])
+def test_pack_unpack_roundtrip_and_bit_ops(R, L):
+    rng = np.random.default_rng(SEED + R)
+    mask = jnp.asarray(rng.random((R, L)) < 0.4)
+    words = dmn.pack_mask(mask)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (L, dmn.n_words(R))
+    np.testing.assert_array_equal(np.asarray(dmn.unpack_mask(words, R)),
+                                  np.asarray(mask))
+    if R % 32:
+        # pad bits past R are always zero (popcounts stay honest)
+        np.testing.assert_array_equal(
+            np.asarray(words[..., -1] >> jnp.uint32(R % 32)), 0)
+    node = jnp.asarray(rng.integers(0, R, (L,)).astype(np.int32))
+    got = dmn.get_bit(words, node)
+    want = np.asarray(mask)[np.asarray(node), np.arange(L)]
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # write_bit(set=do, clear=~do) forces lane `node` to `do` exactly
+    do = jnp.asarray(rng.random((L,)) < 0.5)
+    w2 = dmn.write_bit(words, do, ~do, node)
+    ref = np.asarray(mask).copy()
+    ref[np.asarray(node), np.arange(L)] = np.asarray(do)
+    np.testing.assert_array_equal(np.asarray(dmn.unpack_mask(w2, R)), ref)
+
+
+@pytest.mark.parametrize("shape", [(16, 1), (8, 2), (3, 16, 2), (64, 3)])
+def test_packed_any_bit_exact(shape):
+    rng = np.random.default_rng(SEED)
+    w = rng.integers(0, 2 ** 32, shape, dtype=np.uint32)
+    w = np.where(rng.random(shape) < 0.5, w, 0).astype(np.uint32)
+    words = jnp.asarray(w)
+    want = kref.packed_any_ref(words)
+    got = coh.packed_any(words, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(kops.packed_any(words)),
+                                  np.asarray(want))
+
+
+@pytest.mark.parametrize("R,L", [(8, 16), (33, 8), (64, 32)])
+def test_packed_fanout_bit_exact(R, L):
+    rng = np.random.default_rng(SEED + R)
+    W = dmn.n_words(R)
+    pres = jnp.asarray(dmn.pack_mask(jnp.asarray(rng.random((R, L)) < 0.5)))
+    excl = pres & jnp.asarray(
+        dmn.pack_mask(jnp.asarray(rng.random((R, L)) < 0.5)))
+    node = jnp.asarray(rng.integers(0, R, (L,)).astype(np.int32))
+    sh = jnp.asarray(rng.random((L,)) < 0.5)
+    ex = jnp.asarray(rng.random((L,)) < 0.5) & ~sh
+    want = kref.packed_fanout_ref(pres, excl, node, sh, ex)
+    got = coh.packed_fanout(pres, excl, node, sh, ex, interpret=True)
+    for g, w in zip(got, want):
+        assert g.shape == (L, W)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    for g, w in zip(kops.packed_fanout(pres, excl, node, sh, ex), want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_packed_is_optin_and_dense_default_shares_cache():
+    """packed rides the state DTYPE, not a static jit arg: the default
+    (dense) engine and a packed engine share the SAME lru-cached jitted
+    step — the pre-packing cached program is preserved exactly."""
+    from repro.core.engine_mn import _jitted_step_mn
+    assert EngineConfig().packed is False
+    dense = EngineMN(jnp.zeros((8, 2), jnp.float32), n_remotes=2)
+    packed = EngineMN(jnp.zeros((8, 2), jnp.float32), n_remotes=2,
+                      packed=True)
+    assert dense.packed is False and packed.packed is True
+    assert dense._step is packed._step
+    assert _jitted_step_mn(dense.subset.name, False, 1, 0) is dense._step
+    st = packed.init()
+    assert st.hreq_pending.dtype == jnp.uint32
+    assert st.dir.view.dtype == jnp.uint32
+    W = dmn.n_words(2)
+    assert st.dir.view.shape == (2, 8, W)
+    assert st.hreq_pending.shape == (2, 8, W)
+
+
+PACKED_CASES = [(8, 1, True), (33, 2, False), (64, 2, True)]
+
+
+@pytest.mark.parametrize("R,H,moesi", PACKED_CASES)
+def test_packed_stream_bit_identical_and_oracle(R, H, moesi):
+    """Full streaming bisimulation, dense vs packed, across word-count
+    regimes (W=1, ragged W=2, full W=2) and home counts: counters,
+    message counts and retirement traces bit-identical, and the packed
+    run's linearization replays into the MultiNodeRef oracle."""
+    cfg = StreamConfig(workload=WorkloadSpec("zipfian", ops=16, seed=3),
+                       width=2, collect_trace=True)
+    base = dict(remotes=R, lines=16, homes=H, moesi=moesi)
+    a = run_stream(EngineConfig(**base).build(), cfg)
+    b = run_stream(EngineConfig(**base, packed=True).build(), cfg)
+    assert a.completed and b.completed
+    np.testing.assert_array_equal(a.msg_count, b.msg_count)
+    assert a.payload_msgs == b.payload_msgs
+    np.testing.assert_array_equal(a.trace.retire_step, b.trace.retire_step)
+    for f, (x, y) in zip(a.counters._fields, zip(a.counters, b.counters)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f)
+    validate_run(b)
+
+
+def test_packed_pallas_backend_matches_packed_xla():
+    """The packed word kernels dispatch through the same ops contract:
+    a packed pallas engine equals the packed xla engine bit-for-bit."""
+    cfg = StreamConfig(workload=WorkloadSpec("zipfian", ops=16, seed=11),
+                       collect_trace=True)
+    a = run_stream(EngineConfig(remotes=8, lines=16, packed=True).build(),
+                   cfg)
+    b = run_stream(EngineConfig(remotes=8, lines=16, packed=True,
+                                kernel_backend="pallas").build(), cfg)
+    np.testing.assert_array_equal(a.msg_count, b.msg_count)
+    np.testing.assert_array_equal(a.trace.retire_step, b.trace.retire_step)
+    for f, (x, y) in zip(a.counters._fields, zip(a.counters, b.counters)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f)

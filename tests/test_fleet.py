@@ -133,6 +133,37 @@ def test_fleet_config_validation():
             observe=ObserveConfig())),))
 
 
+def test_fleet_mesh_and_packed_validation():
+    e = EngineConfig(remotes=2, lines=L)
+    s = StreamConfig(workload=WorkloadSpec("zipfian", ops=OPS))
+    with pytest.raises(ValueError, match="mesh_devices"):
+        FleetConfig(members=((e, s),), mesh_devices=-1)
+    # packed is a uniform fleet knob like kernel_backend
+    with pytest.raises(ValueError, match="uniform"):
+        FleetConfig(members=((e, s),
+                             (EngineConfig(remotes=2, lines=L,
+                                           packed=True), s)))
+    # asking for more devices than are visible fails eagerly with the
+    # XLA_FLAGS hint (the main test process always sees 1 device)
+    import jax
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        run_fleet(FleetConfig(members=((e, s),), mesh_devices=n + 1))
+
+
+def test_fleet_packed_members_bit_identical_to_dense_fleet():
+    """packed=True members run the same sweep bit-identically — the
+    packed planes ride the fleet's leading member axis unchanged."""
+    def mk(packed):
+        return FleetConfig(members=tuple(
+            (EngineConfig(remotes=r, lines=L, packed=packed),
+             StreamConfig(workload=WorkloadSpec("zipfian", ops=OPS,
+                                                seed=SEED)))
+            for r in (2, 4)))
+    for a, b in zip(run_fleet(mk(False)), run_fleet(mk(True))):
+        _assert_same(a, b)
+
+
 def test_fleet_pallas_backend_matches_xla_fleet():
     """kernel_backend is a uniform fleet knob; the pallas fleet's members
     equal the xla fleet's bit-for-bit."""

@@ -138,6 +138,50 @@ def test_multipod_train_step_2x2x2():
     assert len(r["losses"]) == 3
 
 
+def test_sharded_fleet_bit_identical_to_solo():
+    """``FleetConfig.mesh_devices`` shards the member axis over host
+    devices; every member's counters/msg_count must equal BOTH the
+    single-device fleet's and the solo ``run_stream`` run's, including a
+    ragged member count that pads by repeating the last member."""
+    r = run_sub("""
+        from repro.traffic import (EngineConfig, FleetConfig, StreamConfig,
+                                   WorkloadSpec, fleet_steps, run_fleet,
+                                   run_stream)
+        members = tuple(
+            (EngineConfig(remotes=rm, lines=16),
+             StreamConfig(workload=WorkloadSpec("zipfian", ops=12, seed=5),
+                          width=w))
+            for rm in (4, 6) for w in (1, 2))
+        solo_fleet = run_fleet(FleetConfig(members=members))
+        shard = run_fleet(FleetConfig(members=members, mesh_devices=4))
+        steps = fleet_steps(FleetConfig(members=members))
+        ok = True
+        for (e, s), a, b in zip(members, solo_fleet, shard):
+            solo = run_stream(e.build(), StreamConfig(
+                workload=s.workload, width=s.width, steps=steps))
+            for ref in (a, solo):
+                ok &= bool((np.asarray(ref.counters.retired)
+                            == np.asarray(b.counters.retired)).all())
+                ok &= bool((np.asarray(ref.counters.lat_hist)
+                            == np.asarray(b.counters.lat_hist)).all())
+                ok &= (np.asarray(ref.msg_count)
+                       == np.asarray(b.msg_count)).all().item()
+                ok &= ref.completed == b.completed
+        # ragged: 3 members on 2 devices pads to 4 rows
+        m3 = members[:3]
+        for a, b in zip(run_fleet(FleetConfig(members=m3)),
+                        run_fleet(FleetConfig(members=m3, mesh_devices=2))):
+            ok &= bool((np.asarray(a.counters.retired)
+                        == np.asarray(b.counters.retired)).all())
+            ok &= (np.asarray(a.msg_count)
+                   == np.asarray(b.msg_count)).all().item()
+        result["ok"] = bool(ok)
+        result["n"] = len(shard)
+    """)
+    assert r["ok"], r
+    assert r["n"] == 4
+
+
 def test_multipod_decode_2x2x2():
     r = run_sub("""
         from repro.configs import get_config

@@ -286,6 +286,19 @@ def test_config_json_roundtrip_and_unknown_keys():
         config_from_json('{"stream": {"workload": {"name": "nope"}}}')
 
 
+def test_config_json_roundtrip_packed():
+    """packed survives the JSON round-trip like every other engine knob,
+    and a typo'd packing key is rejected loudly."""
+    ecfg = EngineConfig(remotes=8, lines=16, packed=True)
+    scfg = StreamConfig(workload=WorkloadSpec("zipfian", ops=8))
+    e2, s2 = config_from_json(config_to_json(ecfg, scfg))
+    assert e2.packed is True
+    assert e2.to_json_dict() == ecfg.to_json_dict()
+    assert EngineConfig().packed is False
+    with pytest.raises(ValueError, match="unknown engine config keys"):
+        config_from_json('{"engine": {"packed_planes": true}}')
+
+
 def test_engine_config_build_matches_direct_construction():
     eng = EngineConfig(remotes=R, lines=L, subset="read_only", homes=2,
                        credits=8, shared_credits=True, home_bw=2).build()
@@ -318,3 +331,8 @@ def test_cli_flags_map_onto_dataclasses_once():
     with pytest.raises(ValueError, match="store-free"):
         build_configs("producer_consumer", 4, 16, 8, 0, 1, True,
                       subset_name="read_only")
+    # --packed lands on EngineConfig.packed; the default stays dense
+    ecfg, _ = build_configs("zipfian", 4, 16, 8, 0, 1, True, packed=True)
+    assert ecfg.packed is True
+    ecfg, _ = build_configs("zipfian", 4, 16, 8, 0, 1, True)
+    assert ecfg.packed is False
